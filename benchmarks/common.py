@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: timed runs + CSV row contract.
+
+Every benchmark module exposes ``run() -> list[dict]`` with keys
+``name``, ``us_per_call``, ``derived`` (free-form metric string).
+`benchmarks.run` prints them as CSV. Graph sizes are CPU-scale; the
+benchmarks measure the paper's *algorithmic* quantities (ALS ratios,
+label/communication volumes, Ψ trajectories, parameter sensitivity) —
+wall-clock ratios on 1 CPU core are reported as-is and the
+hardware-projection caveats live in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.graphs import grid_road, scale_free
+from repro.graphs.ranking import betweenness_ranking, degree_ranking
+
+Row = Dict[str, object]
+
+
+def timed(fn: Callable, repeat: int = 1):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def row(name: str, seconds: float, derived: str = "") -> Row:
+    return {"name": name, "us_per_call": round(seconds * 1e6, 1),
+            "derived": derived}
+
+
+def bench_graphs(size: str = "small"):
+    """(name, graph, rank) triples mirroring the paper's two families."""
+    if size == "small":
+        road = grid_road(18, 18, seed=1)
+        sf = scale_free(360, attach=2, seed=1)
+    else:
+        road = grid_road(45, 45, seed=1)
+        sf = scale_free(2000, attach=2, seed=1)
+    return [
+        ("road", road, betweenness_ranking(road, samples=12)),
+        ("scalefree", sf, degree_ranking(sf)),
+    ]

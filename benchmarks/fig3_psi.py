@@ -1,0 +1,20 @@
+"""Fig. 3: Ψ (vertices explored per label) rises sharply for later
+(low-rank) trees — and is far higher on scale-free graphs than roads,
+which drives the PLaNT→DGLL switch point."""
+
+from typing import List
+
+from benchmarks.common import Row, bench_graphs, row
+from repro.core.plant import plant_chl
+
+
+def run() -> List[Row]:
+    out: List[Row] = []
+    for name, g, rank in bench_graphs("small"):
+        _, stats = plant_chl(g, rank, batch=16)
+        psi = stats["psi"]
+        out.append(row(
+            f"fig3/{name}", 0.0,
+            f"psi first={psi[0]:.1f} mid={psi[len(psi)//2]:.1f} "
+            f"last={psi[-1]:.1f} max={max(psi):.1f}"))
+    return out

@@ -1,0 +1,51 @@
+"""Fig. 4: #labels generated when distance-query pruning may use only
+the x highest-ranked hubs (x=0 → rank queries only). Reproduces the
+paper's observation that a few top hubs already collapse the label
+count — the basis of the η=16 Common Label Table (§5.3)."""
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, bench_graphs, row
+from repro.core import labels as lbl
+from repro.core.gll import construct_batch
+from repro.core.plant import plant_batch, _batches
+
+
+def _labels_with_topx(g, rank, x: int) -> int:
+    n = g.n
+    cap = 4 * int(np.sqrt(n)) + 64
+    order = np.argsort(-rank.astype(np.int64), kind="stable")
+    # Common table from the top-x trees (exact labels via PLaNT)
+    hc = lbl.empty(n, max(1, x))
+    if x > 0:
+        roots = jnp.asarray(order[:x].astype(np.int32))
+        tb = plant_batch(jnp.asarray(g.ell_src), jnp.asarray(g.ell_w),
+                         jnp.asarray(rank.astype(np.int32)), roots,
+                         jnp.ones(x, bool))
+        hc, _ = lbl.insert_batch(hc, roots, tb.emit, tb.dist)
+    empty = lbl.empty(n, 1)
+    total = 0
+    for roots, valid in _batches(order, 16):
+        bl = construct_batch(jnp.asarray(g.ell_src),
+                             jnp.asarray(g.ell_w),
+                             jnp.asarray(rank.astype(np.int32)),
+                             jnp.asarray(roots), jnp.asarray(valid),
+                             hc, empty, rank_queries=True)
+        total += int(jnp.sum(bl.emit))
+    return total
+
+
+def run() -> List[Row]:
+    out: List[Row] = []
+    for name, g, rank in bench_graphs("small"):
+        counts = {x: _labels_with_topx(g, rank, x)
+                  for x in (0, 1, 4, 16)}
+        base = counts[0]
+        out.append(row(
+            f"fig4/{name}", 0.0,
+            " ".join(f"x={x}:{c}({100*c/base:.0f}%)"
+                     for x, c in counts.items())))
+    return out

@@ -1,0 +1,25 @@
+"""Fig. 6: Hybrid execution vs switching threshold Ψ_th (q=1 mesh):
+too small → DGLL too early (more cleaning + label broadcast); too
+large → PLaNTing low-yield trees (wasted exploration)."""
+
+from typing import List
+
+from benchmarks.common import Row, bench_graphs, row, timed
+from repro.core.dgll import make_node_mesh
+from repro.core.hybrid import hybrid_chl
+
+
+def run() -> List[Row]:
+    out: List[Row] = []
+    mesh = make_node_mesh(1)
+    for name, g, rank in bench_graphs("small"):
+        for psi in (1.0, 10.0, 100.0, 500.0, 1e9):
+            (tbl, stats), t = timed(
+                lambda p=psi: hybrid_chl(g, rank, mesh=mesh, batch=8,
+                                         eta=8, psi_threshold=p))
+            plant_ss = sum(1 for m in stats["mode"] if "plant" in m)
+            out.append(row(
+                f"fig6/{name}/psith={psi:g}", t,
+                f"plant_supersteps={plant_ss} "
+                f"comm_slots={stats['comm_label_slots']}"))
+    return out

@@ -1,0 +1,70 @@
+"""Fig. 8: strong scaling over q nodes. On this 1-core container real
+speedup is unmeasurable (all host "devices" share one core), so we
+report the two quantities that *determine* scaling and are exact in
+the dry-run sense: per-node work (trees × exploration) and
+communication volume (label slots broadcast), for PLaNT / DGLL /
+Hybrid at q ∈ {1, 2, 4, 8} via subprocess runs with forced device
+counts. PLaNT: comm = 0 at every q (the paper's headline); DGLL: comm
+grows with q·labels; Hybrid: bounded comm."""
+
+import json
+import os
+import subprocess
+import sys
+from typing import List
+
+from benchmarks.common import Row, row
+
+_CHILD = r"""
+import os, json, sys
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=%d --xla_cpu_collective_call_terminate_timeout_seconds=1200 --xla_cpu_collective_call_warn_stuck_timeout_seconds=600")
+import numpy as np
+from repro.core.dgll import make_node_mesh, dgll_chl
+from repro.core.hybrid import hybrid_chl, plant_distributed_chl
+from repro.graphs import scale_free
+from repro.graphs.ranking import degree_ranking
+import time
+g = scale_free(240, attach=2, seed=1)
+rank = degree_ranking(g)
+mesh = make_node_mesh()
+out = {}
+for name, fn in (
+    ("plant", lambda: plant_distributed_chl(g, rank, mesh=mesh, batch=4)),
+    ("dgll", lambda: dgll_chl(g, rank, mesh=mesh, batch=4, beta=8.0)),
+    ("hybrid", lambda: hybrid_chl(g, rank, mesh=mesh, batch=4, eta=8,
+                                  psi_threshold=50.0)),
+):
+    t0 = time.perf_counter()
+    tbl, stats = fn()
+    out[name] = {
+        "t": time.perf_counter() - t0,
+        "comm": stats["comm_label_slots"],
+        "explored": sum(stats["explored"]),
+        "labels": sum(stats["labels"]),
+    }
+print("RESULT" + json.dumps(out))
+"""
+
+
+def run() -> List[Row]:
+    out: List[Row] = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    for q in (1, 2, 4, 8):
+        p = subprocess.run([sys.executable, "-c", _CHILD % q],
+                           capture_output=True, text=True, env=env,
+                           timeout=1200)
+        line = [l for l in p.stdout.splitlines()
+                if l.startswith("RESULT")]
+        if not line:
+            out.append(row(f"fig8/q={q}/FAILED", 0.0,
+                           p.stderr[-200:]))
+            continue
+        res = json.loads(line[0][len("RESULT"):])
+        for algo, st in res.items():
+            out.append(row(
+                f"fig8/{algo}/q={q}", st["t"],
+                f"comm_slots={st['comm']} explored={st['explored']} "
+                f"labels={st['labels']}"))
+    return out

@@ -1,0 +1,27 @@
+"""Fig. 9: average label size vs parallelism. DparaPLL-style (no rank
+queries, no cleaning) ALS explodes as concurrency q grows; the Hybrid
+(= CHL by construction) ALS is flat at the canonical size."""
+
+from typing import List
+
+from benchmarks.common import Row, bench_graphs, row
+from repro.core import labels as lbl
+from repro.core.gll import parapll_chl
+from repro.core.plant import plant_chl
+from repro.core.pll import average_label_size
+
+
+def run() -> List[Row]:
+    out: List[Row] = []
+    for name, g, rank in bench_graphs("small"):
+        chl_tbl, _ = plant_chl(g, rank, batch=8)
+        chl = average_label_size(lbl.to_numpy_sets(chl_tbl))
+        vals = []
+        for q in (1, 4, 16, 64):
+            tbl, _ = parapll_chl(g, rank, batch=q, cap=8 * g.n)
+            vals.append((q, average_label_size(lbl.to_numpy_sets(tbl))))
+        out.append(row(
+            f"fig9/{name}", 0.0,
+            f"CHL(any q)={chl:.1f}; DparaPLL " +
+            " ".join(f"q={q}:{a:.1f}" for q, a in vals)))
+    return out

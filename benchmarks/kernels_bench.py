@@ -1,0 +1,47 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp ref on the
+two hot-spots — correctness-weighted; real perf numbers come from the
+roofline (TPU is the target, CPU interpret mode is an emulation)."""
+
+import numpy as np
+from typing import List
+
+import jax.numpy as jnp
+
+from benchmarks.common import Row, row, timed
+from repro.kernels.label_query import label_query_padded, label_query_ref
+from repro.kernels.minplus import minplus_padded, minplus_ref
+
+
+def run() -> List[Row]:
+    out: List[Row] = []
+    rng = np.random.default_rng(0)
+    B, K, N = 16, 512, 512
+    dist = jnp.asarray(np.where(rng.random((B, K)) < 0.5,
+                                rng.integers(0, 9, (B, K)), np.inf),
+                       jnp.float32)
+    mrank = jnp.asarray(np.where(np.isfinite(dist),
+                                 rng.integers(0, 99, (B, K)), -1),
+                        jnp.int32)
+    w = jnp.asarray(np.where(rng.random((K, N)) < 0.05,
+                             rng.integers(1, 9, (K, N)), np.inf),
+                    jnp.float32)
+    _, t = timed(lambda: minplus_ref(dist, mrank, w)[0]
+                 .block_until_ready(), repeat=3)
+    out.append(row("kernels/minplus/ref_jnp", t, f"B={B} K={K} N={N}"))
+    _, t = timed(lambda: minplus_padded(dist, mrank, w, interpret=True)[0]
+                 .block_until_ready(), repeat=3)
+    out.append(row("kernels/minplus/pallas_interpret", t, "CPU emul"))
+
+    Q, L = 512, 128
+    hu = jnp.asarray(rng.integers(-1, 60, (Q, L)), jnp.int32)
+    du = jnp.asarray(rng.integers(0, 30, (Q, L)), jnp.float32)
+    hv = jnp.asarray(rng.integers(-1, 60, (Q, L)), jnp.int32)
+    dv = jnp.asarray(rng.integers(0, 30, (Q, L)), jnp.float32)
+    _, t = timed(lambda: label_query_ref(hu, du, hv, dv)
+                 .block_until_ready(), repeat=3)
+    out.append(row("kernels/label_query/ref_jnp", t, f"Q={Q} L={L}"))
+    _, t = timed(lambda: label_query_padded(hu, du, hv, dv,
+                                            interpret=True)
+                 .block_until_ready(), repeat=3)
+    out.append(row("kernels/label_query/pallas_interpret", t, "CPU emul"))
+    return out

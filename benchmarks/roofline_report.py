@@ -1,0 +1,42 @@
+"""§Roofline: render the dry-run JSONL into the per-cell table
+(three terms, bottleneck, useful-flops ratio)."""
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row, row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.jsonl")
+
+
+def load(path: str = RESULTS) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("rules", ""))] = r
+    return list(recs.values())
+
+
+def run() -> List[Row]:
+    out: List[Row] = []
+    for r in sorted(load(), key=lambda r: (r["arch"], r["shape"],
+                                           r["mesh"])):
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skip":
+            out.append(row(tag, 0.0, f"SKIP: {r['reason'][:60]}"))
+            continue
+        if r["status"] != "ok":
+            out.append(row(tag, 0.0, f"ERROR: {r.get('error','')[:60]}"))
+            continue
+        rf = r["roofline"]
+        step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        out.append(row(
+            tag, step,
+            f"bottleneck={rf['bottleneck']} "
+            f"c/m/x={rf['compute_s']:.3g}/{rf['memory_s']:.3g}/"
+            f"{rf['collective_s']:.3g}s useful={rf['useful_ratio']:.2f}"))
+    return out

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. Select with --only."""
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "table3_shared",
+    "fig2_labels_per_tree",
+    "fig3_psi",
+    "fig4_common_hubs",
+    "fig5_alpha",
+    "fig6_psith",
+    "fig8_scaling",
+    "fig9_als_vs_q",
+    "table4_query_modes",
+    "kernels_bench",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    mods = args.only or MODULES
+    print("name,us_per_call,derived")
+    failed = 0
+    for m in mods:
+        try:
+            mod = importlib.import_module(f"benchmarks.{m}")
+            for r in mod.run():
+                d = str(r.get("derived", "")).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']},{d}")
+            sys.stdout.flush()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{m},0,MODULE_FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

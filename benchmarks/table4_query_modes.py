@@ -1,0 +1,80 @@
+"""Table 4: query-mode throughput + memory (QLSN / QFDL / QDOL) on an
+8-device subprocess mesh. Memory = label bytes per node & total;
+throughput = batched queries/s (1-core caveat in EXPERIMENTS.md)."""
+
+import json
+import os
+import subprocess
+import sys
+from typing import List
+
+from benchmarks.common import Row, row
+
+_CHILD = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 --xla_cpu_collective_call_terminate_timeout_seconds=1200 --xla_cpu_collective_call_warn_stuck_timeout_seconds=600")
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import labels as lbl
+from repro.core.dgll import make_node_mesh
+from repro.core.hybrid import hybrid_chl
+from repro.core.query import (qdol_build, qdol_fn, qdol_layout, qfdl_fn,
+                              qlsn, label_memory_bytes)
+from repro.graphs import scale_free
+from repro.graphs.ranking import degree_ranking
+g = scale_free(240, attach=2, seed=2)
+rank = degree_ranking(g)
+mesh = make_node_mesh(8)
+tbl, stats = hybrid_chl(g, rank, mesh=mesh, batch=4, eta=8,
+                        psi_threshold=50.0)
+part = stats["partitioned"]
+rng = np.random.default_rng(0)
+Q = 1024
+u = jnp.asarray(rng.integers(0, g.n, Q).astype(np.int32))
+v = jnp.asarray(rng.integers(0, g.n, Q).astype(np.int32))
+base = label_memory_bytes(tbl)
+out = {"base_bytes": base, "n": g.n, "Q": Q}
+def t(fn):
+    fn().block_until_ready(); t0=time.perf_counter()
+    for _ in range(2): r = fn()
+    r.block_until_ready(); return (time.perf_counter()-t0)/2
+out["qlsn_s"] = t(lambda: qlsn(tbl, u, v))
+out["qlsn_bytes_per_node"] = base
+f = qfdl_fn(mesh)
+out["qfdl_s"] = t(lambda: f(part, u, v))
+out["qfdl_bytes_per_node"] = base // 8
+layout = qdol_layout(g.n, 8)
+store = qdol_build(tbl, layout, mesh)
+fq = qdol_fn(mesh, layout)
+out["qdol_s"] = t(lambda: fq(store, u, v))
+out["qdol_bytes_per_node"] = 2 * base // layout.zeta
+out["zeta"] = layout.zeta
+# answers agree
+a = np.asarray(qlsn(tbl, u, v)); b = np.asarray(f(part, u, v))
+c = np.asarray(fq(store, u, v))
+assert np.array_equal(a, b) and np.array_equal(a, c)
+print("RESULT" + json.dumps(out))
+"""
+
+
+def run() -> List[Row]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    p = subprocess.run([sys.executable, "-c", _CHILD],
+                       capture_output=True, text=True, env=env,
+                       timeout=2700)
+    line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")]
+    if not line:
+        return [row("table4/FAILED", 0.0, p.stderr[-200:])]
+    res = json.loads(line[0][len("RESULT"):])
+    Q = res["Q"]
+    out: List[Row] = []
+    for mode in ("qlsn", "qfdl", "qdol"):
+        s = res[f"{mode}_s"]
+        out.append(row(
+            f"table4/{mode}", s / Q,
+            f"throughput={Q/s:,.0f} q/s "
+            f"bytes/node={res[f'{mode}_bytes_per_node']:,}"
+            + (f" zeta={res['zeta']}" if mode == "qdol" else "")))
+    return out

@@ -1,0 +1,20 @@
+"""Batched LM serving (prefill + sampled decode with KV caches).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch xlstm_125m]
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "32", "--gen", "48"])
+
+
+if __name__ == "__main__":
+    main()

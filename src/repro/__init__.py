@@ -1,0 +1,21 @@
+"""repro — a JAX framework reproducing and extending
+
+    "Planting Trees for scalable and efficient Canonical Hub Labeling"
+    (Lakhotia, Dong, Kannan, Prasanna — CS.DC 2019)
+
+Layers
+------
+- ``repro.graphs``   graph substrate (ELL/CSR, generators, ranking)
+- ``repro.sssp``     batched lexicographic Bellman–Ford + Dijkstra oracle
+- ``repro.core``     the paper's algorithms: PLL, LCC, GLL, DGLL, PLaNT,
+                     Hybrid, and the QLSN/QFDL/QDOL query modes
+- ``repro.kernels``  Pallas TPU kernels (minplus relaxation, label query)
+- ``repro.models``   the assigned LM architecture zoo
+- ``repro.parallel`` mesh + sharding-rule resolver + FSDP
+- ``repro.train`` / ``repro.serve`` / ``repro.optim`` / ``repro.data``
+- ``repro.checkpoint`` / ``repro.ft``  fault tolerance
+- ``repro.launch``   mesh/dryrun/train/serve entry points
+- ``repro.roofline`` compiled-artifact roofline analysis
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,128 @@
+"""Fault-tolerant checkpointing: atomic, step-tagged, async-capable,
+retention-managed, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}
+Atomicity: written to ``<dir>/.tmp_<N>`` then ``os.replace``d — a
+crash mid-save never corrupts the latest checkpoint (restart picks the
+newest complete step). ``data_state`` (the pipeline cursor) travels
+with the model state so restarts are exactly-once over the data
+stream. On restore, arrays are ``device_put`` against *caller-supplied
+shardings*, which is also the elastic-rescale path (`repro.ft`): the
+same checkpoint restores onto a different mesh.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return items, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------ save
+
+    def save(self, step: int, state: Any,
+             data_state: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        self.wait()          # at most one save in flight, ever
+        items, _ = _flatten(state)
+        host = [(k, np.asarray(v)) for k, v in items]
+        if blocking:
+            self._write(step, host, data_state)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, data_state))
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host, data_state) -> None:
+        tmp = os.path.join(self.dir, f".tmp_{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        # bf16/fp8 are not native numpy dtypes: store via exact f32
+        # upcast; restore casts back to the template dtype.
+        def enc(v: np.ndarray) -> np.ndarray:
+            if v.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                "float8_e5m2", "float16"):
+                return v.astype(np.float32)
+            return v
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: enc(v) for k, v in host})
+        manifest = {
+            "step": step,
+            "keys": [k for k, _ in host],
+            "data_state": data_state or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------- restore
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None
+                ) -> Tuple[Any, int, Dict]:
+        """Restore into the structure of ``template``; place leaves per
+        ``shardings`` (same treedef) when given — the re-mesh path."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrs = np.load(os.path.join(path, "arrays.npz"))
+        items, treedef = _flatten(template)
+        sh_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: x is None)
+            if shardings is not None else [None] * len(items))
+        leaves = []
+        for (key, tmpl), sh in zip(items, sh_leaves):
+            a = jax.numpy.asarray(arrs[key])
+            if hasattr(tmpl, "dtype") and a.dtype != tmpl.dtype:
+                a = a.astype(tmpl.dtype)
+            if sh is not None:
+                leaves.append(jax.device_put(a, sh))
+            else:
+                leaves.append(a)
+        state = jax.tree_util.tree_unflatten(treedef, leaves)
+        return state, manifest["step"], manifest.get("data_state", {})

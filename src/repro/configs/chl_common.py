@@ -1,0 +1,23 @@
+"""The paper's own workload as a dry-run config: one distributed PLaNT
+(and one DGLL) superstep lowered on the production mesh.
+
+Graph arrays are ShapeDtypeStructs (ELL layout); per-cluster-node state
+is the hub-partitioned label table. `q` = number of CHL "nodes" = all
+devices of the mesh flattened (paper §5: every node runs trees
+independently; the mesh's model axis contributes batched-tree
+parallelism *within* a node in the LM mapping, and extra nodes here)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChlConfig:
+    name: str
+    n: int                  # vertices
+    max_deg: int            # ELL width (degree-capped; hub-split note
+    #                         in DESIGN.md for heavy-tailed graphs)
+    batch: int              # trees per node per batch
+    trees_per_node: int     # superstep size T
+    cap: int                # per-node label capacity per vertex
+    hc_cap: int             # common-label-table capacity
+    compact: int = 4096     # §Perf-2 compact-broadcast budget/tree

@@ -1,0 +1,23 @@
+"""smollm-360m [dense; hf:HuggingFaceTB/SmolLM-360M]: 32L d_model=960
+15H (GQA kv=5) d_ff=2560 vocab=49152. 15 heads do NOT divide the
+16-way TP axis — the resolver replicates heads and shards head_dim
+(64 → 4/chip), exercising the divisibility-fallback path."""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, FULL_ATTENTION_SKIP
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="decoder",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+    d_ff=2560, vocab=49152,
+    act="swiglu", norm="rmsnorm",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=60, n_heads=3, n_kv_heads=1,
+    d_ff=128, vocab=256)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE,
+                skip_shapes={"long_500k": FULL_ATTENTION_SKIP})

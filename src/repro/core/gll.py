@@ -1,0 +1,185 @@
+"""LCC and GLL — optimistic parallel CHL construction + cleaning (§4).
+
+Shared-memory mapping (DESIGN.md §2 A4): the paper's ``p`` concurrent
+threads popping rank-ordered roots become a vmapped *batch* of ``B``
+trees per step. Trees inside a batch cannot see each other's labels —
+exactly the paper's optimistic mistakes — and the interleaved cleaning
+(DQ_Clean) removes every redundant label, yielding the CHL.
+
+- LCC  = construct everything, clean once at the end (§4.1).
+- GLL  = clean whenever the *local* table exceeds ``α·n`` labels, then
+  commit to the *global* table (§4.2). Construction-time distance
+  queries consult global ∪ local (footnote 4); cleaning probes only the
+  superstep's own labels (the paper's repeated-work optimization).
+- ``plant_first_superstep`` reproduces the paper's §7.2 suggestion:
+  PLaNT the first superstep (no pruning labels exist yet anyway).
+
+The construction/cleaning correctness argument under batching —
+including why optimistically emitted labels can carry inflated
+distances and why DQ_Clean provably removes exactly the non-canonical
+ones — is spelled out in DESIGN.md §2 A3.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as lbl
+from repro.core.labels import LabelTable
+from repro.core.plant import plant_batch, _batches
+from repro.sssp import relax
+
+Array = jax.Array
+
+
+class BatchLabels(NamedTuple):
+    roots: Array   # i32 [B]
+    emit: Array    # bool [B, n]
+    dist: Array    # f32 [B, n]
+
+
+@functools.partial(jax.jit, static_argnames=("rank_queries",))
+def construct_batch(ell_src: Array, ell_w: Array, rank: Array,
+                    roots: Array, valid: Array,
+                    glob: LabelTable, loc: LabelTable,
+                    rank_queries: bool = True) -> BatchLabels:
+    """One batch of pruned trees (LCC-I / paraPLL inner step).
+
+    Blocking = [rank query] ∨ distance query vs (global ∪ local)
+    committed tables; emission = reached ∧ unblocked at fixpoint.
+    """
+    hmap_g = lbl.hub_distance_map(glob, roots)
+    hmap_l = lbl.hub_distance_map(loc, roots)
+    cover = jnp.minimum(lbl.cover_distance(glob, hmap_g),
+                        lbl.cover_distance(loc, hmap_l))    # [B, n]
+
+    def dq_block(dist: Array, roots_: Array) -> Array:
+        return cover <= dist
+
+    fns = [dq_block]
+    if rank_queries:
+        fns.append(relax.rank_block(rank))
+    block_fn = relax.combine_blocks(*fns)
+
+    st = relax.batched_sssp_maxrank(ell_src, ell_w, rank, roots,
+                                    block_fn=block_fn)
+    emit = jnp.isfinite(st.dist) & ~(cover <= st.dist)
+    if rank_queries:
+        emit &= rank[None, :] <= rank[roots][:, None]
+    # roots always label themselves
+    B = roots.shape[0]
+    emit = emit.at[jnp.arange(B), roots].set(True)
+    emit &= valid[:, None]
+    return BatchLabels(roots=roots, emit=emit, dist=st.dist)
+
+
+@jax.jit
+def clean_superstep(glob: LabelTable, loc: LabelTable, rank: Array,
+                    batches_roots: Array, batches_emit: Array,
+                    batches_dist: Array) -> Array:
+    """DQ_Clean for every label emitted this superstep.
+
+    Args are the stacked superstep emissions ``[T, n]`` (T = #roots this
+    superstep). A label (h→v, δ) is redundant iff the best-rank common
+    hub w of L_v and L_h with d(v,w)+d(h,w) ≤ δ outranks h
+    (Alg. 2 lines 12–16). Probes global ∪ local (both contain exact
+    distances for every canonical label at this point).
+
+    Returns ``redundant [T, n]`` bool.
+    """
+    roots, emit, dist = batches_roots, batches_emit, batches_dist
+    delta = jnp.where(emit, dist, -jnp.inf)      # never matches when ~emit
+    hg = lbl.hub_distance_map(glob, roots)
+    hl = lbl.hub_distance_map(loc, roots)
+    best = jnp.maximum(
+        lbl.cover_best_rank(glob, hg, rank, delta),
+        lbl.cover_best_rank(loc, hl, rank, delta))
+    return emit & (best > rank[roots][:, None])
+
+
+def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
+            alpha: Optional[float] = 4.0, cap: Optional[int] = None,
+            rank_queries: bool = True, clean: bool = True,
+            plant_first_superstep: bool = False,
+            ) -> Tuple[LabelTable, dict]:
+    """GLL (α finite), LCC (``alpha=None`` → clean once at end), or the
+    paraPLL baseline (``rank_queries=False, clean=False``).
+
+    Returns (global label table, stats).
+    """
+    n = g.n
+    cap = cap or max(16, 4 * int(np.sqrt(n)) + 32)
+    order = np.argsort(-rank.astype(np.int64), kind="stable")
+    ell_src = jnp.asarray(g.ell_src)
+    ell_w = jnp.asarray(g.ell_w)
+    rank_d = jnp.asarray(rank.astype(np.int32))
+    glob = lbl.empty(n, cap)
+    loc = lbl.empty(n, cap)
+    pending: List[BatchLabels] = []
+    local_labels = 0
+    threshold = np.inf if alpha is None else alpha * n
+    stats = {"supersteps": 0, "cleaned": 0, "constructed": 0,
+             "superstep_sizes": []}
+    overflow = False
+
+    def flush():
+        nonlocal glob, loc, pending, local_labels, overflow
+        if not pending:
+            return
+        roots = jnp.concatenate([b.roots for b in pending])
+        emit = jnp.concatenate([b.emit for b in pending])
+        dist = jnp.concatenate([b.dist for b in pending])
+        if clean:
+            red = clean_superstep(glob, loc, rank_d, roots, emit, dist)
+            stats["cleaned"] += int(jnp.sum(red))
+            emit = emit & ~red
+        glob, ovf = lbl.insert_batch(glob, roots, emit, dist)
+        overflow |= bool(ovf)
+        stats["supersteps"] += 1
+        stats["superstep_sizes"].append(int(roots.shape[0]))
+        loc = lbl.empty(n, cap)
+        pending = []
+        local_labels = 0
+
+    first = True
+    for roots, valid in _batches(order, batch):
+        roots_d, valid_d = jnp.asarray(roots), jnp.asarray(valid)
+        if first and plant_first_superstep:
+            tb = plant_batch(ell_src, ell_w, rank_d, roots_d, valid_d)
+            bl = BatchLabels(roots=roots_d, emit=tb.emit, dist=tb.dist)
+        else:
+            bl = construct_batch(ell_src, ell_w, rank_d, roots_d, valid_d,
+                                 glob, loc, rank_queries=rank_queries)
+        first = False
+        loc, ovf = lbl.insert_batch(loc, roots_d, bl.emit, bl.dist)
+        overflow |= bool(ovf)
+        pending.append(bl)
+        nl = int(jnp.sum(bl.emit))
+        local_labels += nl
+        stats["constructed"] += nl
+        if local_labels >= threshold:
+            flush()
+    flush()
+    if overflow:
+        raise RuntimeError(f"label table overflow (cap={cap})")
+    return glob, stats
+
+
+def lcc_chl(g, rank: np.ndarray, *, batch: int = 8,
+            cap: Optional[int] = None) -> Tuple[LabelTable, dict]:
+    """LCC (§4.1): construct everything, one cleaning pass at the end."""
+    return gll_chl(g, rank, batch=batch, alpha=None, cap=cap)
+
+
+def parapll_chl(g, rank: np.ndarray, *, batch: int = 8,
+                cap: Optional[int] = None) -> Tuple[LabelTable, dict]:
+    """SparaPLL-style baseline [19]: concurrent pruned trees with root-
+    label hashing, **no rank queries, no cleaning** — satisfies cover
+    but not minimality (redundant labels grow with ``batch``)."""
+    return gll_chl(g, rank, batch=batch, alpha=None, cap=cap,
+                   rank_queries=False, clean=False)

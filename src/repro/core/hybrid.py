@@ -1,0 +1,211 @@
+"""Hybrid PLaNT + DGLL (§5.2.1) — the paper's flagship algorithm.
+
+Host-level superstep driver shared by PLaNT / DGLL / Hybrid:
+
+- phase 0 (η > 0): the top-η trees are PLaNTed and their labels form
+  the replicated **Common Label Table** (§5.3). Beyond-paper twist: we
+  *recompute* the η trees on every node instead of broadcasting their
+  labels — PLaNT trees depend on nothing, so replication costs zero
+  communication (η extra tree constructions amortized over the run).
+- phase 1: PLaNT supersteps (HC-pruned) while ``Ψ ≤ Ψ_th``; labels are
+  canonical on emission — no gather, no cleaning.
+- phase 2: once ``Ψ > Ψ_th`` (exploration per label too high), switch
+  to DGLL supersteps — heavy pruning, broadcast + distributed cleaning.
+- superstep sizes grow geometrically by ``β`` (§5.1).
+
+``psi_threshold=inf`` → pure PLaNT; ``psi_threshold=0`` → pure DGLL.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import labels as lbl
+from repro.core.labels import LabelTable
+from repro.core import dgll as dist
+from repro.core.plant import plant_batch
+
+__all__ = ["run_distributed", "hybrid_chl", "plant_distributed_chl",
+           "auto_psi_threshold"]
+
+
+def _build_common_table(g, rank: np.ndarray, eta_roots: np.ndarray,
+                        hc_cap: int) -> LabelTable:
+    """Replicated Common Label Table from the top-η PLaNTed trees."""
+    n = g.n
+    hc = lbl.empty(n, hc_cap)
+    roots = jnp.asarray(eta_roots.astype(np.int32))
+    valid = jnp.ones(len(eta_roots), dtype=bool)
+    tb = plant_batch(jnp.asarray(g.ell_src), jnp.asarray(g.ell_w),
+                     jnp.asarray(rank.astype(np.int32)), roots, valid)
+    hc, ovf = lbl.insert_batch(hc, roots, tb.emit, tb.dist)
+    if bool(ovf):
+        raise RuntimeError("common label table overflow; raise hc_cap")
+    return hc
+
+
+def auto_psi_threshold(q: int, gamma: float = 12.0) -> float:
+    """Ψ_th as a function of cluster size (the paper's §8 future work:
+    "make … the switching point from PLaNT to DGLL a function of both
+    q and Ψ").
+
+    Cost model: a PLaNTed tree costs Ψ explored-vertex relaxations per
+    label with zero communication; a DGLL tree costs ~O(1) pruned
+    relaxations per label plus a broadcast+cleaning share in which
+    *every* node answers every query — growing with q. Equating the
+    two gives a switch point linear in q: Ψ_th = γ·q (γ calibrated on
+    the Fig. 6 sweeps, where road/scale-free optima cross at
+    γ ≈ 10–15 for q ∈ {1..8})."""
+    return gamma * max(1, q)
+
+
+def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
+                    batch: int = 4, beta: float = 8.0,
+                    first_superstep: int = 1, cap: Optional[int] = None,
+                    eta: int = 0, hc_cap: int = 64,
+                    psi_threshold: Optional[float] = 100.0,
+                    compact: int = 0,
+                    ) -> Tuple[LabelTable, dict]:
+    """Distributed CHL construction. Returns (merged table, stats).
+
+    ``psi_threshold=None`` → auto (scales with cluster size q)."""
+    mesh = mesh or dist.make_node_mesh()
+    q = int(mesh.devices.size)
+    if psi_threshold is None:
+        psi_threshold = auto_psi_threshold(q)
+    n = g.n
+    cap = cap or max(16, 4 * int(np.sqrt(n)) + 32)
+    queues = dist.assign_roots(rank, q)          # [q, per]
+    per = queues.shape[1]
+    state = dist.init_dist_state(mesh, n, cap, hc_cap if eta else 1)
+    rank_d = jnp.asarray(rank.astype(np.int32))
+    ell_src = jnp.asarray(g.ell_src)
+    ell_w = jnp.asarray(g.ell_w)
+    rep = NamedSharding(mesh, P())
+    node_sh = NamedSharding(mesh, P("node"))
+
+    stats = {"supersteps": [], "mode": [], "labels": [], "explored": [],
+             "psi": [], "comm_label_slots": 0, "q": q,
+             "psi_threshold": psi_threshold}
+    table, hc = state.table, state.hc
+    pos = 0
+    plant_mode = psi_threshold > 0.0
+
+    # ---- phase 0: Common Label Table from top-η hubs -----------------
+    if eta > 0:
+        k0 = -(-eta // q)                        # trees per node
+        eta_eff = min(k0 * q, n)
+        order = np.argsort(-rank.astype(np.int64), kind="stable")
+        hc = _build_common_table(g, rank, order[:eta_eff], hc_cap)
+        hc = LabelTable(*(jax.device_put(x, rep) for x in hc))
+        # those trees' labels also enter the owners' partitions
+        step_fn = dist.dgll_superstep_fn(mesh, n, batch=k0, use_hc=False,
+                                         plant_trees=True)
+        roots = _pad_step(queues, pos, k0, batch=k0)
+        out = step_fn(table, hc, rank_d,
+                      jax.device_put(jnp.asarray(roots), node_sh),
+                      jax.device_put(jnp.asarray(roots >= 0), node_sh),
+                      ell_src, ell_w)
+        table = out.table
+        _record(stats, "plant-hc", out)
+        pos += k0
+
+    plant_fn = dgll_fn = None
+    size = first_superstep
+    overflowed = False
+    while pos < per:
+        T = min(size, per - pos)
+        T = -(-T // batch) * batch               # multiple of batch
+        roots = _pad_step(queues, pos, T, batch=batch)
+        roots_d = jax.device_put(jnp.asarray(roots), node_sh)
+        valid_d = jax.device_put(jnp.asarray(roots >= 0), node_sh)
+        if plant_mode:
+            if plant_fn is None or plant_fn[0] != T:
+                plant_fn = (T, dist.dgll_superstep_fn(
+                    mesh, n, batch=batch, use_hc=eta > 0,
+                    plant_trees=True))
+            out = plant_fn[1](table, hc, rank_d, roots_d, valid_d,
+                              ell_src, ell_w)
+            mode = "plant"
+        else:
+            if dgll_fn is None or dgll_fn[0] != T:
+                dgll_fn = (T, dist.dgll_superstep_fn(
+                    mesh, n, batch=batch, use_hc=eta > 0,
+                    plant_trees=False, compact=compact))
+            out = dgll_fn[1](table, hc, rank_d, roots_d, valid_d,
+                             ell_src, ell_w)
+            mode = "dgll"
+            slots = q * T * min(compact, n) if compact else q * T * n
+            if compact and bool(jnp.any(out.compact_overflow)):
+                # §Perf-2 fallback: budget too small for this
+                # superstep's label yield → redo densely (correctness
+                # over speed; rare once DGLL mode starts — Fig. 2)
+                if dgll_fn is None or dgll_fn[0] != T or True:
+                    dense_fn = dist.dgll_superstep_fn(
+                        mesh, n, batch=batch, use_hc=eta > 0,
+                        plant_trees=False, compact=0)
+                out = dense_fn(table, hc, rank_d, roots_d, valid_d,
+                               ell_src, ell_w)
+                mode = "dgll-dense-fallback"
+                slots = q * T * n
+            stats["comm_label_slots"] += slots
+        table = out.table
+        overflowed |= bool(jnp.any(out.overflow))
+        psi = _record(stats, mode, out)
+        if plant_mode and psi > psi_threshold:
+            plant_mode = False               # Ψ too high → switch (§5.2.1)
+        pos += T
+        size = int(size * beta)
+    if overflowed:
+        raise RuntimeError(f"label table overflow (cap={cap})")
+
+    merged = dist.merge_partitions(table)
+    stats["partitioned"] = table
+    stats["hc"] = hc
+    return merged, stats
+
+
+def _pad_step(queues: np.ndarray, pos: int, T: int, batch: int
+              ) -> np.ndarray:
+    q, per = queues.shape
+    out = np.full((q, T), -1, dtype=np.int32)
+    take = min(T, per - pos)
+    out[:, :take] = queues[:, pos:pos + take]
+    return out
+
+
+def _record(stats: dict, mode: str, out) -> float:
+    nl = int(jnp.sum(out.new_labels))
+    exp = int(jnp.sum(out.explored))
+    psi = exp / max(1, nl)
+    stats["supersteps"].append(mode)
+    stats["mode"].append(mode)
+    stats["labels"].append(nl)
+    stats["explored"].append(exp)
+    stats["psi"].append(psi)
+    return psi
+
+
+def hybrid_chl(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
+               batch: int = 4, beta: float = 8.0, eta: int = 16,
+               psi_threshold: float = 100.0, cap: Optional[int] = None,
+               hc_cap: int = 64, compact: int = 0
+               ) -> Tuple[LabelTable, dict]:
+    """The paper's Hybrid algorithm (PLaNT → DGLL, Common Label Table)."""
+    return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
+                           cap=cap, eta=eta, hc_cap=hc_cap,
+                           psi_threshold=psi_threshold, compact=compact)
+
+
+def plant_distributed_chl(g, rank: np.ndarray, *,
+                          mesh: Optional[Mesh] = None, batch: int = 4,
+                          beta: float = 8.0, cap: Optional[int] = None,
+                          ) -> Tuple[LabelTable, dict]:
+    """Pure distributed PLaNT (§5.2): zero label communication."""
+    return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
+                           cap=cap, eta=0, psi_threshold=float("inf"))

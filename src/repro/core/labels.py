@@ -1,0 +1,176 @@
+"""Fixed-capacity padded hub-label tables (DESIGN.md §2 A5).
+
+JAX requires static shapes, so the paper's dynamic per-vertex label
+vectors become a padded table:
+
+    hubs : int32 [n, L]   (-1 = empty slot)
+    dist : f32   [n, L]   (+inf = empty slot)
+    count: int32 [n]
+
+All batched operations below are pure-jnp references; the Pallas
+``label_query`` kernel accelerates the intersection probes on TPU
+(``repro.kernels.label_query``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class LabelTable(NamedTuple):
+    hubs: Array    # i32 [n, L]
+    dist: Array    # f32 [n, L]
+    count: Array   # i32 [n]
+
+    @property
+    def n(self) -> int:
+        return self.hubs.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.hubs.shape[1]
+
+
+def empty(n: int, cap: int) -> LabelTable:
+    return LabelTable(
+        hubs=jnp.full((n, cap), -1, dtype=jnp.int32),
+        dist=jnp.full((n, cap), jnp.inf, dtype=jnp.float32),
+        count=jnp.zeros((n,), dtype=jnp.int32),
+    )
+
+
+def insert_batch(table: LabelTable, roots: Array, emit: Array,
+                 dists: Array) -> Tuple[LabelTable, Array]:
+    """Append labels ``(roots[b], dists[b,v])`` for every ``emit[b,v]``.
+
+    Returns the new table and a bool overflow flag (any vertex whose
+    label count would exceed capacity; offending labels are dropped).
+    """
+    n, cap = table.n, table.cap
+    B = roots.shape[0]
+    off = jnp.cumsum(emit.astype(jnp.int32), axis=0) - 1          # [B, n]
+    pos = table.count[None, :] + off                              # [B, n]
+    ok = emit & (pos < cap)
+    flat = jnp.where(ok, jnp.arange(n)[None, :] * cap + pos, n * cap)
+    hubs = table.hubs.reshape(-1).at[flat.reshape(-1)].set(
+        jnp.broadcast_to(roots[:, None], (B, n)).reshape(-1), mode="drop")
+    dist = table.dist.reshape(-1).at[flat.reshape(-1)].set(
+        dists.reshape(-1), mode="drop")
+    new_count = table.count + jnp.sum(emit, axis=0, dtype=jnp.int32)
+    overflow = jnp.any(new_count > cap)
+    return LabelTable(hubs=hubs.reshape(n, cap), dist=dist.reshape(n, cap),
+                      count=jnp.minimum(new_count, cap)), overflow
+
+
+def hub_distance_map(table: LabelTable, roots: Array) -> Array:
+    """Dense map ``hmap[b, x] = d(roots[b], x)`` for x in L_{roots[b]},
+    ``+inf`` elsewhere — the hashed root labels of Alg. 1 line 1."""
+    n, cap = table.n, table.cap
+    B = roots.shape[0]
+    rh = table.hubs[roots]                     # [B, L]
+    rd = table.dist[roots]                     # [B, L]
+    hmap = jnp.full((B, n), jnp.inf, dtype=jnp.float32)
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], rh.shape)
+    hmap = hmap.at[b_idx.reshape(-1),
+                   jnp.where(rh >= 0, rh, 0).reshape(-1)].min(
+        jnp.where(rh >= 0, rd, jnp.inf).reshape(-1))
+    return hmap
+
+
+def cover_distance(table: LabelTable, hmap: Array) -> Array:
+    """``cover[b, v] = min_{x ∈ L_v} hmap[b, x] + d(v, x)`` — the
+    distance-query value DQ(v, root_b) for every vertex (Alg. 1 DQ)."""
+    safe_h = jnp.where(table.hubs >= 0, table.hubs, 0)     # [n, L]
+    via = hmap[:, safe_h]                                   # [B, n, L]
+    via = jnp.where(table.hubs[None] >= 0, via + table.dist[None], jnp.inf)
+    return jnp.min(via, axis=-1)                            # [B, n]
+
+
+def cover_best_rank(table: LabelTable, hmap: Array, rank: Array,
+                    delta: Array) -> Array:
+    """Max rank over hubs x common to L_v and the root's map with
+    ``hmap[b,x] + d(v,x) <= delta[b,v]`` (-1 if none) — DQ_Clean's W."""
+    safe_h = jnp.where(table.hubs >= 0, table.hubs, 0)
+    via = hmap[:, safe_h] + table.dist[None]                # [B, n, L]
+    good = (table.hubs[None] >= 0) & (via <= delta[:, :, None])
+    cand = jnp.where(good, rank[safe_h][None], -1)
+    return jnp.max(cand, axis=-1)                           # [B, n]
+
+
+def query_pairs(table: LabelTable, u: Array, v: Array
+                ) -> Tuple[Array, Array]:
+    """Batched PPSD query: min over common hubs of d(u,x)+d(v,x).
+
+    Returns (distance f32 [Q], best-hub id i32 [Q]; -1 when disjoint).
+    Pure-jnp reference for the ``label_query`` kernel.
+    """
+    hu, du = table.hubs[u], table.dist[u]          # [Q, L]
+    hv, dv = table.hubs[v], table.dist[v]
+    match = (hu[:, :, None] == hv[:, None, :]) & (hu[:, :, None] >= 0)
+    dd = du[:, :, None] + dv[:, None, :]
+    dd = jnp.where(match, dd, jnp.inf)
+    best = jnp.min(dd, axis=(1, 2))
+    flat = jnp.argmin(dd.reshape(dd.shape[0], -1), axis=-1)
+    bi = flat // dd.shape[2]
+    hub = jnp.where(jnp.isfinite(best),
+                    jnp.take_along_axis(hu, bi[:, None], axis=1)[:, 0], -1)
+    return best, hub
+
+
+def merge(a: LabelTable, b: LabelTable) -> Tuple[LabelTable, Array]:
+    """Append all labels of ``b`` after those of ``a`` (same n)."""
+    n = a.n
+    cap = a.cap
+    idx = jnp.arange(b.cap)[None, :]                        # [1, Lb]
+    valid = idx < b.count[:, None]
+    pos = a.count[:, None] + idx
+    ok = valid & (pos < cap)
+    flat = jnp.where(ok, jnp.arange(n)[:, None] * cap + pos, n * cap)
+    hubs = a.hubs.reshape(-1).at[flat.reshape(-1)].set(
+        b.hubs.reshape(-1), mode="drop")
+    dist = a.dist.reshape(-1).at[flat.reshape(-1)].set(
+        b.dist.reshape(-1), mode="drop")
+    new_count = a.count + b.count
+    overflow = jnp.any(new_count > cap)
+    return LabelTable(hubs.reshape(n, cap), dist.reshape(n, cap),
+                      jnp.minimum(new_count, cap)), overflow
+
+
+def delete_mask(table: LabelTable, drop: Array) -> LabelTable:
+    """Remove labels where ``drop[n, L]`` is True, compacting rows."""
+    keep = (~drop) & (table.hubs >= 0)
+    order = jnp.argsort(~keep, axis=1, stable=True)         # keepers first
+    hubs = jnp.take_along_axis(table.hubs, order, axis=1)
+    dist = jnp.take_along_axis(table.dist, order, axis=1)
+    kept = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    slot = jnp.arange(table.cap)[None, :]
+    hubs = jnp.where(slot < kept[:, None], hubs, -1)
+    dist = jnp.where(slot < kept[:, None], dist, jnp.inf)
+    return LabelTable(hubs, dist, kept)
+
+
+def to_numpy_sets(table: LabelTable) -> list[dict[int, float]]:
+    """Host-side view: per-vertex {hub: dist} (tests/benchmarks)."""
+    hubs = np.asarray(table.hubs)
+    dist = np.asarray(table.dist)
+    count = np.asarray(table.count)
+    out = []
+    for v in range(hubs.shape[0]):
+        row = {}
+        for k in range(count[v]):
+            h = int(hubs[v, k])
+            if h >= 0:
+                d = float(dist[v, k])
+                row[h] = min(d, row.get(h, np.inf))
+        out.append(row)
+    return out
+
+
+def total_labels(table: LabelTable) -> int:
+    return int(np.asarray(jnp.sum(table.count)))

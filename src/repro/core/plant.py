@@ -1,0 +1,121 @@
+"""PLaNT — Prune Labels And (do) Not (prune) Trees (paper §5.2).
+
+The paper's key contribution: construct *unpruned* SPTs that carry the
+max-rank-ancestor along shortest paths, and select labels by a local
+criterion — no dependence on labels from other trees, hence an
+embarrassingly parallel, zero-communication CHL construction.
+
+TPU adaptation (DESIGN.md §2 A2): the ancestor array ``a[v]`` of Alg. 3
+becomes the ``mrank`` plane of the batched relaxation; the label
+criterion ``max(R(v), R(a[v])) ≤ R(h)`` becomes the pointwise
+post-filter ``mrank[v] == R(root)``. Early termination is subsumed by
+fixpoint detection. Optional common-label pruning (§5.3) blocks
+propagation out of vertices already covered by a top-η hub and masks
+emission at covered vertices (both provably CHL-safe — DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as lbl
+from repro.core.labels import LabelTable
+from repro.sssp import relax
+
+Array = jax.Array
+
+
+class TreeBatch(NamedTuple):
+    """Result of one batch of PLaNTed trees."""
+    emit: Array       # bool [B, n] — label (root_b, v) is canonical
+    dist: Array       # f32  [B, n]
+    explored: Array   # i32  [B] — vertices touched per tree (Ψ numerator)
+    sweeps: Array     # i32  [] — relaxation sweeps to fixpoint
+
+
+@functools.partial(jax.jit, static_argnames=("use_hc",))
+def plant_batch(ell_src: Array, ell_w: Array, rank: Array, roots: Array,
+                valid: Array, hc: LabelTable | None = None,
+                use_hc: bool = False) -> TreeBatch:
+    """PLaNT a batch of trees rooted at ``roots`` (mask via ``valid``).
+
+    ``hc``/``use_hc``: the Common Label Table of §5.3 — labels of the
+    top-η hubs, used as a distance-query pruning oracle for PLaNTed
+    trees.
+    """
+    if use_hc:
+        assert hc is not None
+        hmap = lbl.hub_distance_map(hc, roots)          # [B, n]
+        cover = lbl.cover_distance(hc, hmap)            # loop-invariant
+
+        def block(dist: Array, roots_: Array) -> Array:
+            return cover <= dist
+        block_fn = block
+    else:
+        block_fn = None
+
+    st = relax.batched_sssp_maxrank(ell_src, ell_w, rank, roots,
+                                    block_fn=block_fn)
+    root_rank = rank[roots][:, None]
+    emit = (st.mrank == root_rank) & jnp.isfinite(st.dist)
+    if use_hc:
+        emit &= ~(cover <= st.dist)
+    emit &= valid[:, None]
+    return TreeBatch(emit=emit, dist=st.dist, explored=st.explored,
+                     sweeps=st.sweeps)
+
+
+def _batches(order: np.ndarray, batch: int):
+    """Yield (roots[B], valid[B]) fixed-size batches over a root order."""
+    n = len(order)
+    for s in range(0, n, batch):
+        chunk = order[s:s + batch]
+        pad = batch - len(chunk)
+        roots = np.concatenate([chunk, np.zeros(pad, chunk.dtype)])
+        valid = np.concatenate([np.ones(len(chunk), bool),
+                                np.zeros(pad, bool)])
+        yield roots.astype(np.int32), valid
+
+
+def plant_chl(g, rank: np.ndarray, *, batch: int = 16,
+              cap: Optional[int] = None,
+              hc: Optional[LabelTable] = None,
+              roots_order: Optional[np.ndarray] = None,
+              ) -> Tuple[LabelTable, dict]:
+    """Full CHL construction with pure PLaNT (host superstep loop).
+
+    Embarrassingly parallel over root batches; each batch's labels are
+    final (no cleaning — the paper's minimality-by-construction).
+    Returns the label table and a stats dict (Ψ per batch etc.).
+    """
+    n = g.n
+    cap = cap or max(16, 4 * int(np.sqrt(n)) + 32)
+    order = (roots_order if roots_order is not None
+             else np.argsort(-rank.astype(np.int64), kind="stable"))
+    table = lbl.empty(n, cap)
+    ell_src = jnp.asarray(g.ell_src)
+    ell_w = jnp.asarray(g.ell_w)
+    rank_d = jnp.asarray(rank.astype(np.int32))
+    stats = {"explored": [], "labels": [], "sweeps": [], "psi": []}
+    overflowed = False
+    for roots, valid in _batches(order, batch):
+        tb = plant_batch(ell_src, ell_w, rank_d, jnp.asarray(roots),
+                         jnp.asarray(valid), hc=hc, use_hc=hc is not None)
+        table, ovf = lbl.insert_batch(table, jnp.asarray(roots),
+                                      tb.emit, tb.dist)
+        overflowed |= bool(ovf)
+        exp = int(jnp.sum(tb.explored * valid))
+        nl = int(jnp.sum(tb.emit))
+        stats["explored"].append(exp)
+        stats["labels"].append(nl)
+        stats["sweeps"].append(int(tb.sweeps))
+        stats["psi"].append(exp / max(1, nl))
+    if overflowed:
+        raise RuntimeError(
+            f"label table overflow (cap={cap}); raise `cap`")
+    return table, stats

@@ -1,0 +1,78 @@
+"""Labeling validators: cover property, respects-R, minimality, CHL
+equality — the behavioural invariants behind the paper's claims."""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.pll import LabelSets, _query
+from repro.graphs.graph import Graph
+from repro.sssp.oracle import all_pairs
+
+
+def check_cover(labels: LabelSets, g: Graph,
+                D: np.ndarray | None = None) -> None:
+    """Every connected pair's distance is recovered exactly."""
+    D = all_pairs(g) if D is None else D
+    n = g.n
+    for u in range(n):
+        for v in range(n):
+            got = _query(labels[u], labels[v])
+            want = D[u, v]
+            if np.isfinite(want):
+                assert got == want, (u, v, got, want)
+            else:
+                assert not np.isfinite(got), (u, v, got)
+
+
+def check_respects_r(labels: LabelSets, g: Graph, rank: np.ndarray,
+                     D: np.ndarray | None = None) -> None:
+    """Definition 3: the max-rank vertex over the union of shortest
+    u-v paths is a hub of both u and v (with exact distances)."""
+    D = all_pairs(g) if D is None else D
+    n = g.n
+    for u in range(n):
+        for v in range(u, n):
+            if not np.isfinite(D[u, v]):
+                continue
+            on_path = np.isfinite(D[u]) & np.isfinite(D[v]) & (
+                D[u] + D[v] == D[u, v])
+            cand = np.nonzero(on_path)[0]
+            hm = int(cand[np.argmax(rank[cand])])
+            assert labels[u].get(hm) == D[u, hm], (u, v, hm)
+            assert labels[v].get(hm) == D[v, hm], (u, v, hm)
+
+
+def check_equal(labels: LabelSets, ref: LabelSets) -> None:
+    """Exact label-set equality (hubs and distances)."""
+    assert len(labels) == len(ref)
+    for v, (a, b) in enumerate(zip(labels, ref)):
+        assert a == b, (v, sorted(a.items()), sorted(b.items()))
+
+
+def check_minimal(labels: LabelSets, g: Graph,
+                  D: np.ndarray | None = None) -> None:
+    """Definition 2: removing any one label breaks the cover property."""
+    D = all_pairs(g) if D is None else D
+    n = g.n
+    for v in range(n):
+        for h in list(labels[v].keys()):
+            d = labels[v].pop(h)
+            broken = False
+            for u in range(n):
+                if np.isfinite(D[v, u]):
+                    if _query(labels[v], labels[u]) != D[v, u]:
+                        broken = True
+                        break
+            labels[v][h] = d
+            assert broken, (v, h)
+
+
+def redundant_count(labels: LabelSets, ref: LabelSets) -> int:
+    """#labels present in ``labels`` but not the reference CHL."""
+    extra = 0
+    for a, b in zip(labels, ref):
+        extra += len(set(a.keys()) - set(b.keys()))
+    return extra

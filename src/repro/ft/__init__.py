@@ -1,0 +1,2 @@
+from repro.ft.elastic import (HeartbeatMonitor, lost_roots,
+                              reshard_state, restore_elastic)

@@ -1,0 +1,73 @@
+"""Fault tolerance: elastic re-meshing, failure handling, stragglers.
+
+At 1000+ node scale the framework must survive: (a) node loss →
+restart from the latest atomic checkpoint on a *smaller* mesh;
+(b) node gain → rescale up; (c) stragglers → even, deterministic work
+assignment plus asynchronous checkpointing off the critical path.
+
+`reshard_state` is the mechanism behind (a)/(b): restoring a
+checkpoint onto a different mesh is just `device_put` with the new
+shardings (the checkpoint is mesh-agnostic numpy). For CHL runs,
+elasticity is even cheaper: PLaNT supersteps are stateless beyond the
+label partitions, so a lost node's root queue is simply re-PLaNTed
+(zero-communication recovery — the paper's §5.2 property doubles as a
+fault-tolerance property, see DESIGN.md §5).
+
+Straggler mitigation implemented here:
+- round-robin-by-rank root assignment (`core.dgll.assign_roots`)
+  balances tree-size skew across nodes (paper Fig. 2);
+- for training, the data pipeline is shard-deterministic so a
+  restarted/replaced host rejoins at the exact batch cursor.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Re-place an in-memory state pytree onto new shardings (mesh)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, shardings)
+
+
+def restore_elastic(mgr: CheckpointManager, template: Any,
+                    shardings: Any, step: Optional[int] = None
+                    ) -> Tuple[Any, int, Dict]:
+    """Restore the latest checkpoint onto a (possibly different) mesh."""
+    return mgr.restore(template, step=step, shardings=shardings)
+
+
+def lost_roots(queues: np.ndarray, lost_nodes: list[int],
+               completed: int) -> np.ndarray:
+    """CHL recovery: the not-yet-completed roots of failed nodes.
+
+    ``queues``: the `assign_roots` matrix; ``completed``: number of
+    per-node queue positions already committed to stable storage.
+    The survivors re-PLaNT these roots (order does not matter for
+    correctness — PLaNT trees are independent)."""
+    rest = queues[lost_nodes, completed:]
+    return rest[rest >= 0]
+
+
+class HeartbeatMonitor:
+    """Host-side failure detector used by the launcher loop: nodes
+    report per-superstep progress; nodes silent for ``patience``
+    supersteps are declared lost (simulation hook for tests)."""
+
+    def __init__(self, q: int, patience: int = 3):
+        self.last_seen = np.zeros(q, dtype=np.int64)
+        self.patience = patience
+
+    def report(self, node: int, superstep: int) -> None:
+        self.last_seen[node] = superstep
+
+    def lost(self, superstep: int) -> list[int]:
+        return [int(i) for i in
+                np.nonzero(superstep - self.last_seen
+                           > self.patience)[0]]

@@ -1,0 +1,22 @@
+"""Graph substrate: padded-ELL + CSR graphs, generators, rankings."""
+
+from repro.graphs.graph import Graph, from_edges, to_networkx
+from repro.graphs.generators import (
+    grid_road,
+    scale_free,
+    random_geometric,
+    random_connected,
+)
+from repro.graphs.ranking import degree_ranking, betweenness_ranking
+
+__all__ = [
+    "Graph",
+    "from_edges",
+    "to_networkx",
+    "grid_road",
+    "scale_free",
+    "random_geometric",
+    "random_connected",
+    "degree_ranking",
+    "betweenness_ranking",
+]

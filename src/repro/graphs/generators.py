@@ -1,0 +1,140 @@
+"""Synthetic graph generators mirroring the paper's dataset families.
+
+The paper evaluates on (a) road networks (CAL/EAS/CTR/USA — high
+diameter, low degree) and (b) scale-free networks (SKIT/YTB/POK/LIJ —
+low diameter, heavy-tailed degree). We generate both families
+synthetically, with the paper's weighting scheme for unweighted inputs:
+integer weights uniform in ``[1, sqrt(n))`` (§7.1.1; integral floats so
+path-sum ties are exact — DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import Graph, from_edges
+
+
+def _weights(rng: np.random.Generator, m: int, n: int,
+             max_w: int | None = None) -> np.ndarray:
+    hi = max(2, int(np.sqrt(n))) if max_w is None else max_w
+    return rng.integers(1, hi, size=m).astype(np.float32)
+
+
+def grid_road(rows: int, cols: int, seed: int = 0,
+              diag_frac: float = 0.1, max_w: int | None = None) -> Graph:
+    """Road-network-like 2D lattice: high diameter, degree ≤ ~4-6.
+
+    A ``rows × cols`` grid with integer weights plus a sprinkling of
+    diagonal shortcuts (real road networks are not perfect lattices).
+    """
+    rng = np.random.default_rng(seed)
+    n = rows * cols
+    vid = np.arange(n).reshape(rows, cols)
+    src, dst = [], []
+    src.append(vid[:, :-1].ravel()); dst.append(vid[:, 1:].ravel())
+    src.append(vid[:-1, :].ravel()); dst.append(vid[1:, :].ravel())
+    n_diag = int(diag_frac * n)
+    if n_diag and rows > 1 and cols > 1:
+        r = rng.integers(0, rows - 1, n_diag)
+        c = rng.integers(0, cols - 1, n_diag)
+        src.append(vid[r, c]); dst.append(vid[r + 1, c + 1])
+    src = np.concatenate(src).astype(np.int32)
+    dst = np.concatenate(dst).astype(np.int32)
+    w = _weights(rng, len(src), n, max_w)
+    return from_edges(n, src, dst, w, directed=False)
+
+
+def scale_free(n: int, attach: int = 2, seed: int = 0,
+               max_w: int | None = None, directed: bool = False) -> Graph:
+    """Barabási–Albert preferential attachment: core-fringe structure.
+
+    Matches the paper's scale-free family (dense core that typical
+    degree rankings put on top — the regime where Hybrid shines).
+    """
+    rng = np.random.default_rng(seed)
+    attach = min(attach, n - 1)
+    src, dst = [], []
+    targets = list(range(attach))          # initial clique-ish seed
+    repeated: list[int] = list(range(attach))
+    for v in range(attach, n):
+        for t in set(targets):
+            src.append(v); dst.append(t)
+        repeated.extend(targets)
+        repeated.extend([v] * attach)
+        idx = rng.integers(0, len(repeated), size=attach)
+        targets = [repeated[i] for i in idx]
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    w = _weights(rng, len(src), n, max_w)
+    return from_edges(n, src, dst, w, directed=directed)
+
+
+def random_geometric(n: int, radius: float | None = None, seed: int = 0,
+                     max_w: int | None = None) -> Graph:
+    """Random geometric graph (unit square), connected w.h.p."""
+    rng = np.random.default_rng(seed)
+    if radius is None:
+        radius = float(np.sqrt(3.0 * np.log(max(n, 2)) / (np.pi * n)))
+    pts = rng.random((n, 2))
+    src, dst = [], []
+    # O(n^2) pair scan — generator runs at test scale only.
+    for i in range(n):
+        d2 = np.sum((pts[i + 1:] - pts[i]) ** 2, axis=1)
+        js = np.nonzero(d2 <= radius * radius)[0] + i + 1
+        src.extend([i] * len(js)); dst.extend(js.tolist())
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    w = _weights(rng, len(src), n, max_w)
+    g = from_edges(n, src, dst, w, directed=False)
+    return _ensure_connected(g, rng, max_w)
+
+
+def random_connected(n: int, extra_edges: int, seed: int = 0,
+                     max_w: int | None = None,
+                     directed: bool = False) -> Graph:
+    """Random spanning tree + ``extra_edges`` chords (always connected).
+
+    The workhorse for property tests: small, connected, tie-heavy.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n).astype(np.int32)
+    heads = perm[1:]
+    tails = perm[rng.integers(0, np.arange(1, n))] if n > 1 else perm[:0]
+    src = [heads]; dst = [tails]
+    if extra_edges:
+        src.append(rng.integers(0, n, extra_edges).astype(np.int32))
+        dst.append(rng.integers(0, n, extra_edges).astype(np.int32))
+    src = np.concatenate(src); dst = np.concatenate(dst)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = _weights(rng, len(src), n, max_w)
+    g = from_edges(n, src, dst, w, directed=directed)
+    if directed:
+        # also add reverse tree arcs so everything is mutually reachable
+        w2 = _weights(rng, len(heads), n, max_w)
+        s = np.concatenate([src, tails]); d = np.concatenate([dst, heads])
+        ww = np.concatenate([w, w2])
+        g = from_edges(n, s, d, ww, directed=True)
+    return g
+
+
+def _ensure_connected(g: Graph, rng: np.random.Generator,
+                      max_w: int | None) -> Graph:
+    """Link connected components with random edges (tests only)."""
+    import networkx as nx
+    from repro.graphs.graph import to_networkx
+    G = to_networkx(g)
+    comps = list(nx.connected_components(G))
+    if len(comps) == 1:
+        return g
+    src = np.repeat(np.arange(g.n, dtype=np.int32),
+                    np.diff(g.indptr).astype(np.int64))
+    extra_s, extra_d = [], []
+    reps = [next(iter(c)) for c in comps]
+    for a, b in zip(reps[:-1], reps[1:]):
+        extra_s.append(a); extra_d.append(b)
+    s = np.concatenate([src, np.asarray(extra_s, np.int32)])
+    d = np.concatenate([g.indices, np.asarray(extra_d, np.int32)])
+    w = np.concatenate([g.weights, _weights(rng, len(extra_s), g.n, max_w)])
+    return from_edges(g.n, s, d, w, directed=False)

@@ -1,0 +1,143 @@
+"""Core graph container.
+
+The TPU-facing representation is a padded ELL layout (``[n, max_deg]``
+neighbor/weight matrices). Dense, regular gathers over ELL rows are the
+unit of work for the batched relaxation engine (`repro.sssp.relax`) —
+this is the hardware adaptation of the paper's per-thread binary-heap
+Dijkstra (DESIGN.md §2 A1).
+
+CSR views are kept alongside for the numpy oracles and for generators.
+
+Conventions
+-----------
+- Vertices are ``int32`` ids in ``[0, n)``.
+- Weights are positive ``float32``; we use *integral* float weights in
+  tests/benchmarks so that path-sum equality (needed for the CHL
+  tie-break semantics) is exact in float arithmetic (DESIGN.md §2).
+- ELL padding: neighbor id ``0`` with weight ``+inf`` (masked by weight).
+- Directed graphs store both out-ELL (``nbr_out``) and in-ELL
+  (``nbr_in``): the relaxation engine *pulls* along in-edges. For
+  undirected graphs the two coincide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A weighted graph in ELL + CSR form (host-resident numpy arrays).
+
+    JAX code consumes the ELL arrays (they are passed into jit'd
+    functions and become device arrays there); oracles use CSR.
+    """
+
+    n: int
+    m: int                      # number of directed arcs stored
+    directed: bool
+    # --- ELL (pull direction: in-edges of each vertex) ---
+    ell_src: np.ndarray         # int32 [n, max_deg]: source of in-edge
+    ell_w: np.ndarray           # float32 [n, max_deg]: weight, inf-padded
+    # --- ELL (push direction: out-edges), for traversal/generators ---
+    ell_dst: np.ndarray         # int32 [n, max_deg_out]
+    ell_w_out: np.ndarray       # float32 [n, max_deg_out]
+    # --- CSR (out-edges) ---
+    indptr: np.ndarray          # int64 [n+1]
+    indices: np.ndarray         # int32 [m]
+    weights: np.ndarray         # float32 [m]
+
+    @property
+    def max_deg_in(self) -> int:
+        return int(self.ell_src.shape[1])
+
+    @property
+    def max_deg_out(self) -> int:
+        return int(self.ell_dst.shape[1])
+
+    def out_edges(self, v: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.indptr[v], self.indptr[v + 1]
+        return self.indices[lo:hi], self.weights[lo:hi]
+
+    def reverse(self) -> "Graph":
+        """Graph with all arcs reversed (for backward labels on digraphs)."""
+        if not self.directed:
+            return self
+        src = np.repeat(np.arange(self.n, dtype=np.int32),
+                        np.diff(self.indptr).astype(np.int64))
+        return from_edges(self.n, self.indices, src, self.weights,
+                          directed=True)
+
+
+def _build_ell(n: int, heads: np.ndarray, tails: np.ndarray,
+               w: np.ndarray, pad_to_multiple: int = 8
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """ELL arrays keyed by ``heads``: row v lists (tails, w) of its edges."""
+    order = np.argsort(heads, kind="stable")
+    heads, tails, w = heads[order], tails[order], w[order]
+    deg = np.bincount(heads, minlength=n)
+    max_deg = int(deg.max()) if len(heads) else 1
+    max_deg = max(1, -(-max_deg // pad_to_multiple) * pad_to_multiple)
+    ell_ids = np.zeros((n, max_deg), dtype=np.int32)
+    ell_w = np.full((n, max_deg), INF, dtype=np.float32)
+    # position of each edge within its row
+    starts = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=starts[1:])
+    pos = np.arange(len(heads), dtype=np.int64) - starts[heads]
+    ell_ids[heads, pos] = tails
+    ell_w[heads, pos] = w
+    return ell_ids, ell_w
+
+
+def from_edges(n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+               directed: bool = False) -> Graph:
+    """Build a Graph from an arc list.
+
+    For ``directed=False`` the arcs are symmetrized (both directions
+    stored); duplicate arcs keep the minimum weight.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    w = np.asarray(w, dtype=np.float32)
+    if not directed:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    # dedupe (keep min weight), drop self loops
+    keep = src != dst
+    src, dst, w = src[keep], dst[keep], w[keep]
+    key = src.astype(np.int64) * n + dst.astype(np.int64)
+    order = np.lexsort((w, key))
+    key, src, dst, w = key[order], src[order], dst[order], w[order]
+    first = np.ones(len(key), dtype=bool)
+    first[1:] = key[1:] != key[:-1]
+    src, dst, w = src[first], dst[first], w[first]
+
+    m = len(src)
+    # CSR over out-edges
+    order = np.argsort(src, kind="stable")
+    s, d, ww = src[order], dst[order], w[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(s, minlength=n), out=indptr[1:])
+    ell_dst, ell_w_out = _build_ell(n, src, dst, w)
+    ell_src, ell_w = _build_ell(n, dst, src, w)   # in-edges keyed by head
+    return Graph(n=n, m=m, directed=directed,
+                 ell_src=ell_src, ell_w=ell_w,
+                 ell_dst=ell_dst, ell_w_out=ell_w_out,
+                 indptr=indptr, indices=d, weights=ww)
+
+
+def to_networkx(g: Graph):
+    """Oracle view (tests only)."""
+    import networkx as nx
+    G = nx.DiGraph() if g.directed else nx.Graph()
+    G.add_nodes_from(range(g.n))
+    for v in range(g.n):
+        ids, w = g.out_edges(v)
+        for u, wt in zip(ids.tolist(), w.tolist()):
+            G.add_edge(v, int(u), weight=float(wt))
+    return G

@@ -1,0 +1,63 @@
+"""Network hierarchies (ranking functions R).
+
+The paper (§7.1.1) ranks by degree for scale-free networks and by
+sampled-approximate betweenness for road networks. ``rank[v]`` is an
+``int32`` in ``[0, n)``; **larger = more important** (higher rank).
+Ranks are a total order — ties are broken by vertex id so every graph
+has a unique, deterministic hierarchy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import Graph
+
+
+def _order_to_rank(order_desc: np.ndarray, n: int) -> np.ndarray:
+    """``order_desc[0]`` is the most important vertex → rank ``n-1``."""
+    rank = np.empty(n, dtype=np.int32)
+    rank[order_desc] = np.arange(n - 1, -1, -1, dtype=np.int32)
+    return rank
+
+
+def degree_ranking(g: Graph) -> np.ndarray:
+    """Degree hierarchy (paper's choice for scale-free graphs)."""
+    deg = np.diff(g.indptr).astype(np.int64)
+    # sort by (degree desc, id asc) for determinism
+    order = np.lexsort((np.arange(g.n), -deg))
+    return _order_to_rank(order.astype(np.int64), g.n)
+
+
+def betweenness_ranking(g: Graph, samples: int = 16,
+                        seed: int = 0) -> np.ndarray:
+    """Sampled-SPT approximate betweenness (paper's choice for roads).
+
+    Betweenness is approximated by accumulating, over ``samples``
+    Dijkstra trees from random roots, how many tree descendants each
+    vertex has (the classic Brandes partial accumulation restricted to
+    tree paths — inexpensive and adequate for a hierarchy, per §7.1.1).
+    """
+    from repro.sssp.oracle import dijkstra_tree
+
+    rng = np.random.default_rng(seed)
+    score = np.zeros(g.n, dtype=np.float64)
+    roots = rng.choice(g.n, size=min(samples, g.n), replace=False)
+    for r in roots:
+        dist, parent = dijkstra_tree(g, int(r))
+        # accumulate subtree sizes bottom-up (process by distance desc)
+        order = np.argsort(dist)[::-1]
+        acc = np.ones(g.n, dtype=np.float64)
+        acc[~np.isfinite(dist)] = 0.0
+        for v in order:
+            p = parent[v]
+            if p >= 0 and np.isfinite(dist[v]):
+                acc[p] += acc[v]
+        score += np.where(np.isfinite(dist), acc, 0.0)
+    order = np.lexsort((np.arange(g.n), -score))
+    return _order_to_rank(order.astype(np.int64), g.n)
+
+
+def random_ranking(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.permutation(n).astype(np.int32)

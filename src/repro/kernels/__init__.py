@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- ``minplus``:     blocked lexicographic (min,+) contraction — the
+                   PLaNT tree-relaxation inner loop (VPU, VMEM tiles).
+- ``label_query``: batched PPSD label-intersection — the query-serving
+                   hot loop (QLSN/QFDL/QDOL all reduce to it).
+
+Each kernel ships `<name>.py` (pallas_call + BlockSpec), `ops.py`
+(jit'd wrapper + padding), `ref.py` (pure-jnp oracle); tests sweep
+shapes/dtypes in ``interpret=True`` mode against the oracle.
+"""

@@ -1,0 +1,6 @@
+from repro.kernels.label_query.label_query import label_query
+from repro.kernels.label_query.ops import label_query_padded, query_table
+from repro.kernels.label_query.ref import label_query_ref
+
+__all__ = ["label_query", "label_query_ref", "label_query_padded",
+           "query_table"]

@@ -1,0 +1,56 @@
+"""Jit'd wrapper: pad query count/label width, dispatch kernel or ref.
+
+`query_table` is the serving entry point used by the Table-4 benchmark
+harness: it gathers the label rows of a (u, v) query batch from a
+LabelTable and intersects them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.labels import LabelTable
+from repro.kernels.label_query.label_query import label_query
+from repro.kernels.label_query.ref import label_query_ref
+
+_MAX_KERNEL_L = 512
+
+
+def _pad_axis(x, mult, axis, fill):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def label_query_padded(hubs_u, dist_u, hubs_v, dist_v, *,
+                       interpret: bool = False,
+                       use_kernel: bool = True) -> jax.Array:
+    Q, L = hubs_u.shape
+    if not use_kernel or L > _MAX_KERNEL_L:
+        return label_query_ref(hubs_u, dist_u, hubs_v, dist_v)
+    bq = 8
+    args = []
+    for x, fill in ((hubs_u, -1), (dist_u, jnp.inf),
+                    (hubs_v, -1), (dist_v, jnp.inf)):
+        x = _pad_axis(x, bq, 0, fill)
+        x = _pad_axis(x, 128, 1, fill)
+        args.append(x)
+    out = label_query(*args, bq=bq, interpret=interpret)
+    return out[:Q]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def query_table(table: LabelTable, u: jax.Array, v: jax.Array, *,
+                interpret: bool = False,
+                use_kernel: bool = True) -> jax.Array:
+    """Serving hot path: PPSD(u[i], v[i]) over a label table."""
+    return label_query_padded(
+        table.hubs[u], table.dist[u], table.hubs[v], table.dist[v],
+        interpret=interpret, use_kernel=use_kernel)

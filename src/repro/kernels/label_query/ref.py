@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the label-intersection kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def label_query_ref(hubs_u, dist_u, hubs_v, dist_v) -> jax.Array:
+    """min over common hubs of dist_u + dist_v, +inf if disjoint."""
+    match = (hubs_u[:, :, None] == hubs_v[:, None, :]) & (
+        hubs_u[:, :, None] >= 0)
+    dd = jnp.where(match, dist_u[:, :, None] + dist_v[:, None, :],
+                   jnp.inf)
+    return jnp.min(dd, axis=(1, 2))

@@ -1,0 +1,8 @@
+from repro.kernels.minplus.minplus import minplus
+from repro.kernels.minplus.ops import (dense_weights, minplus_padded,
+                                       plant_fixpoint_dense,
+                                       plant_sweep_dense)
+from repro.kernels.minplus.ref import minplus_ref
+
+__all__ = ["minplus", "minplus_ref", "minplus_padded", "dense_weights",
+           "plant_sweep_dense", "plant_fixpoint_dense"]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blocked lexicographic (min,+) contraction.
+
+The compute hot-spot of PLaNT (DESIGN.md §2 A1/A2): one relaxation
+sweep over a dense adjacency block is
+
+    out_d[b, v] = min_u  dist[b, u] + W[u, v]
+    out_m[b, v] = max { mrank[b, u] : u attains the min }
+
+i.e. a matrix product over the (min, +) semiring carrying a secondary
+max-rank payload for the PLaNT tie-break (Alg. 3 line 12). On TPU this
+runs on the VPU over VMEM-resident tiles (the (min,+) semiring has no
+MXU form); the K (contraction) grid axis accumulates into the output
+block, so the working set is three tiles regardless of n.
+
+Grid: (B/BB, N/BN, K/BK), dimension order chosen so K is innermost
+(`arbitrary` semantics — sequential accumulation), B and N parallel.
+
+Tiling defaults (f32): BB=8 sublanes, BN=128 lanes, BK=128 —
+hardware-aligned (8, 128) vector registers; VMEM per step ≈
+BB·BK + BK·BN + 4·BB·BN floats ≈ 72 KB ≪ 16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1  # mrank payload for "unreached"
+
+
+def _minplus_kernel(dist_ref, mrank_ref, w_ref, out_d_ref, out_m_ref):
+    """One (b, n, k) grid step: fold tile k into output tile (b, n)."""
+    k = pl.program_id(2)
+
+    dist = dist_ref[...]            # [BB, BK] f32
+    mrank = mrank_ref[...]          # [BB, BK] i32
+    w = w_ref[...]                  # [BK, BN] f32
+
+    cand = dist[:, :, None] + w[None, :, :]          # [BB, BK, BN]
+    tile_d = jnp.min(cand, axis=1)                   # [BB, BN]
+    attain = (cand <= tile_d[:, None, :]) & jnp.isfinite(cand)
+    tile_m = jnp.max(
+        jnp.where(attain, mrank[:, :, None], NEG), axis=1)  # [BB, BN]
+
+    @pl.when(k == 0)
+    def _init():
+        out_d_ref[...] = tile_d
+        out_m_ref[...] = tile_m
+
+    @pl.when(k > 0)
+    def _fold():
+        acc_d = out_d_ref[...]
+        acc_m = out_m_ref[...]
+        new_d = jnp.minimum(acc_d, tile_d)
+        keep_acc = jnp.where(acc_d <= new_d, acc_m, NEG)
+        keep_new = jnp.where(tile_d <= new_d, tile_m, NEG)
+        out_d_ref[...] = new_d
+        out_m_ref[...] = jnp.maximum(keep_acc, keep_new)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "bn", "bk", "interpret"))
+def minplus(dist: jax.Array, mrank: jax.Array, w: jax.Array, *,
+            bb: int = 8, bn: int = 128, bk: int = 128,
+            interpret: bool = False):
+    """Lexicographic (min,+) product.
+
+    Args:
+      dist:  f32 [B, K] tentative distances.
+      mrank: i32 [B, K] max-rank payloads (−1 = unreached).
+      w:     f32 [K, N] dense edge-weight block (+inf = no edge).
+    Returns:
+      (out_d f32 [B, N], out_m i32 [B, N]).
+
+    Shapes must be multiples of the tile sizes; `ops.py` pads.
+    """
+    B, K = dist.shape
+    K2, N = w.shape
+    assert K == K2 and mrank.shape == (B, K)
+    assert B % bb == 0 and N % bn == 0 and K % bk == 0, (B, N, K)
+
+    grid = (B // bb, N // bn, K // bk)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda b, n, k: (b, k)),
+            pl.BlockSpec((bb, bk), lambda b, n, k: (b, k)),
+            pl.BlockSpec((bk, bn), lambda b, n, k: (k, n)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bn), lambda b, n, k: (b, n)),
+            pl.BlockSpec((bb, bn), lambda b, n, k: (b, n)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, N), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(dist, mrank, w)

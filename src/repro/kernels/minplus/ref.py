@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the lexicographic (min,+) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def minplus_ref(dist: jax.Array, mrank: jax.Array, w: jax.Array):
+    """out_d[b,v] = min_u dist[b,u] + w[u,v];
+    out_m[b,v] = max mrank[b,u] over u attaining the min (−1 if none)."""
+    cand = dist[:, :, None] + w[None, :, :]           # [B, K, N]
+    out_d = jnp.min(cand, axis=1)
+    attain = (cand <= out_d[:, None, :]) & jnp.isfinite(cand)
+    out_m = jnp.max(jnp.where(attain, mrank[:, :, None], -1), axis=1)
+    return out_d, out_m.astype(jnp.int32)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run driver (one cell per invocation, or --all).
+
+For every (architecture × input shape × mesh) cell:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=…).lower(*input_specs(...))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # roofline terms
+
+Results (memory/cost/collective stats + roofline terms) append to a
+JSONL file consumed by EXPERIMENTS.md §Dry-run/§Roofline and by
+``benchmarks/roofline_report.py``.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi_34b --shape train_4k \
+        --mesh single --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --arch chl_road --shape plant \
+        --mesh pod
+"""
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro.configs import base as cfgbase                   # noqa: E402
+from repro.launch.mesh import (make_flat_mesh,              # noqa: E402
+                               make_production_mesh)
+from repro.roofline import analysis as ra                   # noqa: E402
+
+CHL_SHAPES = ("plant", "dgll")
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def run_lm_cell(arch: str, shape_name: str, multi_pod: bool,
+                rules_name: str = "fsdp", variant: str = "baseline",
+                dm_shape=None) -> dict:
+    from repro.launch import specs as sp
+    from repro.parallel import sharding as shd
+
+    rules = {"fsdp": shd.FSDP_RULES, "tp": shd.TP_RULES,
+             "sp": shd.SP_RULES,
+             "fsdp_opt": shd.FSDP_OPT_RULES}[rules_name]
+    mesh = make_production_mesh(multi_pod=multi_pod, dm_shape=dm_shape)
+    chips = mesh.devices.size
+    cell = sp.make_cell(arch, shape_name, mesh, rules=rules,
+                        variant=variant)
+    step = sp.cell_step_fn(cell, mesh, rules=rules,
+                           accum_steps=sp.variant_accum(variant))
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    print(mem)
+    print({k: v for k, v in cost.items()
+           if k in ("flops", "bytes accessed")})
+    mf = ra.model_flops_estimate(cell.config, cell.shape)
+    roof = ra.analyze(cost, hlo, chips=chips, model_flops_total=mf)
+    dm = dm_shape or (16, 16)
+    mesh_name = ("2x" if multi_pod else "") + f"{dm[0]}x{dm[1]}"
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": mesh_name,
+        "rules": rules_name, "variant": variant,
+        "chips": chips, "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed",
+                                          "transcendentals")},
+        "roofline": roof.to_dict(),
+        "params": cell.config.param_count(),
+        "active_params": cell.config.active_param_count(),
+    }
+
+
+def run_chl_cell(arch: str, shape_name: str, multi_pod: bool,
+                 variant: str = "baseline") -> dict:
+    """The paper's workload: lower one distributed superstep (PLaNT:
+    must be collective-free; DGLL: all-gather + all-reduce) on the
+    full flattened device set (512 = 2 pods × 256)."""
+    import importlib
+    import numpy as np
+    from repro.core import dgll as dist
+    from repro.core.labels import LabelTable
+
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    ccfg = mod.CONFIG
+    q = 512 if multi_pod else 256
+    mesh = make_flat_mesh(q)
+    n, T, B = ccfg.n, ccfg.trees_per_node, ccfg.batch
+    plant = shape_name == "plant"
+    compact = ccfg.compact if variant == "opt" and not plant else 0
+    fn = dist.dgll_superstep_fn(mesh, n, batch=B, use_hc=False,
+                                plant_trees=plant, compact=compact)
+    sds = jax.ShapeDtypeStruct
+    table = LabelTable(hubs=sds((q, n, ccfg.cap), jnp.int32),
+                       dist=sds((q, n, ccfg.cap), jnp.float32),
+                       count=sds((q, n), jnp.int32))
+    hc = LabelTable(hubs=sds((n, 1), jnp.int32),
+                    dist=sds((n, 1), jnp.float32),
+                    count=sds((n,), jnp.int32))
+    args = (table, hc, sds((n,), jnp.int32),
+            sds((q, T), jnp.int32), sds((q, T), jnp.bool_),
+            sds((n, ccfg.max_deg), jnp.int32),
+            sds((n, ccfg.max_deg), jnp.float32))
+    t0 = time.time()
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    print(mem)
+    coll = ra.parse_collectives(hlo, q)
+    if plant:
+        assert not coll.counts, (
+            f"PLaNT superstep must be collective-free, got {coll.counts}")
+    else:
+        assert coll.counts, "DGLL superstep must exchange labels"
+    # relaxation (min,+) work ≈ 2 flops/edge/sweep × diameter sweeps
+    sweeps = 64 if "road" in arch else 16
+    mf = 2.0 * ccfg.n * ccfg.max_deg * q * B * sweeps
+    roof = ra.analyze(cost, hlo, chips=q, model_flops_total=mf)
+    print({k: v for k, v in cost.items()
+           if k in ("flops", "bytes accessed")})
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": f"flat{q}" + ("(2pods)" if multi_pod else ""),
+        "variant": variant,
+        "chips": q, "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "roofline": roof.to_dict(),
+        "collective_free": plant and not coll.counts,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: str = "fsdp", variant: str = "baseline",
+             dm_shape=None) -> dict:
+    if arch.startswith("chl_"):
+        return run_chl_cell(arch, shape_name, multi_pod,
+                            variant=variant)
+    return run_lm_cell(arch, shape_name, multi_pod, rules, variant,
+                       dm_shape)
+
+
+def all_cells():
+    for arch in cfgbase.lm_arch_ids():
+        spec = cfgbase.get(arch)
+        for shape in cfgbase.SHAPES:
+            yield arch, shape.name, spec.skip_reason(shape.name)
+    for arch in ("chl_road", "chl_scalefree"):
+        for shape in CHL_SHAPES:
+            yield arch, shape, None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "pod", "both"),
+                    default="both")
+    ap.add_argument("--rules", default="fsdp",
+                    choices=("fsdp", "tp", "sp", "fsdp_opt"))
+    ap.add_argument("--variant", default="baseline",
+                    choices=("baseline", "opt", "opt_sub", "opt_acc4",
+                             "opt_acc4n", "opt_acc8n",
+                             "opt_acc8n_bf16s"))
+    ap.add_argument("--dm-shape", default=None,
+                    help="data x model per pod, e.g. 32x8")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    meshes = {"single": [False], "pod": [True],
+              "both": [False, True]}[args.mesh]
+    todo = (list(all_cells()) if args.all
+            else [(args.arch, args.shape, None)])
+
+    with open(args.out, "a") as f:
+        for arch, shape, skip in todo:
+            for multi_pod in meshes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                tag = f"{arch} × {shape} × {mesh_name}"
+                if skip:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": mesh_name, "status": "skip",
+                           "reason": skip}
+                    print(f"[skip] {tag}: {skip}")
+                else:
+                    print(f"[run ] {tag}")
+                    try:
+                        dm = (tuple(int(x) for x in
+                                    args.dm_shape.split("x"))
+                              if args.dm_shape else None)
+                        rec = run_cell(arch, shape, multi_pod,
+                                       args.rules, args.variant, dm)
+                        r = rec["roofline"]
+                        print(f"[ok  ] {tag} compile={rec['compile_s']}s"
+                              f" bottleneck={r['bottleneck']}")
+                    except cfgbase.SkipCell as e:
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": mesh_name, "status": "skip",
+                               "reason": str(e)}
+                    except Exception as e:
+                        traceback.print_exc()
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": mesh_name, "status": "error",
+                               "error": f"{type(e).__name__}: {e}"}
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+                jax.clear_caches()    # bound compiler-cache growth
+
+
+if __name__ == "__main__":
+    main()

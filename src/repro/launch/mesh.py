@@ -1,0 +1,43 @@
+"""Production mesh builders (functions, not module constants — importing
+this module never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         dm_shape: tuple[int, int] | None = None):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips).
+
+    Axes: ``pod`` (data-parallel across pods, hierarchical gradient
+    reduction), ``data`` (batch / FSDP), ``model`` (TP / EP).
+
+    ``dm_shape``: alternative (data, model) factorization of the 256
+    chips per pod — a §Perf lever: e.g. (32, 8) makes an 8-way TP axis
+    that divides awkward head counts (56, 8) where 16 does not.
+    """
+    dm = dm_shape or (16, 16)
+    assert dm[0] * dm[1] == 256, dm
+    shape = (2,) + dm if multi_pod else dm
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_flat_mesh(q: int | None = None):
+    """1-D ``node`` mesh over all devices — the CHL cluster view
+    (paper §5: q independent nodes)."""
+    devs = jax.devices()
+    q = len(devs) if q is None else q
+    return jax.make_mesh((q,), ("node",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def make_smoke_mesh():
+    """Whatever devices exist (usually 1 on CPU), 2-D named like prod."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

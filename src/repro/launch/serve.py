@@ -1,0 +1,81 @@
+"""Serving launcher: batched LM decode with prefill + sampling.
+
+    python -m repro.launch.serve --arch smollm_360m --smoke \
+        --batch 4 --prompt-len 32 --gen 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import model as mdl
+from repro.parallel.sharding import TP_RULES
+from repro.train.trainer import make_serve_fns
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args(argv)
+
+    spec = cfgbase.get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    mesh = make_smoke_mesh()
+    params, _ = mdl.init_params(cfg, jax.random.key(0))
+    prefill_fn, decode_fn = make_serve_fns(cfg, mesh, TP_RULES)
+    prefill_fn = jax.jit(prefill_fn)
+    decode_fn = jax.jit(decode_fn)
+
+    rng = np.random.default_rng(0)
+    B = args.batch
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, args.prompt_len)), jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.family == "vision":
+        batch["image_embeds"] = jnp.zeros(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jnp.zeros(
+            (B, cfg.n_audio_tokens, cfg.d_model), jnp.float32)
+
+    state = mdl.init_serve_state(cfg, B, args.prompt_len + args.gen)
+    t0 = time.time()
+    logits, state, mem = prefill_fn(params, batch, state)
+    t_prefill = time.time() - t0
+
+    key = jax.random.key(1)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, state = decode_fn(params, tok, state, mem)
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, logits / args.temperature, axis=-1
+        ).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    t_decode = time.time() - t0
+    tps = B * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill {args.prompt_len} toks × {B} seqs: {t_prefill:.2f}s")
+    print(f"decode  {args.gen-1} steps × {B} seqs: {t_decode:.2f}s "
+          f"({tps:.1f} tok/s)")
+    print(f"sample tokens[0,:16] = {gen[0, :16].tolist()}")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    return {"tokens": gen, "tok_per_s": tps}
+
+
+if __name__ == "__main__":
+    main()

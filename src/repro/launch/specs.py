@@ -1,0 +1,157 @@
+"""`input_specs()` — ShapeDtypeStruct stand-ins + shardings for every
+(arch × shape) dry-run cell. No device allocation happens here."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.models import model as mdl
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel.logical import spec_for
+from repro.train import trainer
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: cfgbase.ShapeSpec
+    kind: str                     # train | prefill | decode
+    step_name: str                # train_step | prefill | decode_step
+    args: Tuple[Any, ...]         # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    config: ModelConfig
+
+
+def _batch_specs(cfg: ModelConfig, B: int, S: int, kind: str
+                 ) -> Dict[str, jax.ShapeDtypeStruct]:
+    sds = jax.ShapeDtypeStruct
+    batch: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+    if kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    if cfg.family == "vision":
+        batch["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = sds((B, cfg.n_audio_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return batch
+
+
+def _mem_specs(cfg: ModelConfig, B: int) -> Optional[jax.ShapeDtypeStruct]:
+    """Cross memory carried from prefill into decode."""
+    if cfg.family == "vision":
+        return jax.ShapeDtypeStruct((B, cfg.n_image_tokens, cfg.d_model),
+                                    cfg.dtype)
+    if cfg.family == "encdec":
+        return jax.ShapeDtypeStruct((B, cfg.n_audio_tokens, cfg.d_model),
+                                    cfg.dtype)
+    return None
+
+
+OPT_OVERRIDES = dict(attn_chunk=512, loss_chunk=512, gqa_grouped=True,
+                     remat_policy="nothing")
+
+# variant → (config overrides, gradient-accumulation steps)
+VARIANTS = {
+    "baseline": ({}, 1),
+    "opt": (OPT_OVERRIDES, 1),
+    "opt_sub": (dict(OPT_OVERRIDES, remat_policy="sublayer"), 1),
+    "opt_acc4": (dict(OPT_OVERRIDES, remat_policy="sublayer"), 4),
+    "opt_acc4n": (OPT_OVERRIDES, 4),
+    "opt_acc8n": (OPT_OVERRIDES, 8),
+    "opt_acc8n_bf16s": (OPT_OVERRIDES, 8),
+}
+
+
+def apply_variant(cfg, variant: str):
+    over, _ = VARIANTS[variant]
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def variant_accum(variant: str) -> int:
+    return VARIANTS[variant][1]
+
+
+def make_cell(arch: str, shape_name: str, mesh: Mesh, *,
+              rules: Optional[Dict[str, Any]] = None,
+              ocfg: Optional[adamw.AdamWConfig] = None,
+              smoke: bool = False, variant: str = "baseline") -> Cell:
+    spec = cfgbase.get(arch)
+    cfg = apply_variant(spec.smoke if smoke else spec.config, variant)
+    shape = cfgbase.SHAPE_BY_NAME[shape_name]
+    reason = spec.skip_reason(shape_name)
+    if reason:
+        raise cfgbase.SkipCell(reason)
+    rules = rules or shd.FSDP_RULES
+    ocfg = ocfg or adamw.AdamWConfig(
+        master_copy=cfg.param_dtype == jnp.bfloat16,
+        state_dtype=jnp.bfloat16 if variant.endswith("bf16s")
+        else jnp.float32)
+    B, S = shape.global_batch, shape.seq_len
+    if smoke:
+        B, S = 2, 16
+
+    def bsh(tree):
+        def one(x):
+            names = ["batch"] + [None] * (len(x.shape) - 1)
+            return NamedSharding(mesh,
+                                 spec_for(names, rules, mesh, x.shape))
+        return jax.tree.map(one, tree)
+
+    if shape.kind == "train":
+        ts = trainer.abstract_train_state(cfg, ocfg)
+        ts_sh = trainer.state_shardings(cfg, ocfg, mesh, rules)
+        batch = _batch_specs(cfg, B, S, "train")
+        return Cell(arch=arch, shape=shape, kind="train",
+                    step_name="train_step",
+                    args=(ts, batch), in_shardings=(ts_sh, bsh(batch)),
+                    config=cfg)
+
+    params, axes = mdl.abstract_params(cfg)
+    p_sh = shd.resolve_params(axes, mesh, rules, params)
+
+    if shape.kind == "prefill":
+        batch = _batch_specs(cfg, B, S, "prefill")
+        st_sh, st = trainer.serve_state_shardings(cfg, mesh, rules, B, S)
+        return Cell(arch=arch, shape=shape, kind="prefill",
+                    step_name="prefill",
+                    args=(params, batch, st),
+                    in_shardings=(p_sh, bsh(batch), st_sh),
+                    config=cfg)
+
+    # decode: one new token against a seq_len-deep cache
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    st_sh, st = trainer.serve_state_shardings(cfg, mesh, rules, B, S)
+    mem = _mem_specs(cfg, B)
+    args: Tuple[Any, ...] = (params, token, st)
+    shards: Tuple[Any, ...] = (p_sh, bsh(token), st_sh)
+    if mem is not None:
+        args = args + (mem,)
+        shards = shards + (bsh(mem),)
+    return Cell(arch=arch, shape=shape, kind="decode",
+                step_name="decode_step",
+                args=args, in_shardings=shards, config=cfg)
+
+
+def cell_step_fn(cell: Cell, mesh: Mesh,
+                 rules: Optional[Dict[str, Any]] = None,
+                 ocfg: Optional[adamw.AdamWConfig] = None,
+                 accum_steps: int = 1):
+    rules = rules or shd.FSDP_RULES
+    cfg = cell.config
+    ocfg = ocfg or adamw.AdamWConfig(
+        master_copy=cfg.param_dtype == jnp.bfloat16)
+    if cell.kind == "train":
+        return trainer.make_train_step(cfg, ocfg, mesh, rules,
+                                       accum_steps=accum_steps)
+    prefill_fn, decode_fn = trainer.make_serve_fns(cfg, mesh, rules)
+    return prefill_fn if cell.kind == "prefill" else decode_fn

@@ -1,0 +1,102 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch smollm_360m --smoke \
+        --steps 300 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+Features exercised end-to-end: mesh + logical sharding rules, remat'd
+scan stacks, AdamW + schedule + clipping, deterministic resumable data,
+atomic async checkpointing, crash resume (--resume), elastic re-mesh
+on restore (the mesh is rebuilt from whatever devices exist).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import base as cfgbase
+from repro.data import DataConfig, DataState, SyntheticLM
+from repro.launch.mesh import make_smoke_mesh
+from repro.optim import adamw
+from repro.parallel.sharding import TP_RULES
+from repro.train import trainer
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    spec = cfgbase.get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    ocfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=20,
+                             total_steps=args.steps)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    pipe = SyntheticLM(dcfg)
+    mesh = make_smoke_mesh()
+    step_fn = jax.jit(trainer.make_train_step(cfg, ocfg, mesh, TP_RULES))
+
+    state = trainer.init_train_state(cfg, ocfg, jax.random.key(0))
+    dstate = DataState()
+    start = 0
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr and args.resume and mgr.latest_step() is not None:
+        tmpl = jax.eval_shape(lambda: trainer.init_train_state(
+            cfg, ocfg, jax.random.key(0)))
+        state, start, dd = mgr.restore(tmpl)
+        state = jax.tree.map(jnp.asarray, state)
+        dstate = DataState.from_dict(dd)
+        print(f"[resume] step {start}")
+
+    losses = []
+    t0 = time.time()
+    extras = {}
+    if cfg.family == "vision":
+        extras["image_embeds"] = jnp.zeros(
+            (dcfg.global_batch, cfg.n_image_tokens, cfg.d_model),
+            jnp.float32)
+    if cfg.family == "encdec":
+        extras["audio_embeds"] = jnp.zeros(
+            (dcfg.global_batch, cfg.n_audio_tokens, cfg.d_model),
+            jnp.float32)
+    for step in range(start, args.steps):
+        batch, dstate = pipe.batch(dstate)
+        batch = dict({k: jnp.asarray(v) for k, v in batch.items()},
+                     **extras)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, state, data_state=dstate.to_dict(),
+                     blocking=False)
+    if mgr:
+        mgr.wait()
+        if mgr.latest_step() != args.steps:
+            mgr.save(args.steps, state, data_state=dstate.to_dict())
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    return {"losses": losses, "state": state}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.common import ModelConfig
+from repro.models.model import (abstract_params, decode_step, init_params,
+                                init_serve_state, loss_fn, prefill)

@@ -1,0 +1,156 @@
+"""Model configuration + parameter containers shared by all families.
+
+Every parameter is created together with a tuple of *logical axis
+names* (e.g. ``("d_model", "q_heads", "head_dim")``). The sharding
+resolver (`repro.parallel.sharding`) maps logical names → mesh axes
+with divisibility fallback, which is how one rule set serves archs
+whose head counts (15, 4, 5, …) don't divide the TP axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]          # nested dict of arrays
+Axes = Dict[str, Any]            # matching nested dict of tuples
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # decoder | encdec | vision | xlstm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # ---- MoE ----
+    moe_experts: int = 0
+    moe_topk: int = 0
+    moe_every: int = 1            # FFN is MoE on layers with i % every == off
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    # ---- hybrid (jamba) ----
+    attn_every: int = 0           # layer i is attention iff i%every == off
+    attn_offset: int = 0
+    ssm_state: int = 16
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # ---- vision (llama-3.2-vision) ----
+    cross_attn_every: int = 0     # i % every == off → cross-attn layer
+    cross_attn_offset: int = 0
+    n_image_tokens: int = 1024
+    # ---- xLSTM ----
+    slstm_period: int = 0         # within a period, last layer is sLSTM
+    # ---- enc-dec (whisper) ----
+    enc_layers: int = 0
+    n_audio_tokens: int = 1500
+    # ---- common ----
+    head_dim: int = 0             # 0 → d_model // n_heads
+    act: str = "swiglu"           # swiglu | gelu
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16     # activation/compute dtype
+    param_dtype: Any = jnp.float32
+    # ---- perf knobs (§Perf hillclimb; 0 = paper-faithful baseline) --
+    attn_chunk: int = 0           # >0: online-softmax over KV chunks
+    loss_chunk: int = 0           # >0: chunked cross-entropy over seq
+    gqa_grouped: bool = False     # grouped einsum instead of KV repeat
+    remat_policy: str = "dots"    # dots | nothing (layer-group remat)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def is_moe_layer(self, i) -> bool:
+        if self.moe_experts == 0:
+            return False
+        return i % self.moe_every == self.moe_offset
+
+    def is_attn_layer(self, i) -> bool:
+        if self.attn_every == 0:
+            return True
+        return i % self.attn_every == self.attn_offset
+
+    def is_cross_layer(self, i) -> bool:
+        if self.cross_attn_every == 0:
+            return False
+        return i % self.cross_attn_every == self.cross_attn_offset
+
+    def is_slstm_layer(self, i) -> bool:
+        if self.slstm_period == 0:
+            return False
+        return i % self.slstm_period == self.slstm_period - 1
+
+    def param_count(self) -> int:
+        """Total parameters (exact, from abstract shapes)."""
+        from repro.models.model import abstract_params
+        shapes, _ = abstract_params(self)
+        return int(sum(int(np.prod(x.shape))
+                       for x in jax.tree.leaves(shapes)))
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: top-k of E experts)."""
+        from repro.models.model import abstract_params
+        shapes, axes = abstract_params(self)
+        total = 0
+        for leaf, ax in zip(jax.tree.leaves(shapes),
+                            jax.tree.leaves(axes, is_leaf=lambda x:
+                                            isinstance(x, tuple))):
+            size = int(np.prod(leaf.shape))
+            if isinstance(ax, tuple) and "experts" in ax:
+                size = size * self.moe_topk // max(1, self.moe_experts)
+            total += size
+        return total
+
+
+class ParamFactory:
+    """Collects (param, logical-axes) pairs during model init."""
+
+    def __init__(self, key: Optional[jax.Array], cfg: ModelConfig,
+                 abstract: bool = False):
+        self.key = key
+        self.cfg = cfg
+        self.abstract = abstract
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _split(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(self, path: str, shape: Tuple[int, ...], axes: Tuple[str, ...],
+            init: str = "normal", scale: float = 0.02):
+        assert len(shape) == len(axes), (path, shape, axes)
+        if self.abstract:
+            arr = jax.ShapeDtypeStruct(shape, self.cfg.param_dtype)
+        elif init == "zeros":
+            arr = jnp.zeros(shape, self.cfg.param_dtype)
+        elif init == "ones":
+            arr = jnp.ones(shape, self.cfg.param_dtype)
+        else:
+            arr = (jax.random.normal(self._split(), shape,
+                                     self.cfg.param_dtype) * scale)
+        _nested_set(self.params, path, arr)
+        _nested_set(self.axes, path, axes)
+
+
+def _nested_set(tree: dict, path: str, value) -> None:
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = value
+
+
+def get_path(tree: dict, path: str):
+    for p in path.split("/"):
+        tree = tree[p]
+    return tree

@@ -1,0 +1,231 @@
+"""Layer-stack assembly for all decoder-style families.
+
+The stack is a ``lax.scan`` over *groups*: the repeating layer pattern
+(period P = lcm of attention/MoE/cross/sLSTM periodicities) forms one
+group whose parameters are stacked ``[G, ...]`` on a leading axis.
+Scanning one compiled group body over G keeps HLO size (and compile
+time) independent of depth — essential for the 94–100-layer archs on
+the 512-way dry-run — and is the idiomatic production pattern
+(MaxText-style). Remat is applied to the group body.
+
+Families covered: ``decoder`` (dense/MoE), ``vision`` (interleaved
+cross-attention), ``hybrid`` (Jamba: Mamba + periodic attention +
+alternating MoE), ``xlstm`` (mLSTM/sLSTM), and the ``encdec`` decoder
+(self-attn + cross-attn every layer, ``with_cross=True``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ly
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.common import ModelConfig, ParamFactory
+from repro.parallel.logical import constrain
+
+Array = jax.Array
+
+
+def period(cfg: ModelConfig) -> int:
+    p = 1
+    for x in (cfg.attn_every, cfg.moe_every, cfg.cross_attn_every,
+              cfg.slstm_period):
+        if x:
+            p = math.lcm(p, x)
+    return p
+
+
+def layer_kind(cfg: ModelConfig, j: int) -> str:
+    """Kind of sub-layer j within a group (j ≡ global index mod P)."""
+    if cfg.family == "xlstm":
+        return "slstm" if cfg.is_slstm_layer(j) else "mlstm"
+    if cfg.family == "hybrid" and not cfg.is_attn_layer(j):
+        return "mamba"
+    if cfg.family == "vision" and cfg.is_cross_layer(j):
+        return "cross"
+    return "attn"
+
+
+def ffn_kind(cfg: ModelConfig, j: int) -> str:
+    if cfg.d_ff == 0:
+        return "none"
+    return "moe" if cfg.is_moe_layer(j) else "mlp"
+
+
+def init_stack(pf: ParamFactory, prefix: str, n_layers: int,
+               with_cross: bool = False) -> None:
+    """Parameters for one stack. ``with_cross``: every layer also
+    cross-attends (whisper decoder)."""
+    cfg = pf.cfg
+    P = period(cfg)
+    assert n_layers % P == 0, (n_layers, P)
+    G = n_layers // P
+    for j in range(P):
+        base = f"{prefix}/blk{j}"
+        kind = layer_kind(cfg, j)
+        ly.init_norm(pf, f"{base}/ln1", cfg.d_model, layers=G)
+        if kind in ("attn", "cross"):
+            ly.init_attention(pf, f"{base}/attn", G,
+                              cross=kind == "cross")
+        elif kind == "mamba":
+            mb.init_mamba(pf, f"{base}/mamba", G)
+        elif kind == "mlstm":
+            xl.init_mlstm(pf, f"{base}/mlstm", G)
+        elif kind == "slstm":
+            xl.init_slstm(pf, f"{base}/slstm", G)
+        if with_cross:
+            ly.init_norm(pf, f"{base}/lnx", cfg.d_model, layers=G)
+            ly.init_attention(pf, f"{base}/xattn", G)
+        fk = ffn_kind(cfg, j)
+        if fk != "none":
+            ly.init_norm(pf, f"{base}/ln2", cfg.d_model, layers=G)
+        if fk == "moe":
+            moe_mod.init_moe(pf, f"{base}/moe", G)
+        elif fk == "mlp":
+            ly.init_mlp(pf, f"{base}/mlp", G)
+
+
+def init_decode_state(cfg: ModelConfig, n_layers: int, B: int,
+                      S_max: int) -> Dict[str, Any]:
+    """Stacked per-group decode state for every sub-layer slot."""
+    P = period(cfg)
+    G = n_layers // P
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (G,) + x.shape), tree)
+
+    for j in range(P):
+        kind = layer_kind(cfg, j)
+        if kind in ("attn", "cross"):
+            c = ly.init_cache(cfg, B, S_max)
+            del c["pos"]
+            state[f"blk{j}"] = stack(c)
+        elif kind == "mamba":
+            state[f"blk{j}"] = stack(mb.init_mamba_state(cfg, B))
+        elif kind == "mlstm":
+            state[f"blk{j}"] = stack(xl.init_mlstm_state(cfg, B))
+        elif kind == "slstm":
+            state[f"blk{j}"] = stack(xl.init_slstm_state(cfg, B))
+    return state
+
+
+def run_stack(cfg: ModelConfig, params: Dict[str, Any], prefix: str,
+              n_layers: int, x: Array, *,
+              causal: bool = True,
+              cross_memory: Optional[Array] = None,
+              with_cross: bool = False,
+              decode_state: Optional[Dict[str, Any]] = None,
+              remat: bool = True,
+              ) -> Tuple[Array, Array, Optional[Dict[str, Any]]]:
+    """Run the stack. Returns (hidden, moe_aux_loss, new_decode_state)."""
+    P = period(cfg)
+    S_in = x.shape[1]
+    blocks = params[prefix]
+    pos0 = decode_state["pos"] if decode_state is not None else None
+
+    # remat_policy == "sublayer": checkpoint every sub-layer so the
+    # group backward holds ONE sub-layer's internals at a time (§Perf-3)
+    def maybe_ckpt(fn):
+        if remat and cfg.remat_policy == "sublayer":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn
+
+    def group_body(x, blk):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_states: Dict[str, Any] = {}
+        st_all = blk.get("_state")
+        for j in range(P):
+            p = blk[f"blk{j}"]
+            kind = layer_kind(cfg, j)
+            st_in = st_all[f"blk{j}"] if st_all is not None else None
+            h = ly.apply_norm(cfg, p["ln1"], x)
+            if kind in ("attn", "cross"):
+                src = cross_memory if kind == "cross" else None
+                if st_in is None:
+                    def attn_f(pp, hh, ss):
+                        return ly.attention(
+                            cfg, pp, hh, kv_src=ss, causal=causal,
+                            use_rope=cfg.rope_theta > 0)[0]
+                    h = maybe_ckpt(attn_f)(p["attn"], h, src)
+                else:
+                    cache = dict(st_in, pos=pos0)
+                    h, cache = ly.attention(
+                        cfg, p["attn"], h, kv_src=src, causal=causal,
+                        use_rope=cfg.rope_theta > 0, cache=cache)
+                    if cache is not None:
+                        cache.pop("pos", None)
+                        new_states[f"blk{j}"] = cache
+                    else:                      # cross: cache untouched
+                        new_states[f"blk{j}"] = st_in
+            elif kind == "mamba":
+                if st_in is None:
+                    h = maybe_ckpt(lambda pp, hh: mb.mamba_block(
+                        cfg, pp, hh)[0])(p["mamba"], h)
+                else:
+                    h, st = mb.mamba_block(cfg, p["mamba"], h,
+                                           state=st_in)
+                    new_states[f"blk{j}"] = st
+            elif kind == "mlstm":
+                if st_in is None:
+                    h = maybe_ckpt(lambda pp, hh: xl.mlstm_block(
+                        cfg, pp, hh)[0])(p["mlstm"], h)
+                else:
+                    h, st = xl.mlstm_block(cfg, p["mlstm"], h,
+                                           state=st_in)
+                    new_states[f"blk{j}"] = st
+            elif kind == "slstm":
+                if st_in is None:
+                    h = maybe_ckpt(lambda pp, hh: xl.slstm_block(
+                        cfg, pp, hh)[0])(p["slstm"], h)
+                else:
+                    h, st = xl.slstm_block(cfg, p["slstm"], h,
+                                           state=st_in)
+                    new_states[f"blk{j}"] = st
+            x = x + h
+            if with_cross:
+                h = ly.apply_norm(cfg, p["lnx"], x)
+                h = maybe_ckpt(lambda pp, hh, mm: ly.attention(
+                    cfg, pp, hh, kv_src=mm, causal=False,
+                    use_rope=False)[0])(p["xattn"], h, cross_memory)
+                x = x + h
+            fk = ffn_kind(cfg, j)
+            if fk == "moe":
+                h = ly.apply_norm(cfg, p["ln2"], x)
+                h, aux = maybe_ckpt(lambda pp, hh: moe_mod.moe_ffn(
+                    cfg, pp, hh))(p["moe"], h)
+                aux_total = aux_total + aux
+                x = x + h
+            elif fk == "mlp":
+                h = ly.apply_norm(cfg, p["ln2"], x)
+                h = maybe_ckpt(lambda pp, hh: ly.mlp(
+                    cfg, pp, hh))(p["mlp"], h)
+                x = x + h
+            x = constrain(x, "batch", "seq", "embed")
+        return x, (aux_total, new_states)
+
+    body = group_body
+    if remat:
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "nothing" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(group_body, policy=policy)
+
+    xs: Dict[str, Any] = dict(blocks)
+    if decode_state is not None:
+        xs["_state"] = {k: v for k, v in decode_state.items()
+                        if k != "pos"}
+    x, (auxs, states) = jax.lax.scan(body, x, xs)
+    new_state = None
+    if decode_state is not None:
+        new_state = dict(states)
+        new_state["pos"] = pos0 + S_in
+    return x, jnp.sum(auxs), new_state

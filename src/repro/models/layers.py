@@ -1,0 +1,286 @@
+"""Shared neural layers: norms, RoPE, GQA attention (train + cached
+decode), dense MLPs, embeddings. Pure functions over param dicts."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamFactory
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- norms
+
+def init_norm(pf: ParamFactory, path: str, d: int,
+              layers: Optional[int] = None) -> None:
+    shape = (d,) if layers is None else (layers, d)
+    axes = ("norm_d",) if layers is None else ("layers", "norm_d")
+    pf.add(f"{path}/scale", shape, axes, init="ones")
+    if pf.cfg.norm == "layernorm":
+        pf.add(f"{path}/bias", shape, axes, init="zeros")
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, Array], x: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int) -> Array:
+    half = d // 2
+    freqs = 10_000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(S, dtype=jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------ attention
+
+def init_attention(pf: ParamFactory, path: str, layers: int,
+                   cross: bool = False) -> None:
+    cfg = pf.cfg
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    L = (layers,)
+    la = ("layers",)
+    pf.add(f"{path}/wq", L + (d, H, hd), la + ("d_model", "q_heads",
+                                               "head_dim"))
+    pf.add(f"{path}/wk", L + (d, KV, hd), la + ("d_model", "kv_heads",
+                                                "head_dim"))
+    pf.add(f"{path}/wv", L + (d, KV, hd), la + ("d_model", "kv_heads",
+                                                "head_dim"))
+    pf.add(f"{path}/wo", L + (H, hd, d), la + ("q_heads", "head_dim",
+                                               "d_model"))
+    if cross:
+        pf.add(f"{path}/gate", L, la, init="zeros")   # tanh-gated x-attn
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _chunked_attention(cfg: ModelConfig, q: Array, k: Array, v: Array,
+                       q_pos: Array, kv_valid: Array) -> Array:
+    """Flash-attention pattern in pure JAX: lax.scan over KV chunks
+    with online softmax. Never materializes the [S, T] score matrix —
+    peak is [B, S, H, chunk]. q: [B,S,H,hd]; k/v: [B,T,KV,hd];
+    q_pos: [B,S] absolute positions; kv_valid: [T] bool.
+
+    Hillclimb §Perf-1/§Perf-3: kills the O(S·T) activation that made
+    the 32k-prefill and 4k-train cells exceed HBM.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    C = min(cfg.attn_chunk, T)
+    pad = (-T) % C
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = jnp.pad(kv_valid, (0, pad))
+    NC = (T + pad) // C
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def body(carry, idx):
+        m, l, acc = carry                  # [B,S,KV,G], …, [B,S,KV,G,hd]
+        kc = jax.lax.dynamic_slice_in_dim(k, idx * C, C, 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, idx * C, C, 1)
+        validc = jax.lax.dynamic_slice_in_dim(kv_valid, idx * C, C, 0)
+        kv_pos = idx * C + jnp.arange(C)
+        s = jnp.einsum("bskgh,btkh->bskgt", qg, kc)
+        s = s.astype(jnp.float32) * scale
+        mask = (q_pos[:, :, None] >= kv_pos[None, None, :]) & \
+            validc[None, None, :]
+        s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgt,btkh->bskgh", p.astype(cfg.dtype),
+                        vc).astype(jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, KV, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(NC))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, hd).astype(cfg.dtype)
+
+
+def attention(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
+              kv_src: Optional[Array] = None,
+              causal: bool = True,
+              positions: Optional[Array] = None,
+              use_rope: bool = True,
+              cache: Optional[Dict[str, Array]] = None,
+              ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """GQA attention.
+
+    x: [B, S, d]. ``kv_src``: cross-attention source (image/audio
+    memory) — keys/values computed from it instead of x.
+    ``cache``: {"k","v": [B, Smax, KV, hd], "pos": i32 []} for
+    incremental decode; x is then [B, 1, d].
+    Returns (out [B, S, d], updated cache).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_src is None else kv_src
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(cfg.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"]).astype(cfg.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"]).astype(cfg.dtype)
+
+    if positions is None:
+        pos_q = jnp.arange(S)[None, :]
+        if cache is not None:
+            pos_q = pos_q + cache["pos"]
+    else:
+        pos_q = positions
+    if use_rope and kv_src is None:
+        q = rope(q, pos_q, cfg.rope_theta)
+        k = rope(k, pos_q, cfg.rope_theta)
+
+    if cache is not None and kv_src is None:
+        # write new K/V at [pos, pos+S)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                 cache["pos"], axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                 cache["pos"], axis=1)
+        cache = dict(cache, k=ck, v=cv, pos=cache["pos"] + S)
+        k, v = ck, cv
+
+    T = k.shape[1]
+    if cfg.attn_chunk > 0 and kv_src is None and causal:
+        # §Perf: chunked online-softmax attention (no [S,T] buffer)
+        if cache is not None:
+            kv_valid = jnp.arange(T) < cache["pos"]
+            q_pos = jnp.broadcast_to(pos_q, (B, S))
+        else:
+            kv_valid = jnp.ones((T,), bool)
+            q_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        out = _chunked_attention(cfg, q, k, v, q_pos, kv_valid)
+    else:
+        if cfg.gqa_grouped and H != KV:
+            # §Perf: grouped einsum — no KV head replication in HBM
+            G = H // KV
+            qg = q.reshape(B, S, KV, G, hd)
+            scores = jnp.einsum("bskgh,btkh->bkgst", qg,
+                                k).astype(jnp.float32)
+            scores = scores / jnp.sqrt(jnp.float32(hd))
+            scores = _mask_scores(scores, cache, kv_src, causal,
+                                  pos_q, S, T, grouped=True)
+            w = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+            out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+            out = out.reshape(B, S, H, hd)
+        else:
+            kk = _repeat_kv(k, H // KV)
+            vv = _repeat_kv(v, H // KV)
+            scores = jnp.einsum("bshk,bthk->bhst", q,
+                                kk).astype(jnp.float32)
+            scores = scores / jnp.sqrt(jnp.float32(hd))
+            scores = _mask_scores(scores, cache, kv_src, causal,
+                                  pos_q, S, T, grouped=False)
+            w = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+            out = jnp.einsum("bhst,bthk->bshk", w, vv)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if "gate" in p:
+        out = out * jnp.tanh(p["gate"]).astype(cfg.dtype)
+    return out.astype(cfg.dtype), cache
+
+
+def _mask_scores(scores: Array, cache, kv_src, causal: bool,
+                 pos_q: Array, S: int, T: int, grouped: bool) -> Array:
+    """Apply decode-validity + causal masks. scores: [B,H,S,T] or
+    grouped [B,KV,G,S,T]."""
+    def expand(m):          # [B,S,T] or [S,T] → score rank
+        if m.ndim == 2:
+            m = m[None]
+        return m[:, None, None] if grouped else m[:, None]
+
+    if cache is not None and kv_src is None:
+        valid = jnp.arange(T)[None, :] < cache["pos"]
+        causal_m = (pos_q[:, :, None] >= jnp.arange(T)[None, None, :])
+        mask = valid[:, None, :] & causal_m
+        return jnp.where(expand(mask), scores, -jnp.inf)
+    if causal and kv_src is None:
+        causal_m = jnp.tril(jnp.ones((S, T), dtype=bool))
+        return jnp.where(expand(causal_m), scores, -jnp.inf)
+    return scores
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int) -> Dict[str, Array]:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jnp.zeros((B, S_max, KV, hd), cfg.dtype),
+            "v": jnp.zeros((B, S_max, KV, hd), cfg.dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+# ----------------------------------------------------------------- MLP
+
+def init_mlp(pf: ParamFactory, path: str, layers: int) -> None:
+    cfg = pf.cfg
+    d, f = cfg.d_model, cfg.d_ff
+    L, la = (layers,), ("layers",)
+    if cfg.act == "swiglu":
+        pf.add(f"{path}/wi", L + (d, 2, f), la + ("d_model", "gate2", "ff"))
+    else:
+        pf.add(f"{path}/wi", L + (d, 1, f), la + ("d_model", "gate2", "ff"))
+    pf.add(f"{path}/wo", L + (f, d), la + ("ff", "d_model"))
+
+
+def mlp(cfg: ModelConfig, p: Dict[str, Array], x: Array) -> Array:
+    h = jnp.einsum("bsd,dgf->bsgf", x, p["wi"]).astype(cfg.dtype)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    else:
+        h = jax.nn.gelu(h[..., 0, :])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"]).astype(cfg.dtype)
+
+
+# ----------------------------------------------------------- embeddings
+
+def init_embeddings(pf: ParamFactory, path: str = "embed") -> None:
+    cfg = pf.cfg
+    # distinct logical name for the embedding-row dim: FSDP rules may
+    # exempt it (token gathers across a sharded row dim trigger XLA's
+    # involuntary-rematerialization path — §Perf-3)
+    pf.add(f"{path}/tok", (cfg.vocab, cfg.d_model), ("vocab", "embed_d"))
+    if not cfg.tie_embeddings:
+        pf.add(f"{path}/out", (cfg.d_model, cfg.vocab),
+               ("embed_d", "vocab"))
+
+
+def embed(cfg: ModelConfig, p: Dict[str, Array], tokens: Array) -> Array:
+    return p["tok"].astype(cfg.dtype)[tokens]
+
+
+def unembed(cfg: ModelConfig, p: Dict[str, Array], x: Array) -> Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(cfg.dtype))

@@ -1,0 +1,144 @@
+"""Mamba-style selective SSM block (for the Jamba hybrid).
+
+TPU adaptation: the CUDA "hardware-aware" fused scan becomes a
+**chunked associative scan** — sequence split into ``ssm_chunk``-length
+chunks processed sequentially by ``lax.scan`` (carrying the SSM state),
+with a parallel ``associative_scan`` inside each chunk. The big
+``[B, S, d_inner, d_state]`` tensor of the naive formulation never
+materializes: peak is ``[B, chunk, d_inner, d_state]`` with d_inner
+sharded over the ``model`` axis.
+
+Decode is the exact recurrent step on the carried state
+``[B, d_inner, d_state]`` (+ conv tail of length ``ssm_conv``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamFactory
+
+Array = jax.Array
+
+
+def d_inner_of(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(pf: ParamFactory, path: str, layers: int) -> None:
+    cfg = pf.cfg
+    d, di, ds = cfg.d_model, d_inner_of(cfg), cfg.ssm_state
+    L, la = (layers,), ("layers",)
+    pf.add(f"{path}/win", L + (d, 2, di), la + ("d_model", "gate2", "ssm_i"))
+    pf.add(f"{path}/conv", L + (cfg.ssm_conv, di), la + ("conv", "ssm_i"))
+    pf.add(f"{path}/wbc", L + (di, 2, ds), la + ("ssm_i", "gate2", "ssm_s"))
+    pf.add(f"{path}/wdt", L + (di,), la + ("ssm_i",), init="zeros")
+    pf.add(f"{path}/alog", L + (di, ds), la + ("ssm_i", "ssm_s"),
+           init="zeros")
+    pf.add(f"{path}/dskip", L + (di,), la + ("ssm_i",), init="ones")
+    pf.add(f"{path}/wout", L + (di, d), la + ("ssm_i", "d_model"))
+
+
+def _ssm_scan_chunked(cfg: ModelConfig, dt: Array, bmat: Array,
+                      c: Array, xc: Array, amat: Array, h0: Array
+                      ) -> Tuple[Array, Array]:
+    """Linear recurrence h_t = ā_t ⊙ h_{t-1} + (dt·B·x)_t; y_t = C·h_t.
+
+    The discretized tensors ``ā = exp(dt·A)`` and ``dt·B·x`` have shape
+    [B, S, di, ds] — materializing them over the full sequence is the
+    §Perf-3 memory bug (ds× the activation volume). They are built
+    *per chunk inside the scan*, so the live set is [B, chunk, di, ds].
+
+    dt/xc: [B, S, di]; bmat/c: [B, S, ds]; amat: [di, ds];
+    h0: [B, di, ds] (f32). Returns (y [B, S, di] f32, h_final).
+    """
+    B, S, di = dt.shape
+    ds = amat.shape[1]
+    ch = min(cfg.ssm_chunk, S)
+    pad = (-S) % ch
+    if pad:
+        # identity-extend: dt=0 ⇒ ā=1 keeps h and adds nothing; c=0
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // ch
+
+    def chunk_step(h, args):
+        dtc, bc, cc, xcc = args    # [B,ch,di], [B,ch,ds], ., [B,ch,di]
+        dtf = dtc.astype(jnp.float32)
+        ac = jnp.exp(dtf[..., None] * amat[None, None])     # [B,ch,di,ds]
+        bxc = (dtf * xcc.astype(jnp.float32))[..., None] * \
+            bc.astype(jnp.float32)[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(combine, (ac, bxc), axis=1)
+        hs = aa * h[:, None] + bb                # [B, ch, di, ds]
+        y = jnp.einsum("bcdz,bcz->bcd", hs,
+                       cc.astype(jnp.float32))
+        return hs[:, -1], y
+
+    split = lambda t: t.reshape(B, nc, ch, *t.shape[2:]).swapaxes(0, 1)
+    # remat the chunk: the backward pass recomputes the intra-chunk
+    # associative scan instead of saving its O(log ch) level tensors —
+    # per-chunk residuals drop from ~GBs to the [B, di, ds] carry.
+    body = jax.checkpoint(chunk_step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    h_last, ys = jax.lax.scan(
+        body, h0, (split(dt), split(bmat), split(c), split(xc)))
+    y = ys.swapaxes(0, 1).reshape(B, S_p, di)[:, :S]
+    return y, h_last
+
+
+def mamba_block(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
+                state: Optional[Dict[str, Array]] = None,
+                ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """x: [B, S, d]. ``state`` = {"h": [B,di,ds], "conv": [B,cw-1,di]}
+    for incremental decode (S small, typically 1)."""
+    B, S, d = x.shape
+    di, ds, cw = d_inner_of(cfg), cfg.ssm_state, cfg.ssm_conv
+
+    xz = jnp.einsum("bsd,dgi->bsgi", x, p["win"].astype(cfg.dtype))
+    xi, z = xz[..., 0, :], xz[..., 1, :]                  # [B, S, di]
+
+    # causal depthwise conv over sequence
+    if state is not None:
+        xpad = jnp.concatenate([state["conv"], xi], axis=1)
+        new_conv = xpad[:, -(cw - 1):] if cw > 1 else xpad[:, :0]
+    else:
+        xpad = jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0)))
+        new_conv = xpad[:, -(cw - 1):] if cw > 1 else xpad[:, :0]
+    conv = sum(xpad[:, k:k + S] * p["conv"][k].astype(cfg.dtype)
+               for k in range(cw))
+    xc = jax.nn.silu(conv)                                # [B, S, di]
+
+    bc = jnp.einsum("bsi,igz->bsgz", xc, p["wbc"].astype(cfg.dtype))
+    bmat, cmat = bc[..., 0, :], bc[..., 1, :]             # [B, S, ds]
+    # per-channel step size (softplus-gated, zero-init → dt ≈ ln 2)
+    dt = jax.nn.softplus(xc * p["wdt"].astype(cfg.dtype)
+                         + 1.0)                           # [B, S, di]
+    amat = -jnp.exp(p["alog"].astype(jnp.float32))        # [di, ds]
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, di, ds), jnp.float32))
+    y, h_last = _ssm_scan_chunked(cfg, dt, bmat, cmat, xc, amat, h0)
+    y = y.astype(cfg.dtype) + xc * p["dskip"].astype(cfg.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["wout"].astype(cfg.dtype))
+    new_state = (None if state is None
+                 else {"h": h_last, "conv": new_conv})
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, B: int) -> Dict[str, Array]:
+    di, ds, cw = d_inner_of(cfg), cfg.ssm_state, cfg.ssm_conv
+    return {"h": jnp.zeros((B, di, ds), jnp.float32),
+            "conv": jnp.zeros((B, cw - 1, di), cfg.dtype)}

@@ -1,0 +1,195 @@
+"""Model facade: init / abstract shapes / loss / prefill / decode for
+every architecture family behind one API.
+
+Batch conventions (also the dry-run `input_specs()` contract):
+- train:   {"tokens": i32 [B, S], "labels": i32 [B, S]}
+           (+ "image_embeds" f32 [B, N_img, d] for vision,
+              "audio_embeds" f32 [B, N_aud, d] for encdec)
+- prefill: tokens (+ modality embeds) → (last-token logits, state)
+- decode:  {"token": i32 [B, 1]} + carried state → (logits, state)
+
+Modality frontends are stubs per the assignment: embeddings arrive
+precomputed (``input_specs`` supplies the arrays).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder as dec
+from repro.models import layers as ly
+from repro.models.common import Axes, ModelConfig, ParamFactory, Params
+from repro.parallel.logical import constrain
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------- init
+
+def _build(pf: ParamFactory) -> None:
+    cfg = pf.cfg
+    ly.init_embeddings(pf)
+    if cfg.family == "encdec":
+        dec.init_stack(pf, "enc", cfg.enc_layers)
+        dec.init_stack(pf, "dec", cfg.n_layers - cfg.enc_layers,
+                       with_cross=True)
+        ly.init_norm(pf, "enc_ln", cfg.d_model)
+    else:
+        dec.init_stack(pf, "dec", cfg.n_layers)
+    ly.init_norm(pf, "final_ln", cfg.d_model)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Axes]:
+    pf = ParamFactory(key, cfg)
+    _build(pf)
+    return pf.params, pf.axes
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Params, Axes]:
+    pf = ParamFactory(None, cfg, abstract=True)
+    _build(pf)
+    return pf.params, pf.axes
+
+
+# ------------------------------------------------------------- forward
+
+def _dec_layers(cfg: ModelConfig) -> int:
+    return (cfg.n_layers - cfg.enc_layers if cfg.family == "encdec"
+            else cfg.n_layers)
+
+
+def _embed_tokens(cfg: ModelConfig, params: Params, tokens: Array,
+                  pos_offset: Optional[Array] = None) -> Array:
+    x = ly.embed(cfg, params["embed"], tokens)
+    if cfg.rope_theta == 0:          # whisper-style absolute positions
+        S = tokens.shape[1]
+        pos = ly.sinusoidal_positions(cfg.n_audio_tokens + S + 8,
+                                      cfg.d_model)
+        if pos_offset is None:
+            x = x + pos[None, :S].astype(cfg.dtype)
+        else:
+            sl = jax.lax.dynamic_slice_in_dim(pos, pos_offset, S, 0)
+            x = x + sl[None].astype(cfg.dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _encode(cfg: ModelConfig, params: Params, audio: Array,
+            remat: bool) -> Array:
+    pos = ly.sinusoidal_positions(audio.shape[1], cfg.d_model)
+    x = audio.astype(cfg.dtype) + pos[None].astype(cfg.dtype)
+    x, _, _ = dec.run_stack(cfg, params, "enc", cfg.enc_layers, x,
+                            causal=False, remat=remat)
+    return ly.apply_norm(cfg, params["enc_ln"], x)
+
+
+def _cross_memory(cfg: ModelConfig, params: Params,
+                  batch: Dict[str, Array], remat: bool
+                  ) -> Optional[Array]:
+    if cfg.family == "encdec":
+        return _encode(cfg, params, batch["audio_embeds"], remat)
+    if cfg.family == "vision":
+        return batch["image_embeds"].astype(cfg.dtype)
+    return None
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Array],
+            *, remat: bool = True, aux_weight: float = 0.01
+            ) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token cross entropy (+ MoE balance aux)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x = _embed_tokens(cfg, params, tokens)
+    mem = _cross_memory(cfg, params, batch, remat)
+    x, aux, _ = dec.run_stack(
+        cfg, params, "dec", _dec_layers(cfg), x,
+        causal=True, cross_memory=mem,
+        with_cross=cfg.family == "encdec", remat=remat)
+    x = ly.apply_norm(cfg, params["final_ln"], x)
+    nll = _cross_entropy(cfg, params, x, labels)
+    loss = nll + aux_weight * aux
+    mask = (labels >= 0).astype(jnp.float32)
+    return loss, {"nll": nll, "aux": aux, "tokens": jnp.sum(mask)}
+
+
+def _ce_terms(cfg: ModelConfig, params: Params, x: Array,
+              labels: Array) -> Array:
+    """Σ masked (logsumexp − target-logit) over a [B, S', d] slice."""
+    logits = ly.unembed(cfg, params["embed"], x)
+    logits = constrain(logits, "batch", "seq", "vocab_act")
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32),
+        jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask)
+
+
+def _cross_entropy(cfg: ModelConfig, params: Params, x: Array,
+                   labels: Array) -> Array:
+    """Mean NLL; optionally chunked over the sequence (§Perf: the
+    [B, S, V] logits buffer never materializes — each chunk's logits
+    are rematerialized in the backward pass via jax.checkpoint)."""
+    B, S, _ = x.shape
+    mask_total = jnp.maximum(
+        jnp.sum((labels >= 0).astype(jnp.float32)), 1.0)
+    C = cfg.loss_chunk
+    if C <= 0 or S % C != 0 or S <= C:
+        return _ce_terms(cfg, params, x, labels) / mask_total
+
+    def body(tot, idx):
+        xs = jax.lax.dynamic_slice_in_dim(x, idx * C, C, 1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * C, C, 1)
+        return tot + _ce_terms(cfg, params, xs, ls), None
+
+    body = jax.checkpoint(body)
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                          jnp.arange(S // C))
+    return tot / mask_total
+
+
+# -------------------------------------------------------------- serving
+
+def init_serve_state(cfg: ModelConfig, B: int, S_max: int,
+                     ) -> Dict[str, Any]:
+    return dec.init_decode_state(cfg, _dec_layers(cfg), B, S_max)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Array],
+            state: Dict[str, Any], *, remat: bool = False,
+            ) -> Tuple[Array, Dict[str, Any], Optional[Array]]:
+    """Consume the prompt, fill caches; returns (last logits, state,
+    cross memory to carry into decode)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens,
+                      pos_offset=state["pos"] if cfg.rope_theta == 0
+                      else None)
+    mem = _cross_memory(cfg, params, batch, remat)
+    x, _, state = dec.run_stack(
+        cfg, params, "dec", _dec_layers(cfg), x,
+        causal=True, cross_memory=mem,
+        with_cross=cfg.family == "encdec",
+        decode_state=state, remat=remat)
+    x = ly.apply_norm(cfg, params["final_ln"], x[:, -1:])
+    logits = ly.unembed(cfg, params["embed"], x)
+    return logits[:, 0], state, mem
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: Array,
+                state: Dict[str, Any],
+                cross_memory: Optional[Array] = None,
+                ) -> Tuple[Array, Dict[str, Any]]:
+    """One token for every sequence in the batch. token: i32 [B, 1]."""
+    x = _embed_tokens(cfg, params, token,
+                      pos_offset=state["pos"] if cfg.rope_theta == 0
+                      else None)
+    x, _, state = dec.run_stack(
+        cfg, params, "dec", _dec_layers(cfg), x,
+        causal=True, cross_memory=cross_memory,
+        with_cross=cfg.family == "encdec",
+        decode_state=state, remat=False)
+    x = ly.apply_norm(cfg, params["final_ln"], x)
+    logits = ly.unembed(cfg, params["embed"], x)
+    return logits[:, 0], state

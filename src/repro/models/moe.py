@@ -1,0 +1,92 @@
+"""Top-k routed Mixture-of-Experts FFN (capacity-based dispatch).
+
+GShard-style einsum dispatch with **token groups**: tokens are split
+into groups of ``moe_group`` tokens; each group routes its tokens to
+per-group expert capacity ``C = group·k·cf/E``. The dispatch/combine
+one-hots are built by a K-step accumulation so the peak intermediate
+is ``[G, Sg, E, C]`` with Sg bounded — not the naive ``[T, K, E, C]``.
+Everything is dense linear algebra, SPMD-partitionable over the
+``experts`` logical axis (EP on the ``model`` mesh axis) with groups
+following the batch ("data") sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamFactory
+
+Array = jax.Array
+
+MOE_GROUP = 1024          # tokens per routing group
+
+
+def init_moe(pf: ParamFactory, path: str, layers: int) -> None:
+    cfg = pf.cfg
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    L, la = (layers,), ("layers",)
+    pf.add(f"{path}/router", L + (d, E), la + ("d_model", "experts_r"))
+    g = 2 if cfg.act == "swiglu" else 1
+    pf.add(f"{path}/wi", L + (E, d, g, f),
+           la + ("experts", "d_model", "gate2", "ff"))
+    pf.add(f"{path}/wo", L + (E, f, d), la + ("experts", "ff", "d_model"))
+
+
+def group_capacity(cfg: ModelConfig, group: int) -> int:
+    c = int(group * cfg.moe_topk * cfg.capacity_factor
+            / cfg.moe_experts) + 1
+    return max(4, -(-c // 4) * 4)                 # multiple of 4
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict[str, Array], x: Array
+            ) -> Tuple[Array, Array]:
+    """x: [B, S, d] → (out [B, S, d], aux load-balancing loss [])."""
+    B, S, d = x.shape
+    E, K = cfg.moe_experts, cfg.moe_topk
+    T = B * S
+    Sg = min(MOE_GROUP, T)
+    assert T % Sg == 0, (T, Sg)
+    G = T // Sg
+    C = group_capacity(cfg, Sg)
+    xt = x.reshape(G, Sg, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt, p["router"].astype(cfg.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_v, gate_i = jax.lax.top_k(probs, K)               # [G, Sg, K]
+    gate_v = gate_v / jnp.sum(gate_v, axis=-1, keepdims=True)
+
+    # auxiliary load-balance loss (Switch §4): E · Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_i, E, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # per-(group, expert) running occupancy; K accumulation steps keep
+    # the peak live tensor at [G, Sg, E, C]
+    dispatch = jnp.zeros((G, Sg, E, C), dtype=cfg.dtype)
+    combine = jnp.zeros((G, Sg, E, C), dtype=cfg.dtype)
+    used = jnp.zeros((G, E), dtype=jnp.int32)
+    for k in range(K):
+        oh = jax.nn.one_hot(gate_i[..., k], E, dtype=jnp.int32)  # [G,Sg,E]
+        pos = used[:, None, :] + jnp.cumsum(oh, axis=1) - oh
+        keep = (pos < C) & (oh > 0)
+        mask_k = (oh * keep).astype(cfg.dtype)             # [G, Sg, E]
+        # one_hot(pos≥C) is all-zero, so overflowing tokens drop out
+        d_k = mask_k[..., None] * jax.nn.one_hot(pos, C, dtype=cfg.dtype)
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate_v[..., k, None, None].astype(
+            cfg.dtype)
+        used = used + jnp.sum(oh, axis=1)
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch, xt)       # [E, G, C, d]
+    h = jnp.einsum("egcd,edif->egcif", xin, p["wi"].astype(cfg.dtype))
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    else:
+        h = jax.nn.gelu(h[..., 0, :])
+    xout = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(cfg.dtype))
+    out = jnp.einsum("gsec,egcd->gsd", combine, xout)
+    return out.reshape(B, S, d), aux

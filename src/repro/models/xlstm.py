@@ -1,0 +1,194 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan) — for the ``xlstm-125m`` arch.
+
+mLSTM follows the paper's parallel formulation inside chunks (linear
+attention with exponential input gates and cumulative forget-gate
+decay, log-space stabilized), carrying the matrix memory
+``C [B, H, hd, hd]`` and normalizer ``n [B, H, hd]`` across chunks.
+sLSTM is inherently sequential (recurrent gate feedback) and runs as a
+``lax.scan`` over time. Both support O(1)-state incremental decode —
+this is why the ``long_500k`` cell *runs* for this family
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamFactory
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------- mLSTM
+
+def init_mlstm(pf: ParamFactory, path: str, layers: int) -> None:
+    cfg = pf.cfg
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    L, la = (layers,), ("layers",)
+    pf.add(f"{path}/wqkv", L + (d, 3, H, hd),
+           la + ("d_model", "gate3", "q_heads", "head_dim"))
+    pf.add(f"{path}/wif", L + (d, 2, H), la + ("d_model", "gate2",
+                                               "q_heads"), init="zeros")
+    pf.add(f"{path}/wo", L + (H, hd, d), la + ("q_heads", "head_dim",
+                                               "d_model"))
+    pf.add(f"{path}/ogate", L + (d, H, hd),
+           la + ("d_model", "q_heads", "head_dim"))
+
+
+def mlstm_block(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
+                state: Optional[Dict[str, Array]] = None,
+                ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """Chunkwise-parallel mLSTM. x: [B, S, d]."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    qkv = jnp.einsum("bsd,dghk->bsghk", x, p["wqkv"].astype(cfg.dtype))
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]   # [B,S,H,hd]
+    k = k / jnp.sqrt(jnp.float32(hd)).astype(cfg.dtype)
+    gates = jnp.einsum("bsd,dgh->bsgh", x, p["wif"].astype(cfg.dtype))
+    logi = gates[:, :, 0].astype(jnp.float32)            # [B, S, H]
+    logf = jax.nn.log_sigmoid(gates[:, :, 1].astype(jnp.float32) + 4.0)
+
+    ch = min(cfg.ssm_chunk, S)
+    pad = (-S) % ch
+    if pad:
+        # identity-extend: f-gate 1 (log 0) keeps state, i-gate −inf
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // ch
+
+    def chunk(carry, args):
+        C, n, m = carry          # C [B,H,hd,hd], n [B,H,hd], m [B,H]
+        qc, kc, vc, lic, lfc = args
+        # cumulative log-forget within the chunk (inclusive)
+        F = jnp.cumsum(lfc, axis=1)                      # [B, ch, H]
+        # stabilizer: running max of (input-gate + future-decay) terms
+        a = lic + F                                       # [B, ch, H]
+        m_new = jnp.maximum(m + F[:, -1], jnp.max(a, axis=1) -
+                            0.0)                          # [B, H]
+        # intra-chunk pairwise decay: D[t, τ] = F_t − F_τ  (τ ≤ t)
+        Dmat = F[:, :, None, :] - F[:, None, :, :]        # [B,ch,ch,H]
+        tri = jnp.tril(jnp.ones((ch, ch), bool))
+        # attention-like intra-chunk term, stabilized by m_new
+        logw = jnp.where(tri[None, :, :, None],
+                         Dmat + lic[:, None, :, :], -jnp.inf)
+        # stabilize per (b, t, h) by m_new? use global chunk stabilizer
+        w = jnp.exp(logw - m_new[:, None, None, :])       # [B,ch,ch,H]
+        scores = jnp.einsum("bthk,bwhk->btwh", qc, kc)    # [B,ch,ch,H]
+        intra = jnp.einsum("btwh,btwh,bwhk->bthk",
+                           scores.astype(jnp.float32), w,
+                           vc.astype(jnp.float32))
+        inter_scale = jnp.exp(F + m[:, None] - m_new[:, None])
+        inter = jnp.einsum("bthk,bhkl,bth->bthl",
+                           qc.astype(jnp.float32), C, inter_scale)
+        # normalizer: |q·n| with the same intra/inter decomposition
+        nz_intra = jnp.einsum("btwh,btwh->bth",
+                              scores.astype(jnp.float32), w)
+        nz_inter = jnp.einsum("bthk,bhk,bth->bth",
+                              qc.astype(jnp.float32), n, inter_scale)
+        den = jnp.abs(nz_intra + nz_inter)
+        y = (intra + inter) / jnp.maximum(den, 1.0)[..., None]
+        # carry update: C' = exp(F_T) C + Σ_τ exp(F_T − F_τ + i_τ) k v^T
+        decay_all = jnp.exp(F[:, -1:, :] - F + lic
+                            - m_new[:, None])             # [B, ch, H]
+        C_new = (jnp.exp(F[:, -1] + m - m_new)[..., None, None] * C
+                 + jnp.einsum("bthk,bth,bthl->bhkl",
+                              kc.astype(jnp.float32), decay_all,
+                              vc.astype(jnp.float32)))
+        n_new = (jnp.exp(F[:, -1] + m - m_new)[..., None] * n
+                 + jnp.einsum("bthk,bth->bhk", kc.astype(jnp.float32),
+                              decay_all))
+        return (C_new, n_new, m_new), y
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    split = lambda t: t.reshape(B, nc, ch, *t.shape[2:]).swapaxes(0, 1)
+    body = jax.checkpoint(chunk,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (Cf, nf, mf), ys = jax.lax.scan(
+        body, (C0, n0, m0),
+        (split(q), split(k), split(v),
+         split(logi), split(logf)))
+    y = ys.swapaxes(0, 1).reshape(B, S_p, H, hd)[:, :S].astype(cfg.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x,
+                                   p["ogate"].astype(cfg.dtype)))
+    out = jnp.einsum("bshk,hkd->bsd", y * og, p["wo"].astype(cfg.dtype))
+    new_state = (None if state is None
+                 else {"C": Cf, "n": nf, "m": mf})
+    return out.astype(cfg.dtype), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, B: int) -> Dict[str, Array]:
+    H, hd = cfg.n_heads, cfg.hd
+    return {"C": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((B, H, hd), jnp.float32),
+            "m": jnp.zeros((B, H), jnp.float32)}
+
+
+# ------------------------------------------------------------- sLSTM
+
+def init_slstm(pf: ParamFactory, path: str, layers: int) -> None:
+    cfg = pf.cfg
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    L, la = (layers,), ("layers",)
+    pf.add(f"{path}/wx", L + (d, 4, H, hd),
+           la + ("d_model", "gate4", "q_heads", "head_dim"))
+    pf.add(f"{path}/wr", L + (H, hd, 4, hd),
+           la + ("q_heads", "head_dim", "gate4", "head_dim2"),
+           scale=0.01)
+    pf.add(f"{path}/wo", L + (H, hd, d), la + ("q_heads", "head_dim",
+                                               "d_model"))
+
+
+def slstm_block(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
+                state: Optional[Dict[str, Array]] = None,
+                ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """Sequential sLSTM (recurrent gate feedback → lax.scan over S)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    zx = jnp.einsum("bsd,dghk->bsghk", x,
+                    p["wx"].astype(cfg.dtype)).astype(jnp.float32)
+
+    def step(carry, zt):
+        c, n, h = carry                         # [B, H, hd] each
+        rec = jnp.einsum("bhk,hkgl->bghl", h,
+                         p["wr"].astype(jnp.float32))
+        z, i, f, o = [zt[:, g] + rec[:, g] for g in range(4)]
+        ig = jnp.exp(jnp.minimum(i, 10.0))      # stabilized exp gate
+        fg = jax.nn.sigmoid(f + 1.0)
+        c_new = fg * c + ig * jnp.tanh(z)
+        n_new = fg * n + ig
+        h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new), h_new
+
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        carry = (zeros, zeros, zeros)
+    else:
+        carry = (state["c"], state["n"], state["h"])
+    carry, hs = jax.lax.scan(step, carry, zx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(cfg.dtype)     # [B, S, H, hd]
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(cfg.dtype))
+    new_state = (None if state is None else
+                 {"c": carry[0], "n": carry[1], "h": carry[2]})
+    return out, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, B: int) -> Dict[str, Array]:
+    H, hd = cfg.n_heads, cfg.hd
+    zeros = jnp.zeros((B, H, hd), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros}

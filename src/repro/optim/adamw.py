@@ -1,0 +1,103 @@
+"""AdamW with decoupled weight decay, global-norm clipping and
+optional f32 master copies for bf16 params. Pure pytree functions
+(no optax dependency — the substrate is built in-repo per the brief)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    master_copy: bool = False    # keep f32 master when params are bf16
+    state_dtype: Any = jnp.float32   # bf16 → halve m/v memory (§Perf)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+    master: Optional[Params]
+
+
+def init(cfg: AdamWConfig, params: Params) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    master = None
+    if cfg.master_copy:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_frac."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply(cfg: AdamWConfig, state: OptState, params: Params,
+          grads: Params) -> Tuple[Params, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        ref = master if master is not None else p.astype(jnp.float32)
+        delta = lr * ((m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+                      + cfg.weight_decay * ref)
+        new_ref = ref - delta
+        return (new_ref.astype(p.dtype), m32.astype(cfg.state_dtype),
+                v32.astype(cfg.state_dtype), new_ref)
+
+    if state.master is not None:
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu,
+                           state.master)
+    else:
+        out = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
+                           params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_master = None
+    if state.master is not None:
+        new_master = jax.tree.map(lambda t: t[3], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu,
+                                master=new_master), \
+        {"grad_norm": gnorm, "lr": lr}

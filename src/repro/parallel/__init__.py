@@ -1,0 +1,4 @@
+from repro.parallel.logical import axis_rules, constrain, spec_for
+from repro.parallel.sharding import (FSDP_RULES, SP_RULES, TP_RULES,
+                                     batch_sharding, head_dim_fallback,
+                                     replicated, resolve_params)

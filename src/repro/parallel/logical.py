@@ -1,0 +1,90 @@
+"""Logical-axis sharding context (MaxText-style ``nn.logical axes``).
+
+Models annotate activations with *logical* names
+(``constrain(x, "batch", "seq", "embed")``); a thread-level context set
+by the trainer/launcher maps logical names → mesh axes. Outside a
+context the call is the identity, so pure-CPU smoke tests need no mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import AbstractMesh, Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | AbstractMesh,
+               rules: Dict[str, MeshAxes]):
+    """Activate logical→mesh mapping for `constrain` calls."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_rules() -> Optional[Tuple[Mesh, Dict[str, MeshAxes]]]:
+    return getattr(_ctx, "state", None)
+
+
+def spec_for(names: Sequence[Optional[str]],
+             rules: Dict[str, MeshAxes],
+             mesh: Mesh | AbstractMesh,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec from logical names, with divisibility fallback:
+    a mesh axis is dropped when the dim size doesn't divide it."""
+    used: set = set()
+    parts = []
+    axis_sizes = dict(mesh.shape)   # Mesh and AbstractMesh both expose it
+    for i, name in enumerate(names):
+        ax = rules.get(name) if name else None
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes
+                     if a not in used and a in axis_sizes)
+        if not axes:
+            parts.append(None)
+            continue
+        size = None if shape is None else shape[i]
+        total = 1
+        for a in axes:
+            total *= axis_sizes[a]
+        if size is not None and size % total != 0:
+            # try progressively smaller prefixes
+            ok: Tuple[str, ...] = ()
+            tot = 1
+            for a in axes:
+                if size % (tot * axis_sizes[a]) == 0:
+                    ok = ok + (a,)
+                    tot *= axis_sizes[a]
+                else:
+                    break
+            axes = ok
+        if not axes:
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    state = current_rules()
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = spec_for(names, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

@@ -1,0 +1,91 @@
+"""Parameter-sharding resolver: logical axis names → NamedShardings.
+
+One rule set serves every assigned architecture because resolution is
+*shape-aware*: a mesh axis is silently dropped for a dimension it does
+not divide (e.g. 15 query heads or 4 KV heads vs a 16-way ``model``
+axis → the head dim falls back to replication and, where rules allow,
+the ``head_dim`` dimension picks up the TP axis instead).
+
+Two preset rule sets:
+- ``TP_RULES``   — megatron tensor parallelism on ``model`` only;
+- ``FSDP_RULES`` — TP + ZeRO-style sharding of the remaining large
+  dimension over ``data`` (params and optimizer state).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.logical import MeshAxes, spec_for
+
+# logical parameter-dimension names → mesh axes
+TP_RULES: Dict[str, MeshAxes] = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "experts_r": "model",
+    "ssm_i": "model",
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "vocab_act": "model",
+    "act_ff": "model",
+    "act_heads": "model",
+    "act_experts": "model",
+}
+
+FSDP_RULES: Dict[str, MeshAxes] = dict(
+    TP_RULES,
+    d_model="data",          # ZeRO-shard params' d_model rows over data
+    embed_d="data",          # (baseline: embeddings FSDP-sharded too)
+)
+
+# §Perf variant: embeddings exempt from FSDP — token gathers against a
+# row-sharded table trigger XLA "involuntary full rematerialization"
+# (full replication) on every lookup; vocab stays TP-sharded.
+FSDP_OPT_RULES: Dict[str, MeshAxes] = dict(FSDP_RULES, embed_d=None)
+
+# rules for long-context cells: also shard sequence (context/ring style)
+SP_RULES: Dict[str, MeshAxes] = dict(
+    FSDP_RULES,
+    seq="data",
+    batch="pod",
+)
+
+
+def head_dim_fallback(rules: Dict[str, MeshAxes]) -> Dict[str, MeshAxes]:
+    """When q/kv head counts don't divide the TP axis the resolver drops
+    them; this variant re-routes TP to the head_dim dimension."""
+    return dict(rules, q_heads=None, kv_heads=None, head_dim="model")
+
+
+def resolve_params(axes_tree: Any, mesh: Mesh,
+                   rules: Dict[str, MeshAxes],
+                   shapes_tree: Any) -> Any:
+    """NamedSharding pytree for a (shapes, logical-axes) param tree."""
+    def one(axes, shape):
+        spec = spec_for(axes, rules, mesh, shape.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, rules: Dict[str, MeshAxes],
+                   ndim: int, shape=None) -> NamedSharding:
+    names = ["batch"] + [None] * (ndim - 1)
+    return NamedSharding(mesh, spec_for(names, rules, mesh, shape))

@@ -1,0 +1,257 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step on a
+TPU v5e pod (constants per the assignment):
+
+    compute    = FLOPs_per_chip      / 197e12  (bf16 MXU peak)
+    memory     = HBM_bytes_per_chip  / 819e9   (HBM bandwidth)
+    collective = wire_bytes_per_chip / 49.5e9  (ICI, per-link)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` (per-partition
+module). Collective bytes are NOT in cost_analysis: we parse the
+optimized per-device HLO (``compiled.as_text()``) and accumulate ring-
+model wire bytes for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, using each op's replica-group size:
+
+    all-reduce      2·bytes·(n-1)/n        all-gather  out·(n-1)/n
+    reduce-scatter  in·(n-1)/n             all-to-all  in·(n-1)/n
+    collective-permute  bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 49.5e9              # bytes/s / link (~50 GB/s)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0          # ring-model bytes per chip
+    payload_bytes: float = 0.0       # raw operand/result bytes
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    by_kind_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        num_groups, group_size = int(m.group(1)), int(m.group(2))
+        return max(1, group_size)
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(1, len([x for x in first.split(",") if x.strip()]))
+    return total_devices
+
+
+def parse_collectives(hlo_text: str, total_devices: int
+                      ) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        head, _, rest = s.partition("=")
+        rest = rest.strip()
+        kind = None
+        op = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in f" {rest}":
+                kind, op = c, c
+                break
+            if f" {c}-start(" in f" {rest}":
+                kind, op = c, f"{c}-start"     # async form: count starts
+                break
+        if kind is None:
+            continue
+        # result type string sits between '=' and the op name
+        m = re.match(rf"^(.*?)\s*{re.escape(op)}\(", rest)
+        type_str = m.group(1) if m else ""
+        bytes_ = _shape_bytes(type_str)
+        if bytes_ == 0:
+            continue
+        n = _group_size(s, total_devices)
+        ring = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * bytes_ * ring
+        elif kind == "all-gather":
+            wire = bytes_ * ring            # bytes_ = gathered result
+        elif kind == "reduce-scatter":
+            wire = bytes_ * ring * n        # result is the shard
+        elif kind == "all-to-all":
+            wire = bytes_ * ring
+        else:                               # collective-permute
+            wire = float(bytes_)
+        st.wire_bytes += wire
+        st.payload_bytes += bytes_
+        st.counts[kind] = st.counts.get(kind, 0) + 1
+        st.by_kind_bytes[kind] = st.by_kind_bytes.get(kind, 0.0) + wire
+    return st
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float               # 6·N·D (active) per chip-step
+    useful_ratio: float              # MODEL_FLOPS / HLO_FLOPS
+    collectives: CollectiveStats
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("collectives")
+        d["collective_counts"] = self.collectives.counts
+        d["collective_by_kind"] = self.collectives.by_kind_bytes
+        return d
+
+
+def analyze(cost: dict, hlo_text: str, *, chips: int,
+            model_flops_total: float) -> Roofline:
+    """cost: compiled.cost_analysis() (per-partition on SPMD modules)."""
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text, chips)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll.wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_chip = model_flops_total / chips
+    return Roofline(
+        flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+        wire_bytes_per_chip=coll.wire_bytes,
+        compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        model_flops=mf_chip,
+        useful_ratio=mf_chip / flops if flops else 0.0,
+        collectives=coll)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for
+    inference (D = tokens processed in the step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch                  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+# --------------------------------------------------------------------
+# Analytic FLOP model
+# --------------------------------------------------------------------
+# `cost_analysis()['flops']` undercounts lax.scan bodies on the CPU
+# backend (loop bodies are counted once, not × trip count) — measured
+# factors up to ~30× on the 94-layer stacks. The roofline's compute
+# term therefore also carries an *analytic* matmul count derived from
+# the config: 2 FLOPs per active matmul parameter per token, plus
+# attention score/weight terms, ×3 for the backward pass in training.
+
+def analytic_flops(cfg, shape) -> float:
+    """Total step FLOPs across the cluster (not per chip)."""
+    hd = cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    L = cfg.n_layers
+
+    # per-layer matmul params (active)
+    def layer_params(j: int) -> float:
+        p = 0.0
+        from repro.models.decoder import layer_kind, ffn_kind
+        kind = layer_kind(cfg, j % max(1, _period(cfg)))
+        if kind in ("attn", "cross"):
+            p += d * H * hd + 2 * d * KV * hd + H * hd * d
+        elif kind == "mamba":
+            di = cfg.ssm_expand * d
+            p += 2 * d * di + di * 2 * cfg.ssm_state + di * d
+        elif kind == "mlstm":
+            p += 3 * d * H * hd + H * hd * d + d * H * hd
+        elif kind == "slstm":
+            p += 4 * d * H * hd + H * hd * 4 * hd + H * hd * d
+        fk = ffn_kind(cfg, j % max(1, _period(cfg)))
+        g = 2 if cfg.act == "swiglu" else 1
+        if fk == "mlp":
+            p += d * g * f + f * d
+        elif fk == "moe":
+            p += d * cfg.moe_experts                  # router
+            p += cfg.moe_topk * (d * g * f + f * d)   # active experts
+        return p
+
+    n_matmul = sum(layer_params(j) for j in range(L))
+    n_matmul += d * V                                  # unembed
+
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, mult, s_eff = B * S, 3.0, S / 2
+    elif shape.kind == "prefill":
+        tokens, mult, s_eff = B * S, 1.0, S / 2
+    else:                                              # decode
+        tokens, mult, s_eff = B * 1, 1.0, S
+
+    flops = 2.0 * n_matmul * tokens * mult
+    # attention scores + weighted sum: 4·s_eff·H·hd per attn layer/token
+    n_attn = sum(1 for j in range(L)
+                 if _kind_of(cfg, j) in ("attn", "cross"))
+    flops += 4.0 * s_eff * H * hd * n_attn * tokens * mult
+    if cfg.family == "encdec":
+        # encoder over audio tokens (self) + decoder cross-attention
+        enc_tokens = B * cfg.n_audio_tokens
+        flops += 2.0 * (cfg.enc_layers * (d * H * hd * 2 + 2 * d * KV
+                                          * hd + d * 2 * f + f * d)
+                        ) * enc_tokens * mult
+    return flops
+
+
+def _period(cfg) -> int:
+    from repro.models.decoder import period
+    return period(cfg)
+
+
+def _kind_of(cfg, j) -> str:
+    from repro.models.decoder import layer_kind
+    return layer_kind(cfg, j % max(1, _period(cfg)))

@@ -1,0 +1,1 @@
+from repro.serve.query_server import QueryServer, ServerStats

@@ -1,0 +1,118 @@
+"""Batched PPSD query server — the production serving loop over a CHL.
+
+The paper's Table 4 measures latency (one query at a time) and
+throughput (batches of queries). A real deployment sits in between: a
+server aggregates arriving queries into fixed-size batches (padding
+the tail), dispatches them to one of the three storage modes, and
+tracks latency percentiles. This module implements that loop with a
+pluggable backend:
+
+    srv = QueryServer.build(table, mode="qdol", mesh=mesh)
+    out = srv.submit(u, v)          # enqueues
+    srv.flush()                     # drains queues in batches
+    srv.stats()                     # latency/throughput accounting
+
+Backends reuse `repro.core.query` (QLSN / QFDL / QDOL) and the
+`label_query` Pallas kernel path for QLSN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as qm
+from repro.core.labels import LabelTable
+
+
+@dataclasses.dataclass
+class ServerStats:
+    queries: int = 0
+    batches: int = 0
+    busy_s: float = 0.0
+    lat_samples: List[float] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.lat_samples) if self.lat_samples else \
+            np.zeros(1)
+        return {
+            "queries": self.queries,
+            "batches": self.batches,
+            "throughput_qps": self.queries / max(self.busy_s, 1e-9),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        }
+
+
+class QueryServer:
+    def __init__(self, answer: Callable[[jax.Array, jax.Array],
+                                        jax.Array],
+                 batch_size: int = 1024):
+        self._answer = answer
+        self.batch_size = batch_size
+        self._qu: List[np.ndarray] = []
+        self._qv: List[np.ndarray] = []
+        self._results: List[np.ndarray] = []
+        self.stats_ = ServerStats()
+
+    # ------------------------------------------------------------ api
+
+    @staticmethod
+    def build(table: LabelTable, mode: str = "qlsn",
+              mesh=None, partitioned: Optional[LabelTable] = None,
+              batch_size: int = 1024) -> "QueryServer":
+        if mode == "qlsn":
+            fn = jax.jit(lambda u, v: qm.qlsn(table, u, v))
+        elif mode == "qfdl":
+            assert mesh is not None and partitioned is not None
+            f = qm.qfdl_fn(mesh)
+            fn = lambda u, v: f(partitioned, u, v)      # noqa: E731
+        elif mode == "qdol":
+            assert mesh is not None
+            layout = qm.qdol_layout(table.hubs.shape[0],
+                                    int(mesh.devices.size))
+            store = qm.qdol_build(table, layout, mesh)
+            f = qm.qdol_fn(mesh, layout)
+            fn = lambda u, v: f(store, u, v)            # noqa: E731
+        else:
+            raise ValueError(mode)
+        return QueryServer(fn, batch_size=batch_size)
+
+    def submit(self, u: np.ndarray, v: np.ndarray) -> None:
+        self._qu.append(np.asarray(u, np.int32))
+        self._qv.append(np.asarray(v, np.int32))
+
+    def flush(self) -> np.ndarray:
+        """Answer everything queued; returns distances in order."""
+        if not self._qu:
+            return np.zeros(0, np.float32)
+        u = np.concatenate(self._qu)
+        v = np.concatenate(self._qv)
+        self._qu, self._qv = [], []
+        out = np.empty(len(u), np.float32)
+        B = self.batch_size
+        for s in range(0, len(u), B):
+            ub, vb = u[s:s + B], v[s:s + B]
+            pad = B - len(ub)
+            if pad:
+                ub = np.pad(ub, (0, pad))
+                vb = np.pad(vb, (0, pad))
+            t0 = time.perf_counter()
+            res = np.asarray(self._answer(jnp.asarray(ub),
+                                          jnp.asarray(vb)))
+            dt = time.perf_counter() - t0
+            out[s:s + B - pad] = res[:B - pad]
+            self.stats_.queries += B - pad
+            self.stats_.batches += 1
+            self.stats_.busy_s += dt
+            self.stats_.lat_samples.append(dt)
+        self._results.append(out)
+        return out
+
+    def stats(self) -> dict:
+        return self.stats_.summary()

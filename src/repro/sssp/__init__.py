@@ -1,0 +1,17 @@
+"""SSSP engines: numpy Dijkstra oracle + JAX batched relaxation."""
+
+from repro.sssp.oracle import dijkstra, dijkstra_tree, all_pairs
+from repro.sssp.relax import (
+    batched_sssp,
+    batched_sssp_maxrank,
+    RelaxState,
+)
+
+__all__ = [
+    "dijkstra",
+    "dijkstra_tree",
+    "all_pairs",
+    "batched_sssp",
+    "batched_sssp_maxrank",
+    "RelaxState",
+]

@@ -1,0 +1,79 @@
+"""Numpy/heapq Dijkstra oracles (ground truth for tests & rankings)."""
+
+from __future__ import annotations
+
+import heapq
+from typing import Tuple
+
+import numpy as np
+
+from repro.graphs.graph import Graph
+
+
+def dijkstra(g: Graph, root: int) -> np.ndarray:
+    """Distances from ``root`` (float64, ``inf`` if unreachable)."""
+    dist = np.full(g.n, np.inf)
+    dist[root] = 0.0
+    pq = [(0.0, root)]
+    while pq:
+        d, v = heapq.heappop(pq)
+        if d > dist[v]:
+            continue
+        ids, w = g.out_edges(v)
+        for u, wt in zip(ids.tolist(), w.tolist()):
+            nd = d + wt
+            if nd < dist[u]:
+                dist[u] = nd
+                heapq.heappush(pq, (nd, u))
+    return dist
+
+
+def dijkstra_tree(g: Graph, root: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Distances + a parent array (one shortest-path tree)."""
+    dist = np.full(g.n, np.inf)
+    parent = np.full(g.n, -1, dtype=np.int64)
+    dist[root] = 0.0
+    pq = [(0.0, root)]
+    while pq:
+        d, v = heapq.heappop(pq)
+        if d > dist[v]:
+            continue
+        ids, w = g.out_edges(v)
+        for u, wt in zip(ids.tolist(), w.tolist()):
+            nd = d + wt
+            if nd < dist[u]:
+                dist[u] = nd
+                parent[u] = v
+                heapq.heappush(pq, (nd, u))
+    return dist, parent
+
+
+def dijkstra_maxrank(g: Graph, root: int,
+                     rank: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Distances + ``mrank[v]`` = max rank over the *union* of all
+    shortest ``root→v`` paths (endpoints inclusive).
+
+    This is the scalar oracle for the PLaNT ancestor semantics
+    (Alg. 3 with the equal-distance ancestor merge): label ``(root, v)``
+    is canonical iff ``mrank[v] == rank[root]``.
+    """
+    dist = dijkstra(g, root)
+    gin = g.reverse() if g.directed else g   # predecessor enumeration
+    mrank = np.full(g.n, -1, dtype=np.int64)
+    mrank[root] = rank[root]
+    order = np.argsort(dist, kind="stable")
+    for v in order:
+        if not np.isfinite(dist[v]) or v == root:
+            continue
+        best = -1
+        ids, w = gin.out_edges(v)   # in-edges of v
+        for u, wt in zip(ids.tolist(), w.tolist()):
+            if np.isfinite(dist[u]) and dist[u] + wt == dist[v]:
+                best = max(best, mrank[u])
+        mrank[v] = max(best, int(rank[v]))
+    return dist, mrank
+
+
+def all_pairs(g: Graph) -> np.ndarray:
+    """All-pairs distances (test scale only)."""
+    return np.stack([dijkstra(g, v) for v in range(g.n)])

@@ -1,0 +1,171 @@
+"""Batched lexicographic shortest-path relaxation (the TPU engine).
+
+This module is the hardware adaptation of the paper's per-thread
+binary-heap Dijkstra (DESIGN.md §2 A1/A2): a *pull-based* iterate
+over a padded ELL adjacency that relaxes **all** vertices of a **batch
+of trees** per sweep, to fixpoint. Two quantities propagate jointly:
+
+- ``dist[b, v]``  — tentative distance from ``roots[b]`` to ``v``;
+- ``mrank[b, v]`` — the maximum rank over the *union of all shortest
+  roots[b]→v paths discovered so far* (endpoints inclusive). This is
+  the dense-form equivalent of PLaNT's ancestor array ``a[v]`` with the
+  equal-distance merge of Alg. 3 line 12.
+
+The PLaNT label criterion then reads pointwise:
+
+    emit (h, δ_v) into L_v   ⇔   mrank[v] == R(h)   (h = root)
+
+since the root lies on every path, ``mrank[v] ≥ R(root)`` whenever v is
+reached, with equality iff the root is the highest-ranked vertex on the
+union of shortest paths — exactly the CHL membership condition.
+
+Pruning (LCC rank/distance queries, Hybrid common-label queries) is
+expressed as a *blocking mask* recomputed every sweep: blocked vertices
+do not propagate outward and never emit. Re-evaluating the mask at each
+sweep converges to the pruned-Dijkstra semantics: along any surviving
+shortest path the chain of vertices unblocks inductively from the root
+(see the correctness discussion in DESIGN.md §2 A3).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+BlockFn = Callable[[Array, Array], Array]   # (dist [B,n], roots [B]) -> blocked [B,n]
+
+
+class RelaxState(NamedTuple):
+    dist: Array     # f32 [B, n]
+    mrank: Array    # i32 [B, n] ; -1 where unreached
+    sweeps: Array   # i32 scalar — sweeps executed (diagnostic / Ψ input)
+    explored: Array  # i32 [B] — #vertices each tree touched (Ψ numerator)
+
+
+def _sweep(dist: Array, mrank: Array, blocked: Array,
+           ell_src: Array, ell_w: Array, rank: Array):
+    """One relaxation sweep. Shapes: dist/mrank [B,n]; ell_* [n,deg]."""
+    # Gather neighbor states along in-edges: [B, n, deg]
+    nd = dist[:, ell_src]
+    nm = mrank[:, ell_src]
+    nblk = blocked[:, ell_src]
+    cand = jnp.where(nblk, jnp.inf, nd + ell_w[None, :, :])
+    best = jnp.min(cand, axis=-1)
+    new_dist = jnp.minimum(dist, best)
+    # Ranks over candidate edges attaining the (finite) new distance.
+    attains = (cand <= new_dist[..., None]) & jnp.isfinite(cand)
+    cr = jnp.where(attains, nm, -1)
+    best_in = jnp.max(cr, axis=-1)                       # [B, n]
+    through = jnp.where(best_in >= 0,
+                        jnp.maximum(best_in, rank[None, :]), -1)
+    keep = jnp.where(dist <= new_dist, mrank, -1)        # == only when kept
+    new_mrank = jnp.maximum(keep, through)
+    return new_dist, new_mrank
+
+
+def _init(n: int, roots: Array, rank: Array):
+    B = roots.shape[0]
+    dist = jnp.full((B, n), jnp.inf, dtype=jnp.float32)
+    dist = dist.at[jnp.arange(B), roots].set(0.0)
+    mrank = jnp.full((B, n), -1, dtype=jnp.int32)
+    mrank = mrank.at[jnp.arange(B), roots].set(rank[roots])
+    return dist, mrank
+
+
+def batched_sssp_maxrank(
+    ell_src: Array,
+    ell_w: Array,
+    rank: Array,
+    roots: Array,
+    *,
+    block_fn: Optional[BlockFn] = None,
+    max_sweeps: Optional[int] = None,
+) -> RelaxState:
+    """Relax a batch of trees to fixpoint.
+
+    Args:
+      ell_src: int32 [n, deg] — in-edge sources (pull layout).
+      ell_w:   f32  [n, deg] — in-edge weights, ``inf`` padding.
+      rank:    int32 [n] — network hierarchy (larger = more important).
+      roots:   int32 [B] — tree roots of this batch.
+      block_fn: optional per-sweep pruning mask (rank/distance queries).
+        Roots are force-unblocked.
+      max_sweeps: safety bound (default: n sweeps — Bellman–Ford bound).
+
+    Returns:
+      RelaxState with fixpoint ``dist``/``mrank``.
+    """
+    n = ell_src.shape[0]
+    B = roots.shape[0]
+    rank = rank.astype(jnp.int32)
+    cap = n if max_sweeps is None else max_sweeps
+    dist0, mrank0 = _init(n, roots, rank)
+
+    def blocked_of(dist):
+        if block_fn is None:
+            return jnp.zeros(dist.shape, dtype=bool)
+        blk = block_fn(dist, roots)
+        # the root of each tree never blocks its own propagation
+        return blk.at[jnp.arange(B), roots].set(False)
+
+    def cond(carry):
+        dist, mrank, it, changed = carry
+        return changed & (it < cap)
+
+    def body(carry):
+        dist, mrank, it, _ = carry
+        blocked = blocked_of(dist)
+        nd, nm = _sweep(dist, mrank, blocked, ell_src, ell_w, rank)
+        changed = jnp.any(nd < dist) | jnp.any(nm != mrank)
+        return nd, nm, it + 1, changed
+
+    dist, mrank, sweeps, _ = jax.lax.while_loop(
+        cond, body, (dist0, mrank0, jnp.int32(0), jnp.bool_(True)))
+    explored = jnp.sum(jnp.isfinite(dist), axis=-1).astype(jnp.int32)
+    return RelaxState(dist=dist, mrank=mrank, sweeps=sweeps,
+                      explored=explored)
+
+
+def batched_sssp(ell_src: Array, ell_w: Array, roots: Array,
+                 *, max_sweeps: Optional[int] = None) -> Array:
+    """Plain batched SSSP distances (no rank tracking): f32 [B, n]."""
+    n = ell_src.shape[0]
+    B = roots.shape[0]
+    dist0 = jnp.full((B, n), jnp.inf, dtype=jnp.float32)
+    dist0 = dist0.at[jnp.arange(B), roots].set(0.0)
+    cap = n if max_sweeps is None else max_sweeps
+
+    def cond(c):
+        _, it, changed = c
+        return changed & (it < cap)
+
+    def body(c):
+        dist, it, _ = c
+        cand = dist[:, ell_src] + ell_w[None, :, :]
+        nd = jnp.minimum(dist, jnp.min(cand, axis=-1))
+        return nd, it + 1, jnp.any(nd < dist)
+
+    dist, _, _ = jax.lax.while_loop(cond, body,
+                                    (dist0, jnp.int32(0), jnp.bool_(True)))
+    return dist
+
+
+def rank_block(rank: Array) -> BlockFn:
+    """Rank-query pruning mask (LCC Alg. 1 line 5): block v with
+    ``R(v) > R(root)``."""
+    def fn(dist: Array, roots: Array) -> Array:
+        del dist
+        return rank[None, :] > rank[roots][:, None]
+    return fn
+
+
+def combine_blocks(*fns: BlockFn) -> BlockFn:
+    def fn(dist: Array, roots: Array) -> Array:
+        out = fns[0](dist, roots)
+        for f in fns[1:]:
+            out = out | f(dist, roots)
+        return out
+    return fn

@@ -1,0 +1,5 @@
+from repro.train.trainer import (TrainState, abstract_train_state,
+                                 batch_shardings, init_train_state,
+                                 make_eval_step, make_serve_fns,
+                                 make_train_step, serve_state_shardings,
+                                 state_shardings)

@@ -1,0 +1,189 @@
+"""Train/serve step factories: jit-compiled, mesh-aware, remat'd.
+
+`make_train_step` / `make_serve_fns` close over (model config, opt
+config, mesh, logical rules) and return functions suitable both for
+real execution (smoke scale) and for `.lower().compile()` against
+ShapeDtypeStructs (the multi-pod dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as mdl
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel.logical import axis_rules, spec_for
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+def init_train_state(cfg: ModelConfig, ocfg: adamw.AdamWConfig,
+                     key: jax.Array) -> TrainState:
+    params, _ = mdl.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw.init(ocfg, params))
+
+
+def abstract_train_state(cfg: ModelConfig,
+                         ocfg: adamw.AdamWConfig) -> TrainState:
+    """ShapeDtypeStruct pytree of the full train state (no allocation)."""
+    shapes, _ = mdl.abstract_params(cfg)
+
+    def f32(x):
+        return jax.ShapeDtypeStruct(x.shape, jnp.float32)
+
+    def st(x):
+        return jax.ShapeDtypeStruct(x.shape, ocfg.state_dtype)
+
+    master = (jax.tree.map(f32, shapes) if ocfg.master_copy else None)
+    return TrainState(
+        params=shapes,
+        opt=adamw.OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(st, shapes),
+            nu=jax.tree.map(st, shapes),
+            master=master))
+
+
+def state_shardings(cfg: ModelConfig, ocfg: adamw.AdamWConfig,
+                    mesh: Mesh, rules: Dict[str, Any]) -> TrainState:
+    """NamedSharding pytree matching `abstract_train_state`."""
+    shapes, axes = mdl.abstract_params(cfg)
+    p_sh = shd.resolve_params(axes, mesh, rules, shapes)
+    master = p_sh if ocfg.master_copy else None
+    return TrainState(
+        params=p_sh,
+        opt=adamw.OptState(step=NamedSharding(mesh, P()),
+                           mu=p_sh, nu=p_sh, master=master))
+
+
+def batch_shardings(mesh: Mesh, rules: Dict[str, Any],
+                    batch: Dict[str, Any]) -> Dict[str, Any]:
+    def one(x):
+        names = ["batch"] + [None] * (len(x.shape) - 1)
+        return NamedSharding(mesh, spec_for(names, rules, mesh, x.shape))
+    return jax.tree.map(one, batch)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.AdamWConfig,
+                    mesh: Mesh, rules: Dict[str, Any], *,
+                    remat: bool = True, accum_steps: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum_steps > 1``: gradient accumulation over microbatches
+    (§Perf: cuts per-step activation memory ~linearly; the optimizer
+    sees the mean gradient, so the math is unchanged up to fp
+    accumulation order).
+    """
+
+    def grads_of(params, batch):
+        def lf(p):
+            return mdl.loss_fn(cfg, p, batch, remat=remat)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: Dict[str, Array]):
+        with axis_rules(mesh, rules):
+            if accum_steps == 1:
+                (loss, metrics), grads = grads_of(state.params, batch)
+            else:
+                B = batch["tokens"].shape[0]
+                assert B % accum_steps == 0, (B, accum_steps)
+                mb = B // accum_steps
+                micro = jax.tree.map(
+                    lambda x: x.reshape((accum_steps, mb) + x.shape[1:]),
+                    batch)
+
+                def acc_body(carry, mbatch):
+                    g_acc, l_acc = carry
+                    (l, _), g = grads_of(state.params, mbatch)
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32),
+                    state.params)
+                (grads, loss), _ = jax.lax.scan(
+                    acc_body, (zeros, jnp.zeros((), jnp.float32)),
+                    micro)
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                loss = loss / accum_steps
+                metrics = {"nll": loss,
+                           "aux": jnp.zeros((), jnp.float32),
+                           "tokens": jnp.float32(
+                               batch["tokens"].size)}
+            new_params, opt, om = adamw.apply(ocfg, state.opt,
+                                              state.params, grads)
+        metrics = dict(metrics, loss=loss, **om)
+        return TrainState(params=new_params, opt=opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh: Mesh, rules: Dict[str, Any]):
+    def eval_step(params, batch):
+        with axis_rules(mesh, rules):
+            loss, metrics = mdl.loss_fn(cfg, params, batch, remat=False)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def make_serve_fns(cfg: ModelConfig, mesh: Mesh, rules: Dict[str, Any]):
+    """Returns (prefill_fn, decode_fn) suitable for jit/lower."""
+
+    def prefill_fn(params, batch, state):
+        with axis_rules(mesh, rules):
+            logits, state, mem = mdl.prefill(cfg, params, batch, state)
+        return logits, state, mem
+
+    def decode_fn(params, token, state, cross_memory=None):
+        with axis_rules(mesh, rules):
+            logits, state = mdl.decode_step(cfg, params, token, state,
+                                            cross_memory=cross_memory)
+        return logits, state
+
+    return prefill_fn, decode_fn
+
+
+def serve_state_shardings(cfg: ModelConfig, mesh: Mesh,
+                          rules: Dict[str, Any], B: int, S_max: int):
+    """Shardings for the decode state (KV caches / SSM states)."""
+    state = jax.eval_shape(
+        lambda: mdl.init_serve_state(cfg, B, S_max))
+
+    model_size = dict(mesh.shape).get("model", 1)
+
+    def one(x):
+        if len(x.shape) == 0:
+            return NamedSharding(mesh, P())
+        # stacked [G, B, ...] states: batch on dim 1; plus one model-
+        # sharded dim — the last dim (scanning from the end) that the
+        # TP axis divides comfortably (≥8× its size), e.g. head_dim of
+        # a KV cache or d_inner of an SSM state.
+        names: list = [None] * len(x.shape)
+        if len(x.shape) >= 2:
+            names[1] = "batch"
+        pick = None
+        for i in range(len(x.shape) - 1, 1, -1):
+            if x.shape[i] % model_size == 0:
+                pick = i
+                if x.shape[i] >= 8 * model_size:
+                    break
+        if pick is not None:
+            names[pick] = "act_heads"
+        return NamedSharding(mesh,
+                             spec_for(names, rules, mesh, x.shape))
+
+    return jax.tree.map(one, state), state

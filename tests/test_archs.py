@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: reduced config, one train step + one
+prefill/decode step on CPU; asserts shapes and finiteness (no NaNs)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models import model as mdl
+from repro.optim import adamw
+from repro.train import trainer
+
+ARCHS = list(cfgbase.lm_arch_ids())
+SMOKE_S = 16
+SMOKE_B = 2
+
+
+def _smoke_batch(cfg, rng):
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (SMOKE_B, SMOKE_S)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab, (SMOKE_B, SMOKE_S)), jnp.int32),
+    }
+    if cfg.family == "vision":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(SMOKE_B, cfg.n_image_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(SMOKE_B, cfg.n_audio_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, rng):
+    spec = cfgbase.get(arch)
+    cfg = spec.smoke
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    state = trainer.init_train_state(cfg, ocfg, jax.random.key(0))
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.parallel.sharding import TP_RULES
+    mesh = make_smoke_mesh()
+    step = jax.jit(trainer.make_train_step(cfg, ocfg, mesh, TP_RULES))
+    batch = _smoke_batch(cfg, rng)
+    state, metrics = step(state, batch)
+    loss0 = float(metrics["loss"])
+    assert np.isfinite(loss0), (arch, metrics)
+    # a couple more steps: loss finite and params updated
+    state, metrics = step(state, batch)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state.opt.step) == 3
+    # loss should drop on the memorized batch
+    assert float(metrics["loss"]) < loss0 + 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_smoke(arch, rng):
+    spec = cfgbase.get(arch)
+    cfg = spec.smoke
+    params, _ = mdl.init_params(cfg, jax.random.key(1))
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.parallel.sharding import TP_RULES
+    from repro.train.trainer import make_serve_fns
+    mesh = make_smoke_mesh()
+    prefill_fn, decode_fn = make_serve_fns(cfg, mesh, TP_RULES)
+    prefill_fn = jax.jit(prefill_fn)
+    decode_fn = jax.jit(decode_fn)
+
+    S_max = SMOKE_S + 8
+    serve_state = mdl.init_serve_state(cfg, SMOKE_B, S_max)
+    batch = _smoke_batch(cfg, rng)
+    batch.pop("labels")
+    logits, serve_state, mem = prefill_fn(params, batch, serve_state)
+    assert logits.shape == (SMOKE_B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert int(serve_state["pos"]) == SMOKE_S
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    for _ in range(3):
+        logits, serve_state = decode_fn(params, tok, serve_state, mem)
+        assert logits.shape == (SMOKE_B, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    assert int(serve_state["pos"]) == SMOKE_S + 3
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_parallel_forward(arch, rng):
+    """Teacher-forced decode step logits ≈ full forward logits."""
+    spec = cfgbase.get(arch)
+    cfg = spec.smoke
+    if cfg.moe_experts:
+        # capacity dropping legitimately differs between a full forward
+        # and incremental decode (different routing-group populations);
+        # test the architecture's math with no-drop capacity.
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=float(
+            cfg.moe_experts))
+    if cfg.family in ("hybrid", "xlstm"):
+        tol = 2e-2      # chunked scans in bf16 accumulate differently
+    else:
+        tol = 1e-2
+    params, _ = mdl.init_params(cfg, jax.random.key(2))
+    batch = _smoke_batch(cfg, rng)
+    batch.pop("labels")
+    tokens = batch["tokens"]
+
+    # full parallel forward logits at the last position
+    from repro.models import layers as ly
+    from repro.models import decoder as dec
+    x = mdl._embed_tokens(cfg, params, tokens)
+    mem = mdl._cross_memory(cfg, params, batch, False)
+    x, _, _ = dec.run_stack(cfg, params, "dec", mdl._dec_layers(cfg), x,
+                            causal=True, cross_memory=mem,
+                            with_cross=cfg.family == "encdec",
+                            remat=False)
+    x = ly.apply_norm(cfg, params["final_ln"], x)
+    full_logits = ly.unembed(cfg, params["embed"], x)
+
+    # incremental: prefill on the prefix, then decode the last token
+    serve_state = mdl.init_serve_state(cfg, SMOKE_B, SMOKE_S + 4)
+    pre = dict(batch, tokens=tokens[:, :-1])
+    _, serve_state, mem2 = mdl.prefill(cfg, params, pre, serve_state)
+    logits, _ = mdl.decode_step(cfg, params, tokens[:, -1:],
+                                serve_state, cross_memory=mem2)
+    a = np.asarray(full_logits[:, -1], np.float32)
+    b = np.asarray(logits, np.float32)
+    denom = np.maximum(1.0, np.abs(a).max())
+    assert np.max(np.abs(a - b)) / denom < tol, (arch,
+                                                 np.max(np.abs(a - b)))

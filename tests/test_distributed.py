@@ -1,0 +1,100 @@
+"""DGLL / PLaNT-distributed / Hybrid on a 1-device mesh (in-process).
+
+Real multi-device collective semantics are covered by
+``tests/test_multidevice.py`` which re-runs these flows in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import labels as lbl
+from repro.core import validate
+from repro.core.dgll import assign_roots, dgll_chl, make_node_mesh
+from repro.core.hybrid import hybrid_chl, plant_distributed_chl
+from repro.core.pll import pll_undirected
+from repro.graphs import grid_road, random_connected, scale_free
+from repro.graphs.ranking import degree_ranking, random_ranking
+
+
+def test_assign_roots_round_robin():
+    rank = np.array([3, 0, 2, 1, 4], dtype=np.int32)
+    q = 2
+    queues = assign_roots(rank, q)
+    # descending rank order: v4(4), v0(3), v2(2), v3(1), v1(0)
+    np.testing.assert_array_equal(queues[0], [4, 2, 1])
+    np.testing.assert_array_equal(queues[1], [0, 3, -1])
+
+
+@pytest.mark.parametrize("gen,ranker", [
+    (lambda: grid_road(5, 5, seed=1), degree_ranking),
+    (lambda: scale_free(40, attach=2, seed=1), degree_ranking),
+    (lambda: random_connected(36, extra_edges=30, seed=2),
+     lambda g: random_ranking(g.n, seed=5)),
+])
+def test_dgll_q1_equals_pll(gen, ranker):
+    g = gen()
+    rank = ranker(g)
+    ref = pll_undirected(g, rank)
+    mesh = make_node_mesh(1)
+    table, stats = dgll_chl(g, rank, mesh=mesh, batch=4, beta=4.0)
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    assert all(m == "dgll" for m in stats["mode"])
+
+
+def test_plant_distributed_q1_equals_pll():
+    g = scale_free(42, attach=2, seed=3)
+    rank = degree_ranking(g)
+    ref = pll_undirected(g, rank)
+    mesh = make_node_mesh(1)
+    table, stats = plant_distributed_chl(g, rank, mesh=mesh, batch=4)
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    assert all(m == "plant" for m in stats["mode"])
+    assert stats["comm_label_slots"] == 0      # zero label traffic
+
+
+def test_hybrid_q1_equals_pll_and_switches():
+    g = grid_road(6, 6, seed=2)
+    rank = degree_ranking(g)
+    ref = pll_undirected(g, rank)
+    mesh = make_node_mesh(1)
+    # low Ψ_th forces an actual PLaNT→DGLL switch mid-run
+    table, stats = hybrid_chl(g, rank, mesh=mesh, batch=4, eta=4,
+                              psi_threshold=2.0)
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    modes = stats["mode"]
+    assert "plant-hc" in modes or "plant" in modes
+    assert "dgll" in modes
+
+
+def test_hybrid_eta_invariance():
+    g = scale_free(40, attach=2, seed=6)
+    rank = degree_ranking(g)
+    mesh = make_node_mesh(1)
+    t1, _ = hybrid_chl(g, rank, mesh=mesh, eta=0, psi_threshold=3.0)
+    t2, _ = hybrid_chl(g, rank, mesh=mesh, eta=8, psi_threshold=3.0)
+    validate.check_equal(lbl.to_numpy_sets(t1), lbl.to_numpy_sets(t2))
+
+
+def test_dgll_compact_broadcast_equals_pll():
+    """§Perf-2: compact label broadcast produces the identical CHL."""
+    g = scale_free(40, attach=2, seed=7)
+    rank = degree_ranking(g)
+    ref = pll_undirected(g, rank)
+    mesh = make_node_mesh(1)
+    table, stats = dgll_chl(g, rank, mesh=mesh, batch=4, beta=4.0,
+                            compact=16)
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    # broadcast accounting: ≤ compact slots per tree, not n per tree
+    _, dense_stats = dgll_chl(g, rank, mesh=mesh, batch=4, beta=4.0)
+    assert stats["comm_label_slots"] < dense_stats["comm_label_slots"]
+
+
+def test_hybrid_compact_equals_dense():
+    g = grid_road(6, 6, seed=9)
+    rank = degree_ranking(g)
+    mesh = make_node_mesh(1)
+    t1, _ = hybrid_chl(g, rank, mesh=mesh, eta=4, psi_threshold=2.0)
+    t2, _ = hybrid_chl(g, rank, mesh=mesh, eta=4, psi_threshold=2.0,
+                       compact=64)
+    validate.check_equal(lbl.to_numpy_sets(t1), lbl.to_numpy_sets(t2))

@@ -1,0 +1,81 @@
+"""Extensions: graph IO, auto-Ψ_th, query server, CHL launcher with
+checkpoint/resume."""
+
+import numpy as np
+import pytest
+
+from repro.core.hybrid import auto_psi_threshold
+from repro.graphs import grid_road, scale_free
+from repro.graphs.io import load_npz, read_dimacs, save_npz, write_dimacs
+from repro.sssp.oracle import dijkstra
+
+
+def test_dimacs_roundtrip(tmp_path):
+    g = grid_road(4, 5, seed=2)
+    path = str(tmp_path / "g.gr")
+    write_dimacs(g, path)
+    g2 = read_dimacs(path)
+    assert g2.n == g.n and g2.m == g.m
+    np.testing.assert_allclose(dijkstra(g, 0), dijkstra(g2, 0))
+
+
+def test_npz_roundtrip(tmp_path):
+    g = scale_free(30, attach=2, seed=1)
+    path = str(tmp_path / "g.npz")
+    save_npz(g, path)
+    g2 = load_npz(path)
+    assert g2.n == g.n
+    np.testing.assert_allclose(dijkstra(g, 3), dijkstra(g2, 3))
+
+
+def test_auto_psi_threshold_scales_with_q():
+    assert auto_psi_threshold(1) < auto_psi_threshold(8)
+    assert auto_psi_threshold(64) == 8 * auto_psi_threshold(8)
+
+
+def test_query_server_answers_and_accounts():
+    import jax.numpy as jnp
+    from repro.core.plant import plant_chl
+    from repro.graphs.ranking import degree_ranking
+    from repro.serve.query_server import QueryServer
+    from repro.sssp.oracle import all_pairs
+
+    g = grid_road(5, 5, seed=1)
+    from repro.graphs.ranking import degree_ranking
+    rank = degree_ranking(g)
+    table, _ = plant_chl(g, rank, batch=8)
+    D = all_pairs(g)
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, g.n, 150).astype(np.int32)
+    v = rng.integers(0, g.n, 150).astype(np.int32)
+    srv = QueryServer.build(table, mode="qlsn", batch_size=64)
+    srv.submit(u[:100], v[:100])
+    srv.submit(u[100:], v[100:])
+    out = srv.flush()
+    np.testing.assert_array_equal(out, D[u, v].astype(np.float32))
+    st = srv.stats()
+    assert st["queries"] == 150 and st["batches"] == 3
+    assert st["throughput_qps"] > 0
+
+
+@pytest.mark.slow
+def test_chl_launcher_checkpoint_resume(tmp_path):
+    from repro.core import validate
+    from repro.core.labels import to_numpy_sets
+    from repro.core.pll import pll_undirected
+    from repro.launch.chl import main as chl_main
+
+    out = chl_main(["--graph", "scalefree", "--n", "80",
+                    "--algo", "hybrid", "--batch", "4",
+                    "--ckpt-dir", str(tmp_path), "--queries", "64"])
+    g = scale_free(80, attach=2, seed=0)
+    from repro.graphs.ranking import degree_ranking
+    ref = pll_undirected(g, degree_ranking(g))
+    validate.check_equal(to_numpy_sets(out["table"]), ref)
+
+    # resume from the final cursor: no more work, same table
+    out2 = chl_main(["--graph", "scalefree", "--n", "80",
+                     "--algo", "hybrid", "--batch", "4",
+                     "--ckpt-dir", str(tmp_path), "--resume"])
+    validate.check_equal(to_numpy_sets(out2["table"]),
+                         to_numpy_sets(out["table"]))

@@ -1,0 +1,83 @@
+"""LCC / GLL produce exactly the CHL; paraPLL baseline covers but is
+not minimal (the paper's Fig. 9 qualitative claim)."""
+
+import numpy as np
+import pytest
+
+from repro.core import labels as lbl
+from repro.core import validate
+from repro.core.gll import gll_chl, lcc_chl, parapll_chl
+from repro.core.pll import average_label_size, pll_undirected
+from repro.graphs import (grid_road, random_connected, random_geometric,
+                          scale_free)
+from repro.graphs.ranking import degree_ranking, random_ranking
+
+CASES = [
+    ("grid", lambda s: grid_road(5, 6, seed=s), degree_ranking),
+    ("ba", lambda s: scale_free(45, attach=2, seed=s), degree_ranking),
+    ("geo", lambda s: random_geometric(30, seed=s),
+     lambda g: random_ranking(g.n, seed=3)),
+    ("tree+", lambda s: random_connected(48, extra_edges=36, seed=s),
+     degree_ranking),
+]
+
+
+@pytest.mark.parametrize("name,gen,ranker", CASES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_gll_equals_pll(name, gen, ranker, seed):
+    g = gen(seed)
+    rank = ranker(g)
+    ref = pll_undirected(g, rank)
+    table, stats = gll_chl(g, rank, batch=8, alpha=2.0)
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    assert stats["supersteps"] >= 1
+
+
+@pytest.mark.parametrize("name,gen,ranker", CASES[:2])
+def test_lcc_equals_pll(name, gen, ranker):
+    g = gen(0)
+    rank = ranker(g)
+    ref = pll_undirected(g, rank)
+    table, stats = lcc_chl(g, rank, batch=16)
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    assert stats["supersteps"] == 1          # LCC cleans exactly once
+
+
+def test_gll_plant_first_superstep():
+    g = grid_road(6, 6, seed=4)
+    rank = degree_ranking(g)
+    ref = pll_undirected(g, rank)
+    table, _ = gll_chl(g, rank, batch=8, alpha=2.0,
+                       plant_first_superstep=True)
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+
+
+def test_gll_alpha_invariance():
+    g = scale_free(40, attach=2, seed=9)
+    rank = degree_ranking(g)
+    t1, _ = gll_chl(g, rank, batch=4, alpha=1.0)
+    t2, _ = gll_chl(g, rank, batch=16, alpha=16.0)
+    validate.check_equal(lbl.to_numpy_sets(t1), lbl.to_numpy_sets(t2))
+
+
+def test_parapll_covers_but_not_minimal():
+    g = scale_free(50, attach=2, seed=2)
+    rank = degree_ranking(g)
+    ref = pll_undirected(g, rank)
+    table, _ = parapll_chl(g, rank, batch=16, cap=256)
+    got = lbl.to_numpy_sets(table)
+    validate.check_cover(got, g)             # correct answers
+    extra = validate.redundant_count(got, ref)
+    assert extra > 0                         # ...but redundant labels
+    assert average_label_size(got) > average_label_size(ref)
+
+
+def test_parapll_als_grows_with_parallelism():
+    g = scale_free(60, attach=2, seed=8)
+    rank = degree_ranking(g)
+    als = []
+    for batch in (1, 4, 32):
+        table, _ = parapll_chl(g, rank, batch=batch, cap=512)
+        als.append(average_label_size(lbl.to_numpy_sets(table)))
+    assert als[0] <= als[1] <= als[2]
+    assert als[2] > als[0]

@@ -1,0 +1,21 @@
+"""Real 8-device collective semantics, via a subprocess (the main test
+session keeps the default 1-device host platform)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_multidevice_8way():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    driver = os.path.join(os.path.dirname(__file__),
+                          "multidevice_driver.py")
+    out = subprocess.run([sys.executable, driver], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "MULTIDEVICE_OK" in out.stdout

@@ -1,0 +1,63 @@
+"""PLaNT produces exactly the CHL (= sequential PLL output)."""
+
+import numpy as np
+import pytest
+
+from repro.core import labels as lbl
+from repro.core.plant import plant_chl
+from repro.core.pll import pll_undirected, chl_by_definition
+from repro.core import validate
+from repro.graphs import (grid_road, random_connected, random_geometric,
+                          scale_free)
+from repro.graphs.ranking import (betweenness_ranking, degree_ranking,
+                                  random_ranking)
+
+CASES = [
+    ("grid-deg", lambda s: grid_road(5, 6, seed=s), degree_ranking),
+    ("grid-btw", lambda s: grid_road(6, 5, seed=s),
+     lambda g: betweenness_ranking(g, samples=8)),
+    ("ba-deg", lambda s: scale_free(45, attach=2, seed=s), degree_ranking),
+    ("geo-rand", lambda s: random_geometric(35, seed=s),
+     lambda g: random_ranking(g.n, seed=7)),
+    ("tree+-deg", lambda s: random_connected(50, extra_edges=40, seed=s),
+     degree_ranking),
+]
+
+
+@pytest.mark.parametrize("name,gen,ranker", CASES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_plant_equals_pll(name, gen, ranker, seed):
+    g = gen(seed)
+    rank = ranker(g)
+    ref = pll_undirected(g, rank)
+    table, stats = plant_chl(g, rank, batch=8)
+    got = lbl.to_numpy_sets(table)
+    validate.check_equal(got, ref)
+    assert sum(stats["labels"]) == sum(len(l) for l in ref)
+
+
+def test_plant_is_chl_by_definition():
+    g = grid_road(4, 5, seed=2)
+    rank = degree_ranking(g)
+    table, _ = plant_chl(g, rank, batch=4)
+    got = lbl.to_numpy_sets(table)
+    ref = chl_by_definition(g, rank)
+    validate.check_equal(got, ref)
+
+
+def test_plant_cover_and_minimal():
+    g = scale_free(30, attach=2, seed=5)
+    rank = degree_ranking(g)
+    table, _ = plant_chl(g, rank, batch=16)
+    got = lbl.to_numpy_sets(table)
+    validate.check_cover(got, g)
+    validate.check_respects_r(got, g, rank)
+    validate.check_minimal(got, g)
+
+
+def test_plant_batch_size_invariance():
+    g = random_connected(40, extra_edges=30, seed=3)
+    rank = degree_ranking(g)
+    t1, _ = plant_chl(g, rank, batch=1)
+    t2, _ = plant_chl(g, rank, batch=64)
+    validate.check_equal(lbl.to_numpy_sets(t1), lbl.to_numpy_sets(t2))

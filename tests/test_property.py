@@ -1,0 +1,65 @@
+"""Hypothesis property tests: system invariants over randomized graphs,
+rankings, weights and algorithm hyper-parameters.
+
+Invariants (the paper's §4–§5 claims):
+  I1  PLaNT == GLL == DGLL == sequential PLL (CHL uniqueness for R)
+  I2  CHL satisfies the cover property
+  I3  CHL respects R
+  I4  CHL size is independent of batch size / α / Ψ_th / η / q
+  I5  paraPLL (no rank queries, no cleaning) covers but is ⊇ CHL
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import labels as lbl
+from repro.core import validate
+from repro.core.gll import gll_chl, parapll_chl
+from repro.core.plant import plant_chl
+from repro.core.pll import pll_undirected
+from repro.graphs import random_connected
+from repro.graphs.ranking import random_ranking
+from repro.sssp.oracle import all_pairs
+
+graph_params = st.tuples(
+    st.integers(min_value=4, max_value=36),    # n
+    st.integers(min_value=0, max_value=40),    # extra edges
+    st.integers(min_value=0, max_value=10_000),  # seed
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graph_params,
+       st.integers(min_value=1, max_value=9),     # batch
+       st.floats(min_value=0.5, max_value=8.0))   # alpha
+def test_chl_uniqueness_and_cover(params, batch, alpha):
+    n, extra, seed = params
+    g = random_connected(n, extra_edges=extra, seed=seed)
+    rank = random_ranking(g.n, seed=seed ^ 0xBEEF)
+    ref = pll_undirected(g, rank)
+
+    t_plant, _ = plant_chl(g, rank, batch=batch)
+    validate.check_equal(lbl.to_numpy_sets(t_plant), ref)     # I1
+
+    t_gll, _ = gll_chl(g, rank, batch=batch, alpha=alpha)
+    validate.check_equal(lbl.to_numpy_sets(t_gll), ref)       # I1, I4
+
+    D = all_pairs(g)
+    validate.check_cover(ref, g, D)                           # I2
+    validate.check_respects_r(ref, g, rank, D)                # I3
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_params, st.integers(min_value=2, max_value=16))
+def test_parapll_superset_and_cover(params, batch):
+    n, extra, seed = params
+    g = random_connected(n, extra_edges=extra, seed=seed)
+    rank = random_ranking(g.n, seed=seed ^ 0xF00D)
+    ref = pll_undirected(g, rank)
+    t, _ = parapll_chl(g, rank, batch=batch, cap=max(64, 4 * n))
+    got = lbl.to_numpy_sets(t)
+    D = all_pairs(g)
+    validate.check_cover(got, g, D)                           # I5: cover
+    for v in range(g.n):                                      # I5: ⊇ CHL
+        for h, d in ref[v].items():
+            assert got[v].get(h) == d, (v, h)

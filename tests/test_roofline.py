@@ -1,0 +1,59 @@
+"""Roofline machinery: HLO collective parsing + analytic FLOPs."""
+
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.roofline import analysis as ra
+
+HLO = """
+HloModule test
+  %x = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[8,2048]{1,0} all-gather(%x), replica_groups=[16,16]<=[256]T(1,0), dimensions={1}
+  %ar = f32[1024]{0} all-reduce(%y), replica_groups=[1,512]<=[512], to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (bf16[4,4]{1,0}, bf16[4,64]) all-gather-start(%v), replica_groups=[32,16]<=[512]
+  %agd = bf16[4,64] all-gather-done(%ags)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = ra.parse_collectives(HLO, 512)
+    assert st.counts == {"all-gather": 2, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1}
+    # all-gather: result 8*2048*2 B * 15/16
+    ag1 = 8 * 2048 * 2 * 15 / 16
+    # all-gather-start: tuple result counts both bf16 operands (4*4+4*64)
+    ag2 = (4 * 4 + 4 * 64) * 2 * 15 / 16
+    ar = 2 * 1024 * 4 * 511 / 512
+    rs = 64 * 4 * 3             # shard*(n-1), n=4
+    cp = 32 * 32 * 2
+    want = ag1 + ag2 + ar + rs + cp
+    np.testing.assert_allclose(st.wire_bytes, want, rtol=1e-6)
+
+
+def test_group_size_parsing():
+    assert ra._group_size("replica_groups=[16,16]<=[256]", 256) == 16
+    assert ra._group_size("replica_groups={{0,1,2}}", 8) == 3
+    assert ra._group_size("no groups here", 42) == 42
+
+
+def test_analytic_flops_dense_sanity():
+    spec = cfgbase.get("smollm_360m")
+    shape = cfgbase.SHAPE_BY_NAME["train_4k"]
+    got = ra.analytic_flops(spec.config, shape)
+    # ~6 · N_matmul · tokens ; N_matmul ≈ 313M (non-embed + unembed)
+    tokens = 256 * 4096
+    assert 4.0 * 3.0e8 * tokens < got < 9.0 * 3.6e8 * tokens
+
+
+def test_analytic_flops_moe_counts_active_only():
+    spec = cfgbase.get("qwen3_moe_235b_a22b")
+    shape = cfgbase.SHAPE_BY_NAME["train_4k"]
+    got = ra.analytic_flops(spec.config, shape)
+    total_p = spec.config.param_count()        # 235B-ish total
+    active_p = spec.config.active_param_count()
+    tokens = 256 * 4096
+    assert got < 6.2 * total_p * tokens        # far below dense count
+    assert got > 3.0 * active_p * tokens       # above active floor

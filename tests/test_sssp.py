@@ -1,0 +1,68 @@
+"""Batched relaxation engine vs Dijkstra/networkx oracles."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.graphs import (grid_road, random_connected, random_geometric,
+                          scale_free, to_networkx)
+from repro.graphs.ranking import degree_ranking, random_ranking
+from repro.sssp import batched_sssp, batched_sssp_maxrank
+from repro.sssp.oracle import dijkstra, dijkstra_maxrank
+
+GRAPHS = [
+    ("grid", lambda s: grid_road(6, 7, seed=s)),
+    ("ba", lambda s: scale_free(40, attach=2, seed=s)),
+    ("geo", lambda s: random_geometric(30, seed=s)),
+    ("tree+", lambda s: random_connected(35, extra_edges=25, seed=s)),
+    ("digraph", lambda s: random_connected(25, extra_edges=40, seed=s,
+                                           directed=True)),
+]
+
+
+@pytest.mark.parametrize("name,gen", GRAPHS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_sssp_matches_dijkstra(name, gen, seed):
+    g = gen(seed)
+    roots = np.arange(0, g.n, max(1, g.n // 7), dtype=np.int32)
+    dist = np.asarray(batched_sssp(jnp.asarray(g.ell_src),
+                                   jnp.asarray(g.ell_w),
+                                   jnp.asarray(roots)))
+    for i, r in enumerate(roots):
+        ref = dijkstra(g, int(r))
+        np.testing.assert_allclose(dist[i], ref.astype(np.float32))
+
+
+@pytest.mark.parametrize("name,gen", GRAPHS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_maxrank_matches_scalar_oracle(name, gen, seed):
+    g = gen(seed)
+    rank = random_ranking(g.n, seed=seed + 100)
+    roots = np.arange(0, g.n, max(1, g.n // 5), dtype=np.int32)
+    st = batched_sssp_maxrank(jnp.asarray(g.ell_src), jnp.asarray(g.ell_w),
+                              jnp.asarray(rank), jnp.asarray(roots))
+    dist = np.asarray(st.dist)
+    mrank = np.asarray(st.mrank)
+    for i, r in enumerate(roots):
+        ref_d, ref_m = dijkstra_maxrank(g, int(r), rank)
+        np.testing.assert_allclose(dist[i], ref_d.astype(np.float32))
+        np.testing.assert_array_equal(mrank[i], ref_m.astype(np.int32))
+
+
+def test_networkx_cross_check():
+    g = grid_road(5, 5, seed=3)
+    G = to_networkx(g)
+    import networkx as nx
+    ref = nx.single_source_dijkstra_path_length(G, 0)
+    dist = np.asarray(batched_sssp(jnp.asarray(g.ell_src),
+                                   jnp.asarray(g.ell_w),
+                                   jnp.asarray(np.array([0], np.int32))))[0]
+    for v, d in ref.items():
+        assert dist[v] == np.float32(d)
+
+
+def test_degree_ranking_total_order():
+    g = scale_free(50, seed=0)
+    r = degree_ranking(g)
+    assert sorted(r.tolist()) == list(range(g.n))
