@@ -17,7 +17,8 @@ from benchmarks.common import Row, row
 
 _CHILD = r"""
 import os, json, sys
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=%d --xla_cpu_collective_call_terminate_timeout_seconds=1200 --xla_cpu_collective_call_warn_stuck_timeout_seconds=600")
+from repro.compat import set_host_device_count
+set_host_device_count(%d)
 import numpy as np
 from repro.core.dgll import make_node_mesh, dgll_chl
 from repro.core.hybrid import hybrid_chl, plant_distributed_chl

@@ -12,7 +12,8 @@ from benchmarks.common import Row, row
 
 _CHILD = r"""
 import os, json, time
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 --xla_cpu_collective_call_terminate_timeout_seconds=1200 --xla_cpu_collective_call_warn_stuck_timeout_seconds=600")
+from repro.compat import set_host_device_count
+set_host_device_count(8)
 import numpy as np
 import jax, jax.numpy as jnp
 from repro.core import labels as lbl

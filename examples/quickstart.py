@@ -30,8 +30,8 @@ def main() -> None:
     rng = np.random.default_rng(0)
     u = rng.integers(0, g.n, 8).astype(np.int32)
     v = rng.integers(0, g.n, 8).astype(np.int32)
-    d = np.asarray(query_table(table, jnp.asarray(u), jnp.asarray(v),
-                               interpret=True))
+    d = np.asarray(query_table(table, jnp.asarray(u),
+                               jnp.asarray(v)))
     print("\nPPSD queries (hub-label intersection, Pallas kernel):")
     for ui, vi, di in zip(u, v, d):
         ref = dijkstra(g, int(ui))[vi]

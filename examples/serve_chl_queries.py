@@ -5,9 +5,9 @@ three modes (QLSN / QFDL / QDOL) on an 8-node virtual cluster.
     PYTHONPATH=src python examples/serve_chl_queries.py
 """
 
-import os
+from repro.compat import set_host_device_count
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8 --xla_cpu_collective_call_terminate_timeout_seconds=1200 --xla_cpu_collective_call_warn_stuck_timeout_seconds=600")
+set_host_device_count(8)               # before jax backend init
 
 import time                                                 # noqa: E402
 import numpy as np                                          # noqa: E402

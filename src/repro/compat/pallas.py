@@ -1,0 +1,133 @@
+"""Pallas backend dispatch + TPU compiler-params drift.
+
+Two jobs:
+
+- ``tpu_compiler_params(...)``: the params class was renamed
+  ``pltpu.TPUCompilerParams`` (jax 0.4.x) → ``pltpu.CompilerParams``
+  (newer). Resolve whichever exists and drop constructor kwargs the
+  installed class doesn't know.
+
+- ``pallas_call(...)``: single place that decides *how* a kernel runs.
+  Kernels declare what they need (grid/specs/``dimension_semantics``);
+  the dispatcher probes the platform and picks compiled-TPU vs
+  ``interpret=True`` emulation, overridable with one env var::
+
+      REPRO_PALLAS_BACKEND=auto|compiled|interpret   (default: auto)
+
+  ``auto`` compiles on TPU and interprets everywhere else. This
+  replaces per-call-site ``interpret=True`` plumbing: callers may
+  still force a mode programmatically (tests of the compiled path),
+  but the default everywhere is ``interpret=None`` → dispatch.
+"""
+
+from __future__ import annotations
+
+import inspect
+import os
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+
+BACKEND_ENV_VAR = "REPRO_PALLAS_BACKEND"
+
+_TRUTHY = ("interpret", "1", "true", "yes")
+_FALSY = ("compiled", "tpu", "0", "false", "no")
+
+
+def compiler_params_cls(pltpu_module: Any = None):
+    """The installed TPU compiler-params class, or None if the Pallas
+    TPU backend exposes neither spelling."""
+    if pltpu_module is None:
+        try:
+            from jax.experimental.pallas import tpu as pltpu
+        except ImportError:                              # pragma: no cover
+            return None
+        pltpu_module = pltpu
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu_module, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+def tpu_compiler_params(*, pltpu_module: Any = None, **kwargs):
+    """Construct TPU compiler params portably, or return None when the
+    class is unavailable. Kwargs the installed class does not accept
+    are dropped (they are tuning hints, never correctness)."""
+    cls = compiler_params_cls(pltpu_module)
+    if cls is None:
+        return None
+    try:
+        accepted = inspect.signature(cls).parameters
+    except (TypeError, ValueError):
+        return cls(**kwargs)
+    if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in accepted.values()):
+        kwargs = {k: v for k, v in kwargs.items() if k in accepted}
+    return cls(**kwargs)
+
+
+def resolve_interpret(interpret: Optional[bool] = None, *,
+                      platform: Optional[str] = None,
+                      env: Optional[Mapping[str, str]] = None) -> bool:
+    """Decide interpret mode: explicit arg > env override > platform.
+
+    On anything but TPU the compiled Pallas path is either unavailable
+    or not what we target, so ``auto`` falls back to the interpreter.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ if env is None else env
+    mode = env.get(BACKEND_ENV_VAR, "auto").strip().lower()
+    if mode in _TRUTHY:
+        return True
+    if mode in _FALSY:
+        return False
+    if mode not in ("", "auto"):
+        raise ValueError(f"{BACKEND_ENV_VAR}={mode!r}; expected auto, "
+                         "compiled, or interpret")
+    plat = jax.default_backend() if platform is None else platform
+    return plat != "tpu"
+
+
+def pallas_call(kernel, *, out_shape,
+                grid=None, in_specs=None, out_specs=None,
+                dimension_semantics: Optional[Sequence[str]] = None,
+                interpret: Optional[bool] = None, **kwargs):
+    """Backend-dispatching ``pl.pallas_call``.
+
+    ``dimension_semantics`` is the portable spelling of the grid
+    annotation: it is packed into whichever compiler-params class the
+    installed Pallas has, and omitted entirely in interpret mode
+    (the interpreter runs the grid sequentially, so ``arbitrary``
+    accumulation semantics hold by construction).
+    """
+    interp = resolve_interpret(interpret)
+    if not interp and dimension_semantics is not None \
+            and "compiler_params" not in kwargs:
+        if jax.default_backend() == "tpu":
+            params = tpu_compiler_params(
+                dimension_semantics=tuple(dimension_semantics))
+            if params is not None:
+                kwargs["compiler_params"] = params
+        elif "arbitrary" in dimension_semantics:
+            # 'arbitrary' promises sequential grid execution along that
+            # axis (kernels accumulate into their output block under
+            # it); a non-TPU compiled lowering has no way to honor the
+            # annotation, and running the grid concurrently would race
+            # the accumulation — refuse rather than return garbage
+            raise NotImplementedError(
+                "compiled Pallas dispatch on backend "
+                f"{jax.default_backend()!r} cannot honor 'arbitrary' "
+                f"dimension semantics {tuple(dimension_semantics)}; "
+                "use the TPU backend or interpret mode "
+                f"({BACKEND_ENV_VAR}=interpret)")
+    if grid is not None:
+        kwargs["grid"] = grid
+    if in_specs is not None:
+        kwargs["in_specs"] = in_specs
+    if out_specs is not None:
+        kwargs["out_specs"] = out_specs
+    return pl.pallas_call(kernel, out_shape=out_shape,
+                          interpret=interp, **kwargs)

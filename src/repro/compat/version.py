@@ -1,0 +1,39 @@
+"""Installed-JAX version introspection.
+
+Resolvers in this package prefer *capability* probes (does the
+attribute exist? does the signature accept the kwarg?) over version
+comparisons — version gates rot, signatures don't lie. The parsed
+tuple is still exported for logging and for the rare gate where a
+behavioral change has no probe-able surface.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def jax_version_str() -> str:
+    return jax.__version__
+
+
+def version_tuple(s: str | None = None) -> tuple[int, int, int]:
+    """Parse ``"0.4.37"`` / ``"0.8.0.dev20250101"`` → ``(0, 4, 37)``.
+
+    Non-numeric suffixes within a component are dropped; missing
+    components are zero-filled so the result always compares cleanly.
+    """
+    s = jax.__version__ if s is None else s
+    parts: list[int] = []
+    for piece in s.split(".")[:3]:
+        digits = ""
+        for ch in piece:
+            if not ch.isdigit():
+                break
+            digits += ch
+        parts.append(int(digits) if digits else 0)
+    while len(parts) < 3:
+        parts.append(0)
+    return (parts[0], parts[1], parts[2])
+
+
+JAX_VERSION: tuple[int, int, int] = version_tuple()

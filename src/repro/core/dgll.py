@@ -30,8 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import make_mesh, shard_map
 from repro.core import labels as lbl
 from repro.core.labels import LabelTable
 from repro.core.gll import construct_batch
@@ -45,8 +45,7 @@ def make_node_mesh(q: Optional[int] = None) -> Mesh:
     """1-D mesh over up to ``q`` local devices, axis name ``node``."""
     devs = jax.devices()
     q = len(devs) if q is None else min(q, len(devs))
-    return jax.make_mesh((q,), ("node",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((q,), ("node",))
 
 
 def assign_roots(rank: np.ndarray, q: int) -> np.ndarray:
@@ -220,7 +219,7 @@ def dgll_superstep_fn(mesh: Mesh, n: int, batch: int, use_hc: bool,
         mesh=mesh,
         in_specs=in_specs + (P(), P()),
         out_specs=out_specs,
-        check_vma=False,
+        check_replication=False,
     )
     return jax.jit(sm)
 

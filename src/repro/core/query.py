@@ -26,8 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.core import labels as lbl
 from repro.core.labels import LabelTable
 
@@ -60,7 +60,7 @@ def qfdl_fn(mesh: Mesh):
 
     return jax.jit(shard_map(step, mesh=mesh,
                              in_specs=(t_spec, P(), P()),
-                             out_specs=P(), check_vma=False))
+                             out_specs=P(), check_replication=False))
 
 
 # --------------------------------------------------------------------
@@ -150,7 +150,7 @@ def qdol_fn(mesh: Mesh, layout: QdolLayout):
     return jax.jit(shard_map(
         step, mesh=mesh,
         in_specs=(QdolStore(P("node"), P("node"), P("node")), P(), P()),
-        out_specs=P(), check_vma=False))
+        out_specs=P(), check_replication=False))
 
 
 def label_memory_bytes(table: LabelTable) -> int:

@@ -5,7 +5,9 @@
 - ``label_query``: batched PPSD label-intersection — the query-serving
                    hot loop (QLSN/QFDL/QDOL all reduce to it).
 
-Each kernel ships `<name>.py` (pallas_call + BlockSpec), `ops.py`
-(jit'd wrapper + padding), `ref.py` (pure-jnp oracle); tests sweep
-shapes/dtypes in ``interpret=True`` mode against the oracle.
+Each kernel ships `<name>.py` (compat pallas_call + BlockSpec),
+`ops.py` (jit'd wrapper + padding), `ref.py` (pure-jnp oracle). The
+execution backend is chosen by ``repro.compat``'s dispatch (compiled
+on TPU, interpreter elsewhere; ``REPRO_PALLAS_BACKEND`` overrides) —
+tests sweep shapes/dtypes against the oracle under that dispatch.
 """

@@ -25,7 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_call, resolve_interpret
 
 
 def _label_query_kernel(hu_ref, du_ref, hv_ref, dv_ref, out_ref):
@@ -38,18 +39,27 @@ def _label_query_kernel(hu_ref, du_ref, hv_ref, dv_ref, out_ref):
     out_ref[...] = jnp.min(dd, axis=(1, 2))[:, None]     # [BQ, 1]
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def label_query(hubs_u, dist_u, hubs_v, dist_v, *, bq: int = 8,
-                interpret: bool = False) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """Batched query distances.
 
-    Args: hubs_*: i32 [Q, L] (−1 padding); dist_*: f32 [Q, L].
+    Args: hubs_*: i32 [Q, L] (−1 padding); dist_*: f32 [Q, L];
+      interpret: None = compat backend dispatch (compiled on TPU,
+      interpreter elsewhere; `REPRO_PALLAS_BACKEND` overrides).
     Returns: f32 [Q] (−inf never; +inf when hub sets are disjoint).
     """
+    # resolve before jit so the backend choice keys the jit cache
+    return _label_query_jit(hubs_u, dist_u, hubs_v, dist_v, bq=bq,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def _label_query_jit(hubs_u, dist_u, hubs_v, dist_v, *, bq: int,
+                     interpret: bool) -> jax.Array:
     Q, L = hubs_u.shape
     assert Q % bq == 0, (Q, bq)
     grid = (Q // bq,)
-    out = pl.pallas_call(
+    out = pallas_call(
         _label_query_kernel,
         grid=grid,
         in_specs=[
@@ -60,8 +70,7 @@ def label_query(hubs_u, dist_u, hubs_v, dist_v, *, bq: int = 8,
         ],
         out_specs=pl.BlockSpec((bq, 1), lambda q: (q, 0)),
         out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
+        dimension_semantics=("parallel",),
         interpret=interpret,
     )(hubs_u, dist_u, hubs_v, dist_v)
     return out[:, 0]

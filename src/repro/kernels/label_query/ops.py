@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import resolve_interpret
 from repro.core.labels import LabelTable
 from repro.kernels.label_query.label_query import label_query
 from repro.kernels.label_query.ref import label_query_ref
@@ -28,10 +29,18 @@ def _pad_axis(x, mult, axis, fill):
     return jnp.pad(x, widths, constant_values=fill)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
 def label_query_padded(hubs_u, dist_u, hubs_v, dist_v, *,
-                       interpret: bool = False,
+                       interpret: bool | None = None,
                        use_kernel: bool = True) -> jax.Array:
+    return _label_query_padded_jit(
+        hubs_u, dist_u, hubs_v, dist_v,
+        interpret=resolve_interpret(interpret), use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _label_query_padded_jit(hubs_u, dist_u, hubs_v, dist_v, *,
+                            interpret: bool,
+                            use_kernel: bool) -> jax.Array:
     Q, L = hubs_u.shape
     if not use_kernel or L > _MAX_KERNEL_L:
         return label_query_ref(hubs_u, dist_u, hubs_v, dist_v)
@@ -46,11 +55,18 @@ def label_query_padded(hubs_u, dist_u, hubs_v, dist_v, *,
     return out[:Q]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
 def query_table(table: LabelTable, u: jax.Array, v: jax.Array, *,
-                interpret: bool = False,
+                interpret: bool | None = None,
                 use_kernel: bool = True) -> jax.Array:
     """Serving hot path: PPSD(u[i], v[i]) over a label table."""
+    return _query_table_jit(table, u, v,
+                            interpret=resolve_interpret(interpret),
+                            use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _query_table_jit(table: LabelTable, u: jax.Array, v: jax.Array, *,
+                     interpret: bool, use_kernel: bool) -> jax.Array:
     return label_query_padded(
         table.hubs[u], table.dist[u], table.hubs[v], table.dist[v],
         interpret=interpret, use_kernel=use_kernel)

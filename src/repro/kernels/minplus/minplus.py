@@ -27,7 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_call, resolve_interpret
 
 NEG = -1  # mrank payload for "unreached"
 
@@ -62,29 +63,40 @@ def _minplus_kernel(dist_ref, mrank_ref, w_ref, out_d_ref, out_m_ref):
         out_m_ref[...] = jnp.maximum(keep_acc, keep_new)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bb", "bn", "bk", "interpret"))
 def minplus(dist: jax.Array, mrank: jax.Array, w: jax.Array, *,
             bb: int = 8, bn: int = 128, bk: int = 128,
-            interpret: bool = False):
+            interpret: bool | None = None):
     """Lexicographic (min,+) product.
 
     Args:
       dist:  f32 [B, K] tentative distances.
       mrank: i32 [B, K] max-rank payloads (−1 = unreached).
       w:     f32 [K, N] dense edge-weight block (+inf = no edge).
+      interpret: None = compat backend dispatch (compiled on TPU,
+        interpreter elsewhere; `REPRO_PALLAS_BACKEND` overrides).
     Returns:
       (out_d f32 [B, N], out_m i32 [B, N]).
 
     Shapes must be multiples of the tile sizes; `ops.py` pads.
     """
+    # resolve before jit so the backend choice is part of the jit
+    # cache key (env changes after the first call are not silently
+    # ignored by a stale trace)
+    return _minplus_jit(dist, mrank, w, bb=bb, bn=bn, bk=bk,
+                        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "bn", "bk", "interpret"))
+def _minplus_jit(dist: jax.Array, mrank: jax.Array, w: jax.Array, *,
+                 bb: int, bn: int, bk: int, interpret: bool):
     B, K = dist.shape
     K2, N = w.shape
     assert K == K2 and mrank.shape == (B, K)
     assert B % bb == 0 and N % bn == 0 and K % bk == 0, (B, N, K)
 
     grid = (B // bb, N // bn, K // bk)
-    return pl.pallas_call(
+    return pallas_call(
         _minplus_kernel,
         grid=grid,
         in_specs=[
@@ -100,7 +112,6 @@ def minplus(dist: jax.Array, mrank: jax.Array, w: jax.Array, *,
             jax.ShapeDtypeStruct((B, N), jnp.float32),
             jax.ShapeDtypeStruct((B, N), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(dist, mrank, w)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import resolve_interpret
 from repro.kernels.minplus.minplus import minplus
 from repro.kernels.minplus.ref import minplus_ref
 
@@ -30,10 +31,17 @@ def _pad_to(x: jax.Array, mult: int, axis: int, fill) -> jax.Array:
     return jnp.pad(x, widths, constant_values=fill)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def minplus_padded(dist, mrank, w, *, interpret: bool = False,
+def minplus_padded(dist, mrank, w, *, interpret: bool | None = None,
                    use_kernel: bool = True):
     """Shape-safe lexicographic (min,+): pads to tile multiples."""
+    return _minplus_padded_jit(dist, mrank, w,
+                               interpret=resolve_interpret(interpret),
+                               use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _minplus_padded_jit(dist, mrank, w, *, interpret: bool,
+                        use_kernel: bool):
     B, K = dist.shape
     N = w.shape[1]
     if not use_kernel:
@@ -56,11 +64,19 @@ def dense_weights(g, dtype=jnp.float32) -> jax.Array:
     return jnp.asarray(w, dtype=dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def plant_sweep_dense(dist, mrank, w, rank, *, interpret: bool = False,
+def plant_sweep_dense(dist, mrank, w, rank, *,
+                      interpret: bool | None = None,
                       use_kernel: bool = True):
     """One full PLaNT relaxation sweep on a dense block (kernel +
     elementwise epilogue — mirrors `repro.sssp.relax._sweep`)."""
+    return _plant_sweep_dense_jit(dist, mrank, w, rank,
+                                  interpret=resolve_interpret(interpret),
+                                  use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _plant_sweep_dense_jit(dist, mrank, w, rank, *, interpret: bool,
+                           use_kernel: bool):
     od, om = minplus_padded(dist, mrank, w, interpret=interpret,
                             use_kernel=use_kernel)
     new_dist = jnp.minimum(dist, od)
@@ -71,14 +87,22 @@ def plant_sweep_dense(dist, mrank, w, rank, *, interpret: bool = False,
     return new_dist, new_mrank
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def plant_fixpoint_dense(w, rank, roots, *, interpret: bool = False,
+def plant_fixpoint_dense(w, rank, roots, *,
+                         interpret: bool | None = None,
                          use_kernel: bool = True):
     """Dense-block PLaNT: relax to fixpoint, return (dist, mrank, emit).
 
     Drop-in alternative to the ELL engine for graphs whose (core)
     adjacency fits as a dense block.
     """
+    return _plant_fixpoint_dense_jit(
+        w, rank, roots, interpret=resolve_interpret(interpret),
+        use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _plant_fixpoint_dense_jit(w, rank, roots, *, interpret: bool,
+                              use_kernel: bool):
     n = w.shape[0]
     B = roots.shape[0]
     rank = rank.astype(jnp.int32)

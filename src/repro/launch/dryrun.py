@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 """Multi-pod dry-run driver (one cell per invocation, or --all).
 
 For every (architecture × input shape × mesh) cell:
@@ -23,6 +19,12 @@ Usage:
     python -m repro.launch.dryrun --arch chl_road --shape plant \
         --mesh pod
 """
+
+import os
+
+from repro.compat import set_host_device_count
+
+set_host_device_count(512)             # before jax backend init
 
 import argparse       # noqa: E402
 import json           # noqa: E402

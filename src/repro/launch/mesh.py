@@ -1,9 +1,13 @@
 """Production mesh builders (functions, not module constants — importing
-this module never touches jax device state)."""
+this module never touches jax device state). All mesh construction
+routes through ``repro.compat.make_mesh`` so the ``axis_types``
+signature drift stays out of this layer."""
 
 from __future__ import annotations
 
 import jax
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False,
@@ -21,9 +25,7 @@ def make_production_mesh(*, multi_pod: bool = False,
     assert dm[0] * dm[1] == 256, dm
     shape = (2,) + dm if multi_pod else dm
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_flat_mesh(q: int | None = None):
@@ -31,13 +33,10 @@ def make_flat_mesh(q: int | None = None):
     (paper §5: q independent nodes)."""
     devs = jax.devices()
     q = len(devs) if q is None else q
-    return jax.make_mesh((q,), ("node",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((q,), ("node",))
 
 
 def make_smoke_mesh():
     """Whatever devices exist (usually 1 on CPU), 2-D named like prod."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (1, n), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, n), ("data", "model"))

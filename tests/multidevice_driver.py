@@ -1,13 +1,18 @@
 """Subprocess driver for real multi-device (8-way) CHL + query tests.
 
-Run standalone:  python tests/multidevice_driver.py
+Run standalone:  PYTHONPATH=src python tests/multidevice_driver.py
 Invoked by tests/test_multidevice.py in a subprocess so the 8-device
 host platform never leaks into the main (1-device) test session.
+
+XLA flag injection goes through the compat probe: the CPU-collective
+watchdog flags exist only in newer XLA builds, and an unknown flag in
+XLA_FLAGS aborts the whole process (returncode −6) before any test
+assertion runs.
 """
 
-import os
+from repro.compat import set_host_device_count
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 --xla_cpu_collective_call_terminate_timeout_seconds=1200 --xla_cpu_collective_call_warn_stuck_timeout_seconds=600 " + os.environ.get("XLA_FLAGS", ""))
+set_host_device_count(8)               # before jax backend init
 
 import numpy as np                                             # noqa: E402
 import jax                                                     # noqa: E402

@@ -1,0 +1,443 @@
+"""Unit tests for ``repro.compat`` — the only sanctioned unstable-JAX
+surface in the repo.
+
+Each resolver is exercised against BOTH API spellings (old 0.4.x and
+current) via stand-in modules/callables, then once against the
+actually-installed jax. A hygiene test scans the tree to keep direct
+unstable imports from creeping back in outside ``src/repro/compat/``.
+
+Forbidden spellings are assembled by string concatenation throughout
+so this file itself stays clean under that same scan (and under the
+repo-level acceptance grep).
+"""
+
+import pathlib
+import types
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.compat import meshes, pallas, shardmap, version, xla
+
+NEW_REP_KWARG = "check_" + "vma"
+OLD_REP_KWARG = "check_" + "rep"
+NEW_CP_NAME = "Compiler" + "Params"
+OLD_CP_NAME = "TPU" + "Compiler" + "Params"
+
+
+# --------------------------------------------------------------------
+# version parsing
+# --------------------------------------------------------------------
+
+@pytest.mark.parametrize("raw,want", [
+    ("0.4.37", (0, 4, 37)),
+    ("0.8.0.dev20250101", (0, 8, 0)),
+    ("1.2", (1, 2, 0)),
+    ("0.5.3rc1", (0, 5, 3)),
+])
+def test_version_tuple(raw, want):
+    assert version.version_tuple(raw) == want
+
+
+def test_installed_version_parsed():
+    assert compat.JAX_VERSION >= (0, 4, 37)
+
+
+# --------------------------------------------------------------------
+# shard_map: location resolution
+# --------------------------------------------------------------------
+
+def test_resolve_prefers_top_level():
+    def top(*a, **k):
+        return "top"
+
+    def exp(*a, **k):
+        return "exp"
+
+    mod = types.SimpleNamespace(
+        shard_map=top,
+        experimental=types.SimpleNamespace(
+            shard_map=types.SimpleNamespace(shard_map=exp)))
+    assert shardmap.resolve_shard_map(mod) is top
+
+
+def test_resolve_falls_back_to_experimental():
+    def exp(*a, **k):
+        return "exp"
+
+    mod = types.SimpleNamespace(
+        experimental=types.SimpleNamespace(
+            shard_map=types.SimpleNamespace(shard_map=exp)))
+    assert shardmap.resolve_shard_map(mod) is exp
+
+
+def test_resolve_missing_raises():
+    with pytest.raises(AttributeError):
+        shardmap.resolve_shard_map(types.SimpleNamespace())
+
+
+def test_resolve_installed_jax():
+    assert callable(shardmap.resolve_shard_map())
+
+
+# --------------------------------------------------------------------
+# shard_map: replication-kwarg translation (both spellings)
+# --------------------------------------------------------------------
+
+def _fake_impl(kwarg_name):
+    """A stand-in shard_map whose signature carries ``kwarg_name``."""
+    captured = {}
+    src = (f"def impl(f, *, mesh, in_specs, out_specs, "
+           f"{kwarg_name}=True):\n"
+           f"    captured.update(mesh=mesh, flag={kwarg_name})\n"
+           f"    return 'wrapped'\n")
+    ns = {"captured": captured}
+    exec(src, ns)
+    return ns["impl"], captured
+
+
+@pytest.mark.parametrize("spelling", [NEW_REP_KWARG, OLD_REP_KWARG])
+def test_shard_map_translates_replication_kwarg(spelling):
+    impl, captured = _fake_impl(spelling)
+    assert shardmap.replication_kwarg(impl) == spelling
+    out = compat.shard_map(lambda x: x, mesh="M", in_specs=(),
+                           out_specs=(), check_replication=False,
+                           _impl_override=impl)
+    assert out == "wrapped"
+    assert captured["flag"] is False
+    assert captured["mesh"] == "M"
+
+
+def test_shard_map_drops_kwarg_when_signature_has_neither():
+    def impl(f, *, mesh, in_specs, out_specs):
+        return "bare"
+
+    assert shardmap.replication_kwarg(impl) is None
+    out = compat.shard_map(lambda x: x, mesh=None, in_specs=(),
+                           out_specs=(), check_replication=False,
+                           _impl_override=impl)
+    assert out == "bare"
+
+
+def test_installed_jax_accepts_one_spelling():
+    spelling = shardmap.replication_kwarg(shardmap.resolve_shard_map())
+    assert spelling in (NEW_REP_KWARG, OLD_REP_KWARG)
+
+
+def test_shard_map_real_roundtrip():
+    from jax.sharding import PartitionSpec as P
+    mesh = compat.make_mesh((1,), ("node",))
+    f = compat.shard_map(lambda x: x + 1, mesh=mesh, in_specs=P(),
+                         out_specs=P(), check_replication=False)
+    np.testing.assert_array_equal(np.asarray(f(jnp.arange(3))),
+                                  [1, 2, 3])
+
+
+# --------------------------------------------------------------------
+# make_mesh: axis_types signature drift
+# --------------------------------------------------------------------
+
+class _FakeAxisType:
+    Auto = "AUTO"
+    Explicit = "EXPLICIT"
+    Manual = "MANUAL"
+
+
+def _new_make_mesh(shape, names, *, axis_types=None, devices=None):
+    return None
+
+
+def _old_make_mesh(shape, names, *, devices=None):
+    return None
+
+
+def test_mesh_axis_kwargs_new_api():
+    kw = meshes.mesh_axis_kwargs(2, make_mesh_fn=_new_make_mesh,
+                                 axis_type_cls=_FakeAxisType)
+    assert kw == {"axis_types": ("AUTO", "AUTO")}
+    kw = meshes.mesh_axis_kwargs(1, axis_types=("explicit",),
+                                 make_mesh_fn=_new_make_mesh,
+                                 axis_type_cls=_FakeAxisType)
+    assert kw == {"axis_types": ("EXPLICIT",)}
+
+
+def test_mesh_axis_kwargs_old_api_drops_kwarg():
+    # no enum at all (jax 0.4.x)
+    assert meshes.mesh_axis_kwargs(2, make_mesh_fn=_old_make_mesh,
+                                   axis_type_cls=None) == {}
+    # enum exists but make_mesh predates the kwarg (mid-transition)
+    assert meshes.mesh_axis_kwargs(2, make_mesh_fn=_old_make_mesh,
+                                   axis_type_cls=_FakeAxisType) == {}
+
+
+def test_mesh_axis_kwargs_validates():
+    with pytest.raises(ValueError):
+        meshes.mesh_axis_kwargs(2, axis_types=("auto",),
+                                make_mesh_fn=_new_make_mesh,
+                                axis_type_cls=_FakeAxisType)
+    with pytest.raises(ValueError):
+        meshes.mesh_axis_kwargs(1, axis_types=("bogus",),
+                                make_mesh_fn=_new_make_mesh,
+                                axis_type_cls=_FakeAxisType)
+
+
+def test_make_mesh_installed_jax():
+    m = compat.make_mesh((1,), ("node",))
+    assert m.axis_names == ("node",)
+    assert m.devices.size == 1
+
+
+# --------------------------------------------------------------------
+# Pallas: compiler-params class drift + backend dispatch
+# --------------------------------------------------------------------
+
+def test_compiler_params_both_spellings():
+    new_cls = type(NEW_CP_NAME, (), {})
+    old_cls = type(OLD_CP_NAME, (), {})
+    mod_new = types.SimpleNamespace(**{NEW_CP_NAME: new_cls})
+    mod_old = types.SimpleNamespace(**{OLD_CP_NAME: old_cls})
+    mod_both = types.SimpleNamespace(**{NEW_CP_NAME: new_cls,
+                                        OLD_CP_NAME: old_cls})
+    assert pallas.compiler_params_cls(mod_new) is new_cls
+    assert pallas.compiler_params_cls(mod_old) is old_cls
+    assert pallas.compiler_params_cls(mod_both) is new_cls   # prefer new
+    assert pallas.compiler_params_cls(types.SimpleNamespace()) is None
+
+
+def test_tpu_compiler_params_absent_returns_none():
+    out = pallas.tpu_compiler_params(
+        pltpu_module=types.SimpleNamespace(),
+        dimension_semantics=("parallel",))
+    assert out is None
+
+
+def test_tpu_compiler_params_drops_unknown_kwargs():
+    class Params:
+        def __init__(self, dimension_semantics=None):
+            self.dimension_semantics = dimension_semantics
+
+    mod = types.SimpleNamespace(**{NEW_CP_NAME: Params})
+    out = pallas.tpu_compiler_params(
+        pltpu_module=mod, dimension_semantics=("parallel",),
+        vmem_limit_bytes=1 << 20)
+    assert out.dimension_semantics == ("parallel",)
+
+
+def test_tpu_compiler_params_installed_jax():
+    params = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    assert params is not None
+    assert type(params).__name__ in (NEW_CP_NAME, OLD_CP_NAME)
+
+
+def test_resolve_interpret_explicit_wins():
+    env = {pallas.BACKEND_ENV_VAR: "compiled"}
+    assert pallas.resolve_interpret(True, env=env) is True
+    env = {pallas.BACKEND_ENV_VAR: "interpret"}
+    assert pallas.resolve_interpret(False, env=env) is False
+
+
+def test_resolve_interpret_env_override():
+    assert pallas.resolve_interpret(
+        env={pallas.BACKEND_ENV_VAR: "interpret"}, platform="tpu") is True
+    assert pallas.resolve_interpret(
+        env={pallas.BACKEND_ENV_VAR: "compiled"}, platform="cpu") is False
+    with pytest.raises(ValueError):
+        pallas.resolve_interpret(env={pallas.BACKEND_ENV_VAR: "bogus"})
+
+
+def test_resolve_interpret_platform_probe():
+    assert pallas.resolve_interpret(env={}, platform="cpu") is True
+    assert pallas.resolve_interpret(env={}, platform="gpu") is True
+    assert pallas.resolve_interpret(env={}, platform="tpu") is False
+
+
+def test_pallas_call_dispatches_without_per_site_interpret():
+    """A kernel invoked with NO interpret plumbing runs green on the
+    host platform (on CPU that means the interpreter was selected)."""
+    from jax.experimental import pallas as pl
+
+    def scale(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    fn = compat.pallas_call(
+        scale, grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        dimension_semantics=("parallel",))
+    out = fn(jnp.ones((8, 128), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), 2.0)
+
+
+def test_kernel_wrappers_resolve_backend_per_call(monkeypatch):
+    """The backend decision must be consulted on every call (outside
+    jit), not baked into a stale trace keyed on interpret=None."""
+    from repro.kernels.minplus import ops as mops
+    seen = []
+
+    def recording_resolve(x=None, **kw):
+        seen.append(x)
+        return True
+
+    monkeypatch.setattr(mops, "resolve_interpret", recording_resolve)
+    dist = jnp.zeros((1, 2), jnp.float32)
+    mrank = jnp.zeros((1, 2), jnp.int32)
+    w = jnp.zeros((2, 2), jnp.float32)
+    mops.minplus_padded(dist, mrank, w)
+    mops.minplus_padded(dist, mrank, w)
+    assert seen == [None, None]
+
+
+def test_kernel_wrappers_default_to_dispatch():
+    """End-to-end: the real kernels, no interpret argument anywhere."""
+    from repro.kernels.minplus import minplus_padded, minplus_ref
+    rng = np.random.default_rng(0)
+    dist = jnp.asarray(rng.random((4, 16)).astype(np.float32))
+    mrank = jnp.asarray(rng.integers(0, 9, (4, 16)).astype(np.int32))
+    w = jnp.asarray(rng.random((16, 8)).astype(np.float32))
+    od, om = minplus_padded(dist, mrank, w)
+    od_r, om_r = minplus_ref(dist, mrank, w)
+    np.testing.assert_array_equal(np.asarray(od), np.asarray(od_r))
+    np.testing.assert_array_equal(np.asarray(om), np.asarray(om_r))
+
+
+# --------------------------------------------------------------------
+# XLA flag probing
+# --------------------------------------------------------------------
+
+def test_supported_flags_filters_rejected():
+    calls = []
+
+    def probe(flags):
+        calls.append(tuple(flags))
+        return all("good" in f for f in flags)
+
+    cands = ["--xla_good_flag=1", "--xla_bad_flag=2"]
+    assert xla.supported_xla_flags(cands, probe=probe) == \
+        ["--xla_good_flag=1"]
+    # batch probe first, then per-flag bisect after the batch rejects
+    assert calls[0] == tuple(cands)
+    assert len(calls) == 3
+
+
+def test_supported_flags_batch_accept_probes_once():
+    calls = []
+
+    def probe(flags):
+        calls.append(tuple(flags))
+        return True
+
+    cands = ["--xla_a=1", "--xla_b=2"]
+    assert xla.supported_xla_flags(cands, probe=probe) == cands
+    assert len(calls) == 1
+
+
+def test_host_device_count_flag_never_probed():
+    def probe(flags):
+        raise AssertionError("allowlisted flag must not be probed")
+
+    flag = "--xla_force_host_platform_device_count=8"
+    assert xla.supported_xla_flags([flag], probe=probe) == [flag]
+
+
+def test_probe_off_env_keeps_only_allowlisted(monkeypatch):
+    monkeypatch.setenv(xla.PROBE_ENV_VAR, "off")
+    got = xla.supported_xla_flags(
+        ["--xla_force_host_platform_device_count=4", "--xla_mystery=1"])
+    assert got == ["--xla_force_host_platform_device_count=4"]
+
+
+def test_xla_flags_merges_base_and_dedupes():
+    out = xla.xla_flags(["--xla_a=1", "--xla_b=2"],
+                        base="--xla_a=9 --other",
+                        probe=lambda flags: True)
+    # the base's --xla_a wins (already configured), --xla_b is added
+    assert out.split() == ["--xla_b=2", "--xla_a=9", "--other"]
+
+
+def test_xla_flags_override_replaces_same_name():
+    out = xla.xla_flags(["--xla_a=2"], base="--xla_a=1 --other",
+                        probe=lambda flags: True, override=True)
+    # override: the candidate's value wins over the inherited one
+    assert out.split() == ["--xla_a=2", "--other"]
+
+
+def test_xla_flags_override_preserves_base_when_candidate_rejected():
+    out = xla.xla_flags(["--xla_a=2"], base="--xla_a=1 --other",
+                        probe=lambda flags: False, override=True)
+    # a rejected candidate must not delete the user's inherited flag
+    assert out.split() == ["--xla_a=1", "--other"]
+
+
+def test_supported_flags_inconclusive_batch_short_circuits():
+    calls = []
+
+    def probe(flags):
+        calls.append(tuple(flags))
+        return None              # probing unavailable (e.g. timeout)
+
+    cands = ["--xla_a=1", "--xla_b=2"]
+    assert xla.supported_xla_flags(cands, probe=probe) == []
+    assert len(calls) == 1       # no doomed per-flag bisection
+
+
+def test_pallas_call_compiled_non_tpu_rejects_arbitrary_semantics():
+    if jax.default_backend() == "tpu":
+        pytest.skip("non-TPU-only behavior")
+    with pytest.raises(NotImplementedError):
+        compat.pallas_call(
+            lambda x_ref, o_ref: None, grid=(1,),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            dimension_semantics=("arbitrary",), interpret=False)
+
+
+def test_host_device_flags_contents():
+    flags = xla.host_device_flags(8)
+    assert flags[0] == "--xla_force_host_platform_device_count=8"
+    assert tuple(flags[1:]) == xla.COLLECTIVE_TIMEOUT_FLAGS
+
+
+def test_capabilities_report():
+    caps = compat.capabilities()
+    assert caps["jax_version"] == jax.__version__
+    assert caps["replication_kwarg"] in (NEW_REP_KWARG, OLD_REP_KWARG,
+                                         None)
+    assert isinstance(caps["pallas_interpret"], bool)
+
+
+# --------------------------------------------------------------------
+# hygiene: no direct unstable-JAX use outside repro.compat
+# --------------------------------------------------------------------
+
+FORBIDDEN = (
+    "from jax import " + "shard_map",
+    "from jax.experimental." + "shard_map",
+    "check_" + "vma",
+    "check_" + "rep=",
+    "pltpu." + NEW_CP_NAME,
+    "pltpu." + OLD_CP_NAME,
+    "jax.sharding." + "AxisType",
+    "--xla_cpu_" + "collective_call",  # raw watchdog flags: probe only
+)
+
+
+def test_no_direct_unstable_imports():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    offenders = []
+    for base in ("src", "tests", "examples", "benchmarks"):
+        for path in sorted((root / base).rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel.startswith("src/repro/compat/"):
+                continue
+            text = path.read_text()
+            for pat in FORBIDDEN:
+                if pat in text:
+                    offenders.append(f"{rel}: contains {pat!r}")
+    assert not offenders, (
+        "direct unstable-JAX usage outside repro.compat:\n  "
+        + "\n  ".join(offenders))

@@ -1,5 +1,6 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in
-interpret mode (CPU), plus end-to-end dense-PLaNT equivalence."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps via the
+compat backend dispatch (interpret mode on CPU), plus end-to-end
+dense-PLaNT equivalence."""
 
 import numpy as np
 import pytest
@@ -32,7 +33,7 @@ def _rand_minplus(rng, B, K, N, density=0.3, maxw=10):
 def test_minplus_kernel_matches_ref(B, K, N, seed):
     rng = np.random.default_rng(seed)
     dist, mrank, w = _rand_minplus(rng, B, K, N)
-    od_k, om_k = minplus_padded(dist, mrank, w, interpret=True)
+    od_k, om_k = minplus_padded(dist, mrank, w)
     od_r, om_r = minplus_ref(dist, mrank, w)
     np.testing.assert_array_equal(np.asarray(od_k), np.asarray(od_r))
     np.testing.assert_array_equal(np.asarray(om_k), np.asarray(om_r))
@@ -42,7 +43,7 @@ def test_minplus_all_unreachable():
     dist = jnp.full((8, 128), jnp.inf)
     mrank = jnp.full((8, 128), -1, jnp.int32)
     w = jnp.full((128, 128), jnp.inf)
-    od, om = minplus_padded(dist, mrank, w, interpret=True)
+    od, om = minplus_padded(dist, mrank, w)
     assert not np.isfinite(np.asarray(od)).any()
     assert (np.asarray(om) == -1).all()
 
@@ -52,7 +53,7 @@ def test_minplus_tie_break_takes_max_rank():
     dist = jnp.asarray([[1.0, 1.0]])
     mrank = jnp.asarray([[7, 9]], dtype=jnp.int32)
     w = jnp.asarray([[2.0], [2.0]])
-    od, om = minplus_padded(dist, mrank, w, interpret=True)
+    od, om = minplus_padded(dist, mrank, w)
     assert od[0, 0] == 3.0 and om[0, 0] == 9
 
 
@@ -65,7 +66,7 @@ def test_dense_plant_equals_ell_engine():
     roots = jnp.asarray(np.arange(8, dtype=np.int32))
     w = dense_weights(g)
     dist_d, mrank_d, emit_d = plant_fixpoint_dense(
-        w, jnp.asarray(rank), roots, interpret=True)
+        w, jnp.asarray(rank), roots)
     st = batched_sssp_maxrank(jnp.asarray(g.ell_src),
                               jnp.asarray(g.ell_w),
                               jnp.asarray(rank), roots)
@@ -89,7 +90,7 @@ def test_label_query_kernel_matches_ref(Q, L, seed):
 
     hu, du = rand_side()
     hv, dv = rand_side()
-    got = label_query_padded(hu, du, hv, dv, interpret=True)
+    got = label_query_padded(hu, du, hv, dv)
     want = label_query_ref(hu, du, hv, dv)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
@@ -106,7 +107,6 @@ def test_query_table_end_to_end():
     rng = np.random.default_rng(1)
     u = rng.integers(0, g.n, 40).astype(np.int32)
     v = rng.integers(0, g.n, 40).astype(np.int32)
-    got = query_table(table, jnp.asarray(u), jnp.asarray(v),
-                      interpret=True)
+    got = query_table(table, jnp.asarray(u), jnp.asarray(v))
     np.testing.assert_array_equal(np.asarray(got),
                                   D[u, v].astype(np.float32))

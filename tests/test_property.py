@@ -10,7 +10,13 @@ Invariants (the paper's §4–§5 claims):
 """
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# skip (not collection-error) on the minimal runtime image; the root
+# conftest also collect_ignores this module so `pytest -q` never pays
+# the import
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st     # noqa: E402
 
 from repro.core import labels as lbl
 from repro.core import validate

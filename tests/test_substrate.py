@@ -111,9 +111,9 @@ def test_train_resume_exactly_once(tmp_path):
 
 
 def test_elastic_reshard_roundtrip():
+    from repro.compat import make_mesh
     state = {"w": jnp.arange(16.0).reshape(4, 4)}
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data", None))}
     out = reshard_state(state, sh)
