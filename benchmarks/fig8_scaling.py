@@ -20,28 +20,26 @@ import os, json, sys
 from repro.compat import set_host_device_count
 set_host_device_count(%d)
 import numpy as np
-from repro.core.dgll import make_node_mesh, dgll_chl
-from repro.core.hybrid import hybrid_chl, plant_distributed_chl
+from repro.core.dgll import make_node_mesh
 from repro.graphs import scale_free
 from repro.graphs.ranking import degree_ranking
-import time
+from repro.index import BuildPlan, build
 g = scale_free(240, attach=2, seed=1)
 rank = degree_ranking(g)
 mesh = make_node_mesh()
 out = {}
-for name, fn in (
-    ("plant", lambda: plant_distributed_chl(g, rank, mesh=mesh, batch=4)),
-    ("dgll", lambda: dgll_chl(g, rank, mesh=mesh, batch=4, beta=8.0)),
-    ("hybrid", lambda: hybrid_chl(g, rank, mesh=mesh, batch=4, eta=8,
-                                  psi_threshold=50.0)),
+for name, plan in (
+    ("plant", BuildPlan(algo="plant-dist", batch=4)),
+    ("dgll", BuildPlan(algo="dgll", batch=4, beta=8.0, eta=0)),
+    ("hybrid", BuildPlan(algo="hybrid", batch=4, eta=8, psi_th=50.0)),
 ):
-    t0 = time.perf_counter()
-    tbl, stats = fn()
+    idx = build(g, rank, plan, mesh=mesh)
+    r = idx.report
     out[name] = {
-        "t": time.perf_counter() - t0,
-        "comm": stats["comm_label_slots"],
-        "explored": sum(stats["explored"]),
-        "labels": sum(stats["labels"]),
+        "t": r.wall_s,
+        "comm": r.comm_label_slots,
+        "explored": sum(s.explored or 0 for s in r.supersteps),
+        "labels": sum(s.labels or 0 for s in r.supersteps),
     }
 print("RESULT" + json.dumps(out))
 """

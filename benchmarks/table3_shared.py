@@ -1,17 +1,16 @@
 """Table 3: shared-memory label construction — ALS + time for
-seqPLL / SparaPLL(batch) / LCC / GLL / PLaNT. The paper's claims:
-GLL ALS == CHL < paraPLL ALS; GLL time ≈ paraPLL time; LCC slower
-than GLL (cleaning overhead)."""
+seqPLL / SparaPLL(batch) / LCC / GLL / PLaNT, all through the
+``repro.index`` facade. The paper's claims: GLL ALS == CHL < paraPLL
+ALS; GLL time ≈ paraPLL time; LCC slower than GLL (cleaning
+overhead)."""
 
 from __future__ import annotations
 
 from typing import List
 
 from benchmarks.common import Row, bench_graphs, row, timed
-from repro.core import labels as lbl
-from repro.core.gll import gll_chl, lcc_chl, parapll_chl
-from repro.core.plant import plant_chl
 from repro.core.pll import average_label_size, pll_undirected
+from repro.index import BuildPlan, build
 
 
 def run() -> List[Row]:
@@ -22,25 +21,19 @@ def run() -> List[Row]:
         out.append(row(f"table3/{name}/seqPLL", t_seq,
                        f"ALS={chl_als:.1f}"))
 
-        tbl, t = timed(lambda: parapll_chl(g, rank, batch=8,
-                                           cap=4 * g.n)[0])
-        als = average_label_size(lbl.to_numpy_sets(tbl))
+        idx, t = timed(lambda: build(
+            g, rank, BuildPlan(algo="parapll", batch=8, cap=g.n)))
+        als = idx.als
         out.append(row(f"table3/{name}/SparaPLL(b=8)", t,
                        f"ALS={als:.1f} (+{100*(als/chl_als-1):.1f}%"
                        f" vs CHL)"))
 
-        tbl, t = timed(lambda: lcc_chl(g, rank, batch=8)[0])
-        out.append(row(
-            f"table3/{name}/LCC", t,
-            f"ALS={average_label_size(lbl.to_numpy_sets(tbl)):.1f}"))
-
-        tbl, t = timed(lambda: gll_chl(g, rank, batch=8, alpha=4.0)[0])
-        out.append(row(
-            f"table3/{name}/GLL", t,
-            f"ALS={average_label_size(lbl.to_numpy_sets(tbl)):.1f}"))
-
-        tbl, t = timed(lambda: plant_chl(g, rank, batch=8)[0])
-        out.append(row(
-            f"table3/{name}/PLaNT", t,
-            f"ALS={average_label_size(lbl.to_numpy_sets(tbl)):.1f}"))
+        for label, plan in (
+            ("LCC", BuildPlan(algo="lcc", batch=8)),
+            ("GLL", BuildPlan(algo="gll", batch=8, alpha=4.0)),
+            ("PLaNT", BuildPlan(algo="plant", batch=8)),
+        ):
+            idx, t = timed(lambda: build(g, rank, plan))
+            out.append(row(f"table3/{name}/{label}", t,
+                           f"ALS={idx.als:.1f}"))
     return out

@@ -15,45 +15,38 @@ import os, json, time
 from repro.compat import set_host_device_count
 set_host_device_count(8)
 import numpy as np
-import jax, jax.numpy as jnp
-from repro.core import labels as lbl
+import jax
 from repro.core.dgll import make_node_mesh
-from repro.core.hybrid import hybrid_chl
-from repro.core.query import (qdol_build, qdol_fn, qdol_layout, qfdl_fn,
-                              qlsn, label_memory_bytes)
+from repro.core.query import label_memory_bytes, qdol_layout
 from repro.graphs import scale_free
 from repro.graphs.ranking import degree_ranking
+from repro.index import BuildPlan, build
 g = scale_free(240, attach=2, seed=2)
 rank = degree_ranking(g)
 mesh = make_node_mesh(8)
-tbl, stats = hybrid_chl(g, rank, mesh=mesh, batch=4, eta=8,
-                        psi_threshold=50.0)
-part = stats["partitioned"]
+idx = build(g, rank, BuildPlan(algo="hybrid", batch=4, eta=8,
+                               psi_th=50.0), mesh=mesh)
 rng = np.random.default_rng(0)
 Q = 1024
-u = jnp.asarray(rng.integers(0, g.n, Q).astype(np.int32))
-v = jnp.asarray(rng.integers(0, g.n, Q).astype(np.int32))
-base = label_memory_bytes(tbl)
-out = {"base_bytes": base, "n": g.n, "Q": Q}
-def t(fn):
-    fn().block_until_ready(); t0=time.perf_counter()
-    for _ in range(2): r = fn()
-    r.block_until_ready(); return (time.perf_counter()-t0)/2
-out["qlsn_s"] = t(lambda: qlsn(tbl, u, v))
-out["qlsn_bytes_per_node"] = base
-f = qfdl_fn(mesh)
-out["qfdl_s"] = t(lambda: f(part, u, v))
-out["qfdl_bytes_per_node"] = base // 8
-layout = qdol_layout(g.n, 8)
-store = qdol_build(tbl, layout, mesh)
-fq = qdol_fn(mesh, layout)
-out["qdol_s"] = t(lambda: fq(store, u, v))
-out["qdol_bytes_per_node"] = 2 * base // layout.zeta
-out["zeta"] = layout.zeta
+u = rng.integers(0, g.n, Q).astype(np.int32)
+v = rng.integers(0, g.n, Q).astype(np.int32)
+base = label_memory_bytes(idx.table)
+zeta = qdol_layout(g.n, 8).zeta
+out = {"base_bytes": base, "n": g.n, "Q": Q, "zeta": zeta}
+answers = {}
+for mode, per_node in (("qlsn", base), ("qfdl", base // 8),
+                       ("qdol", 2 * base // zeta)):
+    srv = idx.serve(mode=mode, mesh=mesh, batch_size=Q)
+    srv.warmup()                       # compile outside the timing
+    t0 = time.perf_counter()
+    for _ in range(2):
+        srv.submit(u, v)
+        answers[mode] = srv.flush()
+    out[f"{mode}_s"] = (time.perf_counter() - t0) / 2
+    out[f"{mode}_bytes_per_node"] = per_node
 # answers agree
-a = np.asarray(qlsn(tbl, u, v)); b = np.asarray(f(part, u, v))
-c = np.asarray(fq(store, u, v))
-assert np.array_equal(a, b) and np.array_equal(a, c)
+assert np.array_equal(answers["qlsn"], answers["qfdl"])
+assert np.array_equal(answers["qlsn"], answers["qdol"])
 print("RESULT" + json.dumps(out))
 """
 

@@ -1,18 +1,18 @@
-"""Quickstart: build the Canonical Hub Labeling for a road-like graph
-with PLaNT, validate it against Dijkstra, and answer PPSD queries.
+"""Quickstart: build a Canonical Hub Labeling index for a road-like
+graph, validate it against Dijkstra, serve PPSD queries, and round-trip
+the artifact through disk.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-import jax.numpy as jnp
+import os
+import tempfile
 
-from repro.core import labels as lbl
-from repro.core.plant import plant_chl
-from repro.core.pll import average_label_size
+import numpy as np
+
 from repro.graphs import grid_road
 from repro.graphs.ranking import betweenness_ranking
-from repro.kernels.label_query import query_table
+from repro.index import BuildPlan, CHLIndex, build
 from repro.sssp.oracle import dijkstra
 
 
@@ -21,25 +21,37 @@ def main() -> None:
     rank = betweenness_ranking(g, samples=12)
     print(f"graph: n={g.n} m={g.m//2} (undirected road grid)")
 
-    table, stats = plant_chl(g, rank, batch=16)
-    als = average_label_size(lbl.to_numpy_sets(table))
-    print(f"CHL built with PLaNT: {lbl.total_labels(table)} labels, "
-          f"ALS={als:.1f}, supersteps={len(stats['labels'])}")
-    print(f"max Ψ (explored per label) = {max(stats['psi']):.1f}")
+    # one facade for every construction algorithm (plant / gll / lcc /
+    # parapll / dgll / hybrid / plant-dist / directed / pll-ref)
+    idx = build(g, rank, BuildPlan(algo="plant", batch=16))
+    print(f"CHL built: {idx.report.summary()}")
+    print(f"max Ψ (explored per label) = {idx.report.max_psi:.1f}")
 
     rng = np.random.default_rng(0)
     u = rng.integers(0, g.n, 8).astype(np.int32)
     v = rng.integers(0, g.n, 8).astype(np.int32)
-    d = np.asarray(query_table(table, jnp.asarray(u),
-                               jnp.asarray(v)))
-    print("\nPPSD queries (hub-label intersection, Pallas kernel):")
-    for ui, vi, di in zip(u, v, d):
+    d, hub = idx.query_with_hub(u, v)
+    print("\nPPSD queries (hub-label intersection):")
+    for ui, vi, di, hi in zip(u, v, d, hub):
         ref = dijkstra(g, int(ui))[vi]
         mark = "✓" if di == np.float32(ref) else "✗"
-        print(f"  d({ui:3d},{vi:3d}) = {di:6.1f}  dijkstra={ref:6.1f} "
-              f"{mark}")
+        print(f"  d({ui:3d},{vi:3d}) = {di:6.1f} via hub {hi:3d}  "
+              f"dijkstra={ref:6.1f} {mark}")
         assert di == np.float32(ref)
-    print("\nall queries exact — cover property holds")
+
+    # the index is a first-class on-disk artifact
+    with tempfile.TemporaryDirectory() as tmp:
+        path = idx.save(os.path.join(tmp, "index"))
+        idx2 = CHLIndex.load(path, rank=rank)   # rank-hash checked
+        srv = idx2.serve(mode="qlsn", batch_size=256)
+        srv.warmup()                            # compile outside p50/p99
+        srv.submit(u, v)
+        out = srv.flush()
+        assert np.array_equal(out, d)
+        print(f"\nsave → load → serve round trip OK "
+              f"(warmup {srv.stats()['warmup_ms']:.0f} ms kept out of "
+              f"p50/p99)")
+    print("all queries exact — cover property holds")
 
 
 if __name__ == "__main__":

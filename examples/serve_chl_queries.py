@@ -1,6 +1,7 @@
 """End-to-end driver for the paper's system: distributed CHL
 construction (Hybrid PLaNT→DGLL) + batched PPSD query serving in all
-three modes (QLSN / QFDL / QDOL) on an 8-node virtual cluster.
+three modes (QLSN / QFDL / QDOL) on an 8-node virtual cluster — all
+through the `repro.index` artifact API.
 
     PYTHONPATH=src python examples/serve_chl_queries.py
 """
@@ -11,59 +12,47 @@ set_host_device_count(8)               # before jax backend init
 
 import time                                                 # noqa: E402
 import numpy as np                                          # noqa: E402
-import jax.numpy as jnp                                     # noqa: E402
 
 
 def main() -> None:
     from repro.core.dgll import make_node_mesh
-    from repro.core.hybrid import hybrid_chl
-    from repro.core.query import (mode_memory_report, qdol_build,
-                                  qdol_fn, qdol_layout, qfdl_fn, qlsn)
-    from repro.core import labels as lbl
-    from repro.core.pll import average_label_size
     from repro.graphs import scale_free
     from repro.graphs.ranking import degree_ranking
+    from repro.index import BuildPlan, build
 
     g = scale_free(600, attach=2, seed=3)
     rank = degree_ranking(g)
     mesh = make_node_mesh(8)
     print(f"cluster: q={mesh.devices.size} nodes; graph n={g.n}")
 
-    t0 = time.time()
-    table, stats = hybrid_chl(g, rank, mesh=mesh, batch=4, eta=16,
-                              psi_threshold=100.0)
-    t_build = time.time() - t0
-    modes = stats["mode"]
-    print(f"hybrid CHL in {t_build:.1f}s — supersteps: {modes}")
-    print(f"ALS = {average_label_size(lbl.to_numpy_sets(table)):.1f}; "
-          f"label slots broadcast = {stats['comm_label_slots']:,}")
-    print(mode_memory_report(table, 8))
+    plan = BuildPlan(algo="hybrid", batch=4, eta=16, psi_th=100.0)
+    idx = build(g, rank, plan, mesh=mesh)
+    modes = [s.mode for s in idx.report.supersteps]
+    print(f"hybrid CHL in {idx.report.wall_s:.1f}s — supersteps: {modes}")
+    print(f"ALS = {idx.als:.1f}; label slots broadcast = "
+          f"{idx.report.comm_label_slots:,}")
+    print(idx.memory_report())
 
     rng = np.random.default_rng(1)
     Q = 2048
-    u = jnp.asarray(rng.integers(0, g.n, Q).astype(np.int32))
-    v = jnp.asarray(rng.integers(0, g.n, Q).astype(np.int32))
+    u = rng.integers(0, g.n, Q).astype(np.int32)
+    v = rng.integers(0, g.n, Q).astype(np.int32)
 
-    a = qlsn(table, u, v)
-    f = qfdl_fn(mesh)
-    b = f(stats["partitioned"], u, v)
-    layout = qdol_layout(g.n, 8)
-    store = qdol_build(table, layout, mesh)
-    c = qdol_fn(mesh, layout)(store, u, v)
-    assert np.array_equal(np.asarray(a), np.asarray(b))
-    assert np.array_equal(np.asarray(a), np.asarray(c))
-
-    for name, fn in (("QLSN", lambda: qlsn(table, u, v)),
-                     ("QFDL", lambda: f(stats["partitioned"], u, v)),
-                     ("QDOL", lambda: qdol_fn(mesh, layout)(store, u,
-                                                            v))):
-        fn()
+    ref = None
+    for mode in ("qlsn", "qfdl", "qdol"):
+        srv = idx.serve(mode=mode, mesh=mesh, batch_size=Q)
+        srv.warmup()
+        srv.submit(u, v)
+        out = srv.flush()
+        if ref is None:
+            ref = out
+        assert np.array_equal(ref, out), mode
         t0 = time.time()
         for _ in range(3):
-            r = fn()
-        r.block_until_ready()
+            srv.submit(u, v)
+            srv.flush()
         dt = (time.time() - t0) / 3
-        print(f"{name}: {Q/dt:10,.0f} queries/s "
+        print(f"{mode.upper()}: {Q/dt:10,.0f} queries/s "
               f"({1e6*dt/Q:.2f} µs/query)")
     print("all three modes agree — serving path verified")
 

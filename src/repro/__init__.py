@@ -9,6 +9,9 @@ Layers
 - ``repro.sssp``     batched lexicographic Bellman–Ford + Dijkstra oracle
 - ``repro.core``     the paper's algorithms: PLL, LCC, GLL, DGLL, PLaNT,
                      Hybrid, and the QLSN/QFDL/QDOL query modes
+- ``repro.index``    the artifact API: BuildPlan → build() → CHLIndex
+                     (query/serve/validate/save/load) — the application
+                     entry point over the core constructors
 - ``repro.kernels``  Pallas TPU kernels (minplus relaxation, label query)
 - ``repro.models``   the assigned LM architecture zoo
 - ``repro.parallel`` mesh + sharding-rule resolver + FSDP

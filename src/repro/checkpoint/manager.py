@@ -81,6 +81,15 @@ class CheckpointManager:
         os.replace(tmp, final)
         self._gc()
 
+    def clear(self) -> None:
+        """Drop every committed step (e.g. before a rebuild whose state
+        shapes changed — stale checkpoints would outrank the new run's
+        lower step numbers in retention GC)."""
+        self.wait()
+        for s in self.all_steps():
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[:-self.keep] if self.keep else []:

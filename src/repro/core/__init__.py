@@ -1,7 +1,8 @@
 """The paper's algorithms: PLL oracle, LCC, GLL, DGLL, PLaNT, Hybrid,
 and the QLSN/QFDL/QDOL distributed query modes."""
 
-from repro.core.labels import LabelTable, empty, to_numpy_sets
+from repro.core.labels import (LabelTable, LabelOverflowError, default_cap,
+                               empty, from_numpy_sets, to_numpy_sets)
 from repro.core.pll import (pll_undirected, pll_directed,
                             chl_by_definition, average_label_size)
 from repro.core.plant import plant_chl, plant_batch
@@ -10,7 +11,8 @@ from repro.core.dgll import dgll_chl, make_node_mesh, assign_roots
 from repro.core.hybrid import hybrid_chl, plant_distributed_chl
 
 __all__ = [
-    "LabelTable", "empty", "to_numpy_sets",
+    "LabelTable", "LabelOverflowError", "default_cap", "empty",
+    "from_numpy_sets", "to_numpy_sets",
     "pll_undirected", "pll_directed", "chl_by_definition",
     "average_label_size",
     "plant_chl", "plant_batch",

@@ -263,7 +263,7 @@ def dgll_chl(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
              batch: int = 4, beta: float = 8.0, first_superstep: int = 1,
              cap: Optional[int] = None,
              eta: int = 0, hc_cap: int = 32, compact: int = 0,
-             ) -> Tuple[LabelTable, dict]:
+             **kw) -> Tuple[LabelTable, dict]:
     """Pure DGLL (optionally with an η-hub Common Label Table).
 
     Returns the *merged* label table (host view) and stats; the
@@ -273,4 +273,4 @@ def dgll_chl(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
     return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
                            first_superstep=first_superstep, cap=cap,
                            eta=eta, hc_cap=hc_cap, psi_threshold=0.0,
-                           compact=compact)
+                           compact=compact, **kw)

@@ -25,7 +25,7 @@ def plant_directed_chl(g, rank: np.ndarray, *, batch: int = 16,
     """Returns ``(L_out, L_in)`` tables for a directed graph."""
     assert g.directed
     n = g.n
-    cap = cap or max(16, 4 * int(np.sqrt(n)) + 32)
+    cap = cap or lbl.default_cap(n)
     gr = g.reverse()
     order = np.argsort(-rank.astype(np.int64), kind="stable")
     l_in = lbl.empty(n, cap)
@@ -40,14 +40,25 @@ def plant_directed_chl(g, rank: np.ndarray, *, batch: int = 16,
         tb_b = plant_batch(bwd[0], bwd[1], rank_d, r, v)
         l_out, o2 = lbl.insert_batch(l_out, r, tb_b.emit, tb_b.dist)
         if bool(o1) or bool(o2):
-            raise RuntimeError(f"label table overflow (cap={cap})")
+            raise lbl.LabelOverflowError(cap)
     return l_out, l_in
 
 
-def query_directed(l_out: LabelTable, l_in: LabelTable, u, v):
-    """min over common hubs of d(u→x) + d(x→v)."""
+def query_directed(l_out: LabelTable, l_in: LabelTable, u, v, *,
+                   with_hub: bool = False):
+    """min over common hubs of d(u→x) + d(x→v).
+
+    ``with_hub=True`` also returns the witnessing hub id per query
+    (-1 when the label sets are disjoint)."""
     hu, du = l_out.hubs[u], l_out.dist[u]
     hv, dv = l_in.hubs[v], l_in.dist[v]
     match = (hu[:, :, None] == hv[:, None, :]) & (hu[:, :, None] >= 0)
     dd = jnp.where(match, du[:, :, None] + dv[:, None, :], jnp.inf)
-    return jnp.min(dd, axis=(1, 2))
+    best = jnp.min(dd, axis=(1, 2))
+    if not with_hub:
+        return best
+    flat = jnp.argmin(dd.reshape(dd.shape[0], -1), axis=-1)
+    bi = flat // dd.shape[2]
+    hub = jnp.where(jnp.isfinite(best),
+                    jnp.take_along_axis(hu, bi[:, None], axis=1)[:, 0], -1)
+    return best, hub

@@ -113,7 +113,7 @@ def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
     Returns (global label table, stats).
     """
     n = g.n
-    cap = cap or max(16, 4 * int(np.sqrt(n)) + 32)
+    cap = cap or lbl.default_cap(n)
     order = np.argsort(-rank.astype(np.int64), kind="stable")
     ell_src = jnp.asarray(g.ell_src)
     ell_w = jnp.asarray(g.ell_w)
@@ -166,7 +166,7 @@ def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
             flush()
     flush()
     if overflow:
-        raise RuntimeError(f"label table overflow (cap={cap})")
+        raise lbl.LabelOverflowError(cap)
     return glob, stats
 
 

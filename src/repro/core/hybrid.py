@@ -45,7 +45,7 @@ def _build_common_table(g, rank: np.ndarray, eta_roots: np.ndarray,
                      jnp.asarray(rank.astype(np.int32)), roots, valid)
     hc, ovf = lbl.insert_batch(hc, roots, tb.emit, tb.dist)
     if bool(ovf):
-        raise RuntimeError("common label table overflow; raise hc_cap")
+        raise lbl.LabelOverflowError(hc_cap, "common label table")
     return hc
 
 
@@ -70,16 +70,24 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                     eta: int = 0, hc_cap: int = 64,
                     psi_threshold: Optional[float] = 100.0,
                     compact: int = 0,
+                    ckpt=None, resume: bool = False,
+                    verbose: bool = False,
                     ) -> Tuple[LabelTable, dict]:
     """Distributed CHL construction. Returns (merged table, stats).
 
-    ``psi_threshold=None`` → auto (scales with cluster size q)."""
+    ``psi_threshold=None`` → auto (scales with cluster size q).
+
+    ``ckpt`` (a ``repro.checkpoint.CheckpointManager``) commits the
+    partitioned table + superstep cursor after every superstep;
+    ``resume=True`` continues from the last committed superstep. A
+    checkpoint written under a different ``cap`` is ignored (shape
+    mismatch — happens when ``repro.index.build`` regrows the cap)."""
     mesh = mesh or dist.make_node_mesh()
     q = int(mesh.devices.size)
     if psi_threshold is None:
         psi_threshold = auto_psi_threshold(q)
     n = g.n
-    cap = cap or max(16, 4 * int(np.sqrt(n)) + 32)
+    cap = cap or lbl.default_cap(n)
     queues = dist.assign_roots(rank, q)          # [q, per]
     per = queues.shape[1]
     state = dist.init_dist_state(mesh, n, cap, hc_cap if eta else 1)
@@ -94,7 +102,28 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
              "psi_threshold": psi_threshold}
     table, hc = state.table, state.hc
     pos = 0
+    size = first_superstep
     plant_mode = psi_threshold > 0.0
+    resumed = False
+
+    if ckpt is not None and resume and ckpt.latest_step() is not None:
+        tmpl = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), table)
+        restored, pos, extra = ckpt.restore(tmpl)
+        if int(extra.get("cap", cap)) == cap:
+            table = LabelTable(*(jax.device_put(jnp.asarray(x), node_sh)
+                                 for x in restored))
+            size = int(extra.get("size", first_superstep))
+            plant_mode = bool(extra.get("plant_mode", plant_mode))
+            resumed = True
+            if verbose:
+                print(f"[resume] superstep cursor={pos} size={size}")
+        else:
+            # stale checkpoint from a different cap: start fresh AND
+            # drop it, or its higher step numbers would keep shadowing
+            # this run's resume points in latest_step()/retention GC
+            ckpt.clear()
+            pos = 0
 
     # ---- phase 0: Common Label Table from top-η hubs -----------------
     if eta > 0:
@@ -103,21 +132,29 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
         order = np.argsort(-rank.astype(np.int64), kind="stable")
         hc = _build_common_table(g, rank, order[:eta_eff], hc_cap)
         hc = LabelTable(*(jax.device_put(x, rep) for x in hc))
-        # those trees' labels also enter the owners' partitions
-        step_fn = dist.dgll_superstep_fn(mesh, n, batch=k0, use_hc=False,
-                                         plant_trees=True)
-        roots = _pad_step(queues, pos, k0, batch=k0)
-        out = step_fn(table, hc, rank_d,
-                      jax.device_put(jnp.asarray(roots), node_sh),
-                      jax.device_put(jnp.asarray(roots >= 0), node_sh),
-                      ell_src, ell_w)
-        table = out.table
-        _record(stats, "plant-hc", out)
-        pos += k0
+        if not resumed:
+            # those trees' labels also enter the owners' partitions
+            step_fn = dist.dgll_superstep_fn(mesh, n, batch=k0,
+                                             use_hc=False,
+                                             plant_trees=True)
+            roots = _pad_step(queues, pos, k0, batch=k0)
+            out = step_fn(table, hc, rank_d,
+                          jax.device_put(jnp.asarray(roots), node_sh),
+                          jax.device_put(jnp.asarray(roots >= 0), node_sh),
+                          ell_src, ell_w)
+            table = out.table
+            if bool(jnp.any(out.overflow)):
+                raise lbl.LabelOverflowError(cap)
+            _record(stats, "plant-hc", out)
+            pos += k0
+            if ckpt is not None:
+                ckpt.save(pos, table,
+                          data_state={"size": size,
+                                      "plant_mode": plant_mode,
+                                      "cap": cap},
+                          blocking=False)
 
     plant_fn = dgll_fn = None
-    size = first_superstep
-    overflowed = False
     while pos < per:
         T = min(size, per - pos)
         T = -(-T // batch) * batch               # multiple of batch
@@ -155,14 +192,31 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                 slots = q * T * n
             stats["comm_label_slots"] += slots
         table = out.table
-        overflowed |= bool(jnp.any(out.overflow))
+        if bool(jnp.any(out.overflow)):
+            # raise BEFORE committing a checkpoint: insert_batch drops
+            # labels on overflow, and a saved corrupt table would be
+            # silently restored by --resume
+            if ckpt is not None:
+                ckpt.wait()
+            raise lbl.LabelOverflowError(cap)
         psi = _record(stats, mode, out)
+        if verbose:
+            print(f"superstep pos={pos:6d} T={T:4d} mode={mode} "
+                  f"labels={stats['labels'][-1]} psi={psi:.1f}")
         if plant_mode and psi > psi_threshold:
             plant_mode = False               # Ψ too high → switch (§5.2.1)
+            if verbose:
+                print(f"  Ψ={psi:.1f} > Ψ_th={psi_threshold:.1f} → "
+                      f"switching to DGLL")
         pos += T
         size = int(size * beta)
-    if overflowed:
-        raise RuntimeError(f"label table overflow (cap={cap})")
+        if ckpt is not None:
+            ckpt.save(pos, table,
+                      data_state={"size": size, "plant_mode": plant_mode,
+                                  "cap": cap},
+                      blocking=False)
+    if ckpt is not None:
+        ckpt.wait()
 
     merged = dist.merge_partitions(table)
     stats["partitioned"] = table
@@ -194,18 +248,20 @@ def _record(stats: dict, mode: str, out) -> float:
 def hybrid_chl(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                batch: int = 4, beta: float = 8.0, eta: int = 16,
                psi_threshold: float = 100.0, cap: Optional[int] = None,
-               hc_cap: int = 64, compact: int = 0
+               hc_cap: int = 64, compact: int = 0, **kw
                ) -> Tuple[LabelTable, dict]:
     """The paper's Hybrid algorithm (PLaNT → DGLL, Common Label Table)."""
     return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
                            cap=cap, eta=eta, hc_cap=hc_cap,
-                           psi_threshold=psi_threshold, compact=compact)
+                           psi_threshold=psi_threshold, compact=compact,
+                           **kw)
 
 
 def plant_distributed_chl(g, rank: np.ndarray, *,
                           mesh: Optional[Mesh] = None, batch: int = 4,
                           beta: float = 8.0, cap: Optional[int] = None,
-                          ) -> Tuple[LabelTable, dict]:
+                          **kw) -> Tuple[LabelTable, dict]:
     """Pure distributed PLaNT (§5.2): zero label communication."""
     return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
-                           cap=cap, eta=0, psi_threshold=float("inf"))
+                           cap=cap, eta=0, psi_threshold=float("inf"),
+                           **kw)

@@ -23,6 +23,30 @@ import numpy as np
 Array = jax.Array
 
 
+class LabelOverflowError(RuntimeError):
+    """A fixed-capacity label table ran out of slots.
+
+    Carries the offending ``cap`` so callers (``repro.index.build``)
+    can retry with a geometrically grown capacity instead of burning
+    the whole run.
+    """
+
+    def __init__(self, cap: int, what: str = "label table"):
+        super().__init__(f"{what} overflow (cap={cap}); raise `cap`")
+        self.cap = cap
+        self.what = what
+
+
+def default_cap(n: int) -> int:
+    """Default per-vertex label capacity for an n-vertex graph.
+
+    CHL label counts concentrate around O(√n·polylog) on the paper's
+    graph families; ``4√n + 32`` leaves generous headroom while keeping
+    the padded table O(n^1.5). Capacity can never usefully exceed n.
+    """
+    return min(max(16, 4 * int(np.sqrt(n)) + 32), max(1, n))
+
+
 class LabelTable(NamedTuple):
     hubs: Array    # i32 [n, L]
     dist: Array    # f32 [n, L]
@@ -170,6 +194,27 @@ def to_numpy_sets(table: LabelTable) -> list[dict[int, float]]:
                 row[h] = min(d, row.get(h, np.inf))
         out.append(row)
     return out
+
+
+def from_numpy_sets(sets: list[dict[int, float]],
+                    cap: int | None = None) -> LabelTable:
+    """Inverse of :func:`to_numpy_sets`: pack per-vertex {hub: dist}
+    dicts into a padded table (host oracles → device serving path)."""
+    n = len(sets)
+    need = max((len(s) for s in sets), default=0)
+    cap = max(need, 1) if cap is None else cap
+    if need > cap:
+        raise LabelOverflowError(cap)
+    hubs = np.full((n, cap), -1, dtype=np.int32)
+    dist = np.full((n, cap), np.inf, dtype=np.float32)
+    count = np.zeros(n, dtype=np.int32)
+    for v, row in enumerate(sets):
+        for k, (h, d) in enumerate(sorted(row.items())):
+            hubs[v, k] = h
+            dist[v, k] = d
+        count[v] = len(row)
+    return LabelTable(jnp.asarray(hubs), jnp.asarray(dist),
+                      jnp.asarray(count))
 
 
 def total_labels(table: LabelTable) -> int:

@@ -94,7 +94,7 @@ def plant_chl(g, rank: np.ndarray, *, batch: int = 16,
     Returns the label table and a stats dict (Ψ per batch etc.).
     """
     n = g.n
-    cap = cap or max(16, 4 * int(np.sqrt(n)) + 32)
+    cap = cap or lbl.default_cap(n)
     order = (roots_order if roots_order is not None
              else np.argsort(-rank.astype(np.int64), kind="stable"))
     table = lbl.empty(n, cap)
@@ -116,6 +116,5 @@ def plant_chl(g, rank: np.ndarray, *, batch: int = 16,
         stats["sweeps"].append(int(tb.sweeps))
         stats["psi"].append(exp / max(1, nl))
     if overflowed:
-        raise RuntimeError(
-            f"label table overflow (cap={cap}); raise `cap`")
+        raise lbl.LabelOverflowError(cap)
     return table, stats

@@ -1,0 +1,28 @@
+"""repro.index — build-plan → CHL-index artifact API.
+
+The single entry point for the paper's pipeline:
+
+    from repro.index import BuildPlan, CHLIndex, build
+
+    idx = build(g, rank, BuildPlan(algo="hybrid", eta=16))
+    idx.query(u, v)                  # exact PPSD distances
+    idx.serve(mode="qdol")           # batched QueryServer, any §6.3 mode
+    idx.save("run/index")            # versioned artifact on disk
+    idx = CHLIndex.load("run/index")
+
+Direct constructor calls (``plant_chl``, ``gll_chl``, ``hybrid_chl``,
+…) remain supported as the engine layer but are deprecated as an
+application API — new code should go through ``build``.
+"""
+
+from repro.index.artifact import CHLIndex, rank_hash
+from repro.index.build import build
+from repro.index.plan import ALGOS, DISTRIBUTED_ALGOS, BuildPlan
+from repro.index.report import (BuildReport, OverflowEvent,
+                                SuperstepStat, normalize_stats)
+
+__all__ = [
+    "ALGOS", "DISTRIBUTED_ALGOS", "BuildPlan", "BuildReport",
+    "CHLIndex", "OverflowEvent", "SuperstepStat", "build",
+    "normalize_stats", "rank_hash",
+]

@@ -1,0 +1,284 @@
+"""`CHLIndex` — the queryable, servable, persistable CHL artifact.
+
+One object owns the outcome of a build: the padded label table (or the
+directed L_out/L_in pair), the plan that produced it, the normalized
+build report, and the vertex hierarchy it was built under. Everything
+downstream of construction happens through it:
+
+    idx = build(g, rank, BuildPlan(algo="hybrid"))
+    idx.query(u, v)                      # batched PPSD distances
+    srv = idx.serve(mode="qdol")         # QueryServer, any §6.3 mode
+    idx.validate_against(oracle)         # exact-CHL / distance check
+    idx.save("run/index")                # versioned npz + manifest
+    idx2 = CHLIndex.load("run/index")
+
+On-disk format (version 1):
+
+    <dir>/manifest.json   {"format": "repro.index/chl", "version": 1,
+                           "plan": BuildPlan.to_dict(),
+                           "report": BuildReport.to_dict(),
+                           "rank_hash": sha256(rank bytes),
+                           "directed": bool, "n": int,
+                           "total_labels": int, "als": float}
+    <dir>/arrays.npz      rank + hubs/dist/count
+                          (directed: out_*/in_* pairs)
+
+Loads are rejected on format/version mismatch and on rank-hash
+mismatch (a label table is only valid for the hierarchy it was built
+under). Writes go through a tmp dir + ``os.replace`` swap: a fresh
+save is atomic, and an overwrite never deletes the live artifact
+before the replacement is staged (a crash leaves the old copy
+recoverable at ``.tmp_index_<name>.old``), so a ``CheckpointManager``
+run can finalize into an index safely.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as lbl
+from repro.core import query as qm
+from repro.core.labels import LabelTable
+from repro.index.plan import BuildPlan
+from repro.index.report import BuildReport
+from repro.serve import backends
+from repro.serve.query_server import QueryServer
+
+FORMAT = "repro.index/chl"
+VERSION = 1
+
+
+def rank_hash(rank: np.ndarray) -> str:
+    """Stable fingerprint of a vertex hierarchy."""
+    r = np.ascontiguousarray(np.asarray(rank).astype(np.int64))
+    return hashlib.sha256(r.tobytes()).hexdigest()
+
+
+class CHLIndex:
+    """A built Canonical Hub Labeling, packaged for serving.
+
+    ``table`` for undirected graphs; ``l_out``/``l_in`` for directed
+    (footnote 1 forward/backward labels). ``partitioned`` is the
+    construction-time ``[q, n, L]`` hub-partitioned table when the
+    build was distributed (QFDL serves straight from it; otherwise the
+    layout is synthesized on demand from ``rank``).
+    """
+
+    def __init__(self, table: Optional[LabelTable] = None, *,
+                 l_out: Optional[LabelTable] = None,
+                 l_in: Optional[LabelTable] = None,
+                 plan: BuildPlan, report: BuildReport,
+                 rank: np.ndarray,
+                 partitioned: Optional[LabelTable] = None):
+        if (table is None) == (l_out is None):
+            raise ValueError("exactly one of `table` or the "
+                             "`l_out`/`l_in` pair must be given")
+        if (l_out is None) != (l_in is None):
+            raise ValueError("directed indices need both l_out and l_in")
+        self.table = table
+        self.l_out = l_out
+        self.l_in = l_in
+        self.plan = plan
+        self.report = report
+        self.rank = np.asarray(rank)
+        self.partitioned = partitioned
+
+    # ---------------------------------------------------- properties
+
+    @property
+    def directed(self) -> bool:
+        return self.table is None
+
+    @property
+    def n(self) -> int:
+        t = self.table if not self.directed else self.l_out
+        return t.n
+
+    @property
+    def total_labels(self) -> int:
+        if self.directed:
+            return (lbl.total_labels(self.l_out)
+                    + lbl.total_labels(self.l_in))
+        return lbl.total_labels(self.table)
+
+    @property
+    def als(self) -> float:
+        """Average label size (per direction for directed graphs)."""
+        denom = self.n * (2 if self.directed else 1)
+        return self.total_labels / max(1, denom)
+
+    # --------------------------------------------------------- query
+
+    def query(self, u, v) -> np.ndarray:
+        """Batched PPSD distances (f32 [Q]; +inf when disconnected)."""
+        d, _ = self.query_with_hub(u, v)
+        return d
+
+    def query_with_hub(self, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        """Distances plus the witnessing hub id (-1 when disjoint)."""
+        u = jnp.atleast_1d(jnp.asarray(u, jnp.int32))
+        v = jnp.atleast_1d(jnp.asarray(v, jnp.int32))
+        if self.directed:
+            from repro.core.directed import query_directed
+            d, h = query_directed(self.l_out, self.l_in, u, v,
+                                  with_hub=True)
+        else:
+            d, h = lbl.query_pairs(self.table, u, v)
+        return np.asarray(d), np.asarray(h)
+
+    # --------------------------------------------------------- serve
+
+    def serve(self, mode: str = "qlsn", *, mesh=None,
+              batch_size: int = 1024, drop_first: bool = True
+              ) -> QueryServer:
+        """Query server in any §6.3 storage mode — no mesh/layout/store
+        ceremony at the call site (undirected only; directed serving
+        is an open ROADMAP item)."""
+        if self.directed:
+            raise NotImplementedError(
+                "serve() currently supports undirected indices")
+        fn = backends.make_answer_fn(self.table, mode, mesh=mesh,
+                                     partitioned=self.partitioned,
+                                     rank=self.rank)
+        return QueryServer(fn, batch_size=batch_size,
+                           drop_first=drop_first)
+
+    # ------------------------------------------------------ validate
+
+    def validate_against(self, oracle) -> bool:
+        """Check this index against ground truth; raises on mismatch.
+
+        ``oracle`` is either a ``Graph`` (distances of every connected
+        pair checked against Dijkstra — the cover property) or PLL
+        label sets (exact CHL label-set equality; a ``(l_out, l_in)``
+        tuple for directed graphs).
+        """
+        from repro.core import validate as val
+        if hasattr(oracle, "indptr"):            # a Graph: cover check
+            from repro.sssp.oracle import all_pairs
+            D = all_pairs(oracle)
+            n = oracle.n
+            uu, vv = np.meshgrid(np.arange(n), np.arange(n),
+                                 indexing="ij")
+            uu, vv = uu.reshape(-1), vv.reshape(-1)
+            got = np.empty(n * n, np.float32)
+            B = 8192                     # bound the [Q, L, L] intermediate
+            for s in range(0, n * n, B):
+                got[s:s + B] = self.query(uu[s:s + B], vv[s:s + B])
+            got = got.reshape(n, n)
+            want = D.astype(np.float32)
+            ok = np.isfinite(want)
+            assert np.array_equal(got[ok], want[ok]), "distances differ"
+            assert not np.isfinite(got[~ok]).any(), \
+                "reports finite distance for disconnected pair"
+            return True
+        if self.directed:
+            ref_out, ref_in = oracle
+            val.check_equal(lbl.to_numpy_sets(self.l_out), ref_out)
+            val.check_equal(lbl.to_numpy_sets(self.l_in), ref_in)
+        else:
+            val.check_equal(lbl.to_numpy_sets(self.table), oracle)
+        return True
+
+    # -------------------------------------------------------- memory
+
+    def memory_report(self, q: Optional[int] = None) -> dict:
+        """Per-mode cluster label storage (Table 4). ``q`` defaults to
+        the build mesh size."""
+        q = q or self.report.q
+        if self.directed:
+            return {"l_out_bytes": qm.label_memory_bytes(self.l_out),
+                    "l_in_bytes": qm.label_memory_bytes(self.l_in),
+                    "q": q}
+        return qm.mode_memory_report(self.table, q)
+
+    # ---------------------------------------------------------- disk
+
+    def save(self, directory: str) -> str:
+        """Atomically write the versioned on-disk artifact; returns
+        the directory path."""
+        parent = os.path.dirname(os.path.abspath(directory)) or "."
+        os.makedirs(parent, exist_ok=True)
+        tmp = os.path.join(parent,
+                           f".tmp_index_{os.path.basename(directory)}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        arrays = {"rank": np.asarray(self.rank)}
+        if self.directed:
+            for pfx, t in (("out", self.l_out), ("in", self.l_in)):
+                arrays[f"{pfx}_hubs"] = np.asarray(t.hubs)
+                arrays[f"{pfx}_dist"] = np.asarray(t.dist)
+                arrays[f"{pfx}_count"] = np.asarray(t.count)
+        else:
+            arrays["hubs"] = np.asarray(self.table.hubs)
+            arrays["dist"] = np.asarray(self.table.dist)
+            arrays["count"] = np.asarray(self.table.count)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "format": FORMAT,
+            "version": VERSION,
+            "plan": self.plan.to_dict(),
+            "report": self.report.to_dict(),
+            "rank_hash": rank_hash(self.rank),
+            "directed": self.directed,
+            "n": self.n,
+            "total_labels": self.total_labels,
+            "als": self.als,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        old = tmp + ".old"
+        shutil.rmtree(old, ignore_errors=True)
+        if os.path.isdir(directory):
+            # never rmtree the live artifact before the new one is in
+            # place: move it aside, swap, then delete — a crash leaves
+            # either the old or the new artifact loadable
+            os.replace(directory, old)
+        os.replace(tmp, directory)
+        shutil.rmtree(old, ignore_errors=True)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str,
+             rank: Optional[np.ndarray] = None) -> "CHLIndex":
+        """Load a saved index. When ``rank`` is given it must hash to
+        the manifest's ``rank_hash`` — a label table is meaningless
+        under a different hierarchy."""
+        with open(os.path.join(directory, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != FORMAT:
+            raise ValueError(
+                f"{directory}: not a CHL index artifact "
+                f"(format={manifest.get('format')!r})")
+        if manifest.get("version", 0) > VERSION:
+            raise ValueError(
+                f"{directory}: index version {manifest['version']} is "
+                f"newer than supported ({VERSION})")
+        arrs = np.load(os.path.join(directory, "arrays.npz"))
+        stored_rank = arrs["rank"]
+        if rank_hash(stored_rank) != manifest["rank_hash"]:
+            raise ValueError(f"{directory}: stored rank does not match "
+                             "manifest rank_hash (corrupt artifact)")
+        if rank is not None and rank_hash(rank) != manifest["rank_hash"]:
+            raise ValueError(
+                f"{directory}: rank-hash mismatch — this index was "
+                "built under a different vertex hierarchy")
+        plan = BuildPlan.from_dict(manifest["plan"])
+        report = BuildReport.from_dict(manifest["report"])
+
+        def tbl(pfx: str) -> LabelTable:
+            return LabelTable(jnp.asarray(arrs[f"{pfx}hubs"]),
+                              jnp.asarray(arrs[f"{pfx}dist"]),
+                              jnp.asarray(arrs[f"{pfx}count"]))
+
+        if manifest["directed"]:
+            return cls(l_out=tbl("out_"), l_in=tbl("in_"), plan=plan,
+                       report=report, rank=stored_rank)
+        return cls(tbl(""), plan=plan, report=report, rank=stored_rank)

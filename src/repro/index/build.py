@@ -1,0 +1,148 @@
+"""`build(graph, rank, plan) -> CHLIndex` — the one construction facade.
+
+Dispatches a validated :class:`BuildPlan` to the paper's constructors
+(PLL reference, LCC/GLL/paraPLL §4, PLaNT §5.2, DGLL §5.1, Hybrid
+§5.2.1, directed footnote-1 pairs), normalizes their ad-hoc stats into
+a :class:`BuildReport`, and packages the result as a
+:class:`CHLIndex`.
+
+Overflow is no longer terminal: a ``LabelOverflowError`` triggers a
+retry with the cap grown geometrically (``plan.cap_growth``, clamped
+to n, at most ``plan.max_cap_retries`` times), and every regrow is
+recorded in ``report.overflow_events`` — previously a whole run was
+burned just to learn the cap was too small.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import labels as lbl
+from repro.core.directed import plant_directed_chl
+from repro.core.gll import gll_chl, lcc_chl, parapll_chl
+from repro.core.labels import LabelOverflowError
+from repro.core.plant import plant_chl
+from repro.core.pll import pll_undirected
+from repro.index.artifact import CHLIndex
+from repro.index.plan import BuildPlan
+from repro.index.report import (BuildReport, OverflowEvent,
+                                normalize_stats)
+
+
+def _dispatch(g, rank: np.ndarray, plan: BuildPlan, cap: int, mesh,
+              ckpt, resume: bool, verbose: bool):
+    """Run one construction attempt; returns (table | (l_out, l_in),
+    stats | None)."""
+    a = plan.algo
+    if a == "plant":
+        return plant_chl(g, rank, batch=plan.batch, cap=cap)
+    if a == "gll":
+        return gll_chl(g, rank, batch=plan.batch, alpha=plan.alpha,
+                       cap=cap)
+    if a == "lcc":
+        return lcc_chl(g, rank, batch=plan.batch, cap=cap)
+    if a == "parapll":
+        return parapll_chl(g, rank, batch=plan.batch, cap=cap)
+    if a == "directed":
+        return plant_directed_chl(g, rank, batch=plan.batch, cap=cap), \
+            None
+    if a == "pll-ref":
+        sets = pll_undirected(g, rank)
+        return lbl.from_numpy_sets(sets, cap=cap), None
+    # distributed driver family — import lazily: pulls in shard_map
+    from repro.core.dgll import dgll_chl, make_node_mesh
+    from repro.core.hybrid import hybrid_chl, plant_distributed_chl
+    mesh = mesh or make_node_mesh(plan.mesh_devices)
+    kw = dict(mesh=mesh, batch=plan.batch, beta=plan.beta, cap=cap,
+              ckpt=ckpt, resume=resume, verbose=verbose)
+    if a == "dgll":
+        return dgll_chl(g, rank, eta=plan.eta, hc_cap=plan.hc_cap,
+                        compact=plan.compact, **kw)
+    if a == "hybrid":
+        return hybrid_chl(g, rank, eta=plan.eta, hc_cap=plan.hc_cap,
+                          psi_threshold=plan.psi_th,
+                          compact=plan.compact, **kw)
+    if a == "plant-dist":
+        return plant_distributed_chl(g, rank, **kw)
+    raise ValueError(f"unhandled algo {a!r}")     # pragma: no cover
+
+
+def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
+          mesh=None, ckpt=None, resume: bool = False,
+          verbose: bool = False) -> CHLIndex:
+    """Construct a :class:`CHLIndex` per ``plan`` (default: hybrid).
+
+    ``mesh`` overrides the plan's mesh spec for distributed algos.
+    ``ckpt`` (a ``CheckpointManager``) enables mid-run superstep
+    checkpointing for the distributed algos; ``resume`` continues from
+    the last committed superstep.
+    """
+    plan = plan or BuildPlan()
+    if plan.algo == "directed" and not g.directed:
+        raise ValueError("algo='directed' needs a directed graph")
+    if plan.algo != "directed" and g.directed:
+        raise ValueError(f"algo={plan.algo!r} needs an undirected "
+                         "graph; use algo='directed'")
+    n = g.n
+    cap = plan.cap or lbl.default_cap(n)
+    cap = min(cap, n)
+    overflow_events = []
+    t0 = time.perf_counter()
+    attempt = 0
+    while True:
+        try:
+            result, stats = _dispatch(g, rank, plan, cap, mesh,
+                                      ckpt, resume and attempt == 0,
+                                      verbose)
+            break
+        except LabelOverflowError as e:
+            if e.what != "label table":
+                # a different table overflowed (e.g. the common label
+                # table's hc_cap) — regrowing the vertex cap can't help
+                raise
+            grown = min(max(cap + 1, int(cap * plan.cap_growth)), n)
+            if attempt >= plan.max_cap_retries or grown == cap:
+                overflow_events.append(
+                    OverflowEvent(attempt=attempt, cap=cap,
+                                  regrown_to=None))
+                raise
+            overflow_events.append(
+                OverflowEvent(attempt=attempt, cap=cap, regrown_to=grown))
+            if ckpt is not None:
+                # stale small-cap checkpoints would outrank the retry's
+                # lower step numbers in retention GC and shadow resume
+                ckpt.clear()
+            if verbose:
+                print(f"[build] label table overflow at cap={cap}; "
+                      f"regrowing to {grown} "
+                      f"(attempt {attempt + 1}/{plan.max_cap_retries})")
+            cap = grown
+            attempt += 1
+    wall = time.perf_counter() - t0
+
+    partitioned = None
+    if isinstance(result, tuple) and not isinstance(result, lbl.LabelTable):
+        l_out, l_in = result
+        total = lbl.total_labels(l_out) + lbl.total_labels(l_in)
+        als = total / max(1, 2 * n)
+        kw = normalize_stats(plan.algo, stats)
+        report = BuildReport(algo=plan.algo, wall_s=wall,
+                             total_labels=total, als=als, cap=cap,
+                             overflow_events=overflow_events, **kw)
+        return CHLIndex(l_out=l_out, l_in=l_in, plan=plan, report=report,
+                        rank=rank)
+
+    table = result
+    if stats is not None:
+        partitioned = stats.pop("partitioned", None)
+        stats.pop("hc", None)
+    total = lbl.total_labels(table)
+    kw = normalize_stats(plan.algo, stats)
+    report = BuildReport(algo=plan.algo, wall_s=wall, total_labels=total,
+                         als=total / max(1, n), cap=cap,
+                         overflow_events=overflow_events, **kw)
+    return CHLIndex(table, plan=plan, report=report, rank=rank,
+                    partitioned=partitioned)

@@ -1,0 +1,101 @@
+"""`BuildPlan` — one frozen, validated config for every CHL constructor.
+
+The paper's pipeline is a single conceptual flow (rank → construct →
+serve); the plan is the construct half's contract. Every knob of every
+algorithm lives here with one spelling, so launchers, examples,
+benchmarks and checkpoints all describe a build the same way, and the
+on-disk index manifest can record exactly how an artifact was made.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+ALGOS = ("plant", "gll", "lcc", "parapll", "dgll", "hybrid",
+         "plant-dist", "directed", "pll-ref")
+
+#: algorithms that run on a device mesh (superstep driver, §5)
+DISTRIBUTED_ALGOS = ("dgll", "hybrid", "plant-dist")
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildPlan:
+    """Frozen build configuration for ``repro.index.build``.
+
+    ``cap=None`` → ``labels.default_cap(n)`` at build time. On label
+    table overflow the build retries with the cap grown by
+    ``cap_growth`` (clamped to n), at most ``max_cap_retries`` times.
+    ``psi_th=None`` → auto Ψ-threshold (γ·q) for the hybrid.
+    ``mesh_devices=None`` → all local devices for distributed algos.
+    """
+
+    algo: str = "hybrid"
+    batch: int = 8
+    cap: Optional[int] = None
+    beta: float = 8.0                 # superstep growth (§5.1)
+    eta: int = 16                     # common-label-table hubs (§5.3)
+    hc_cap: int = 64
+    psi_th: Optional[float] = None    # PLaNT→DGLL switch (§5.2.1)
+    alpha: Optional[float] = 4.0      # GLL cleaning threshold (§4.2)
+    compact: int = 0                  # §Perf-2 compact broadcast budget
+    mesh_devices: Optional[int] = None
+    max_cap_retries: int = 4
+    cap_growth: float = 2.0
+
+    def __post_init__(self):
+        if self.algo not in ALGOS:
+            raise ValueError(f"algo {self.algo!r} not one of {ALGOS}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if self.cap is not None and self.cap < 1:
+            raise ValueError(f"cap must be >= 1, got {self.cap}")
+        if self.beta <= 1.0:
+            raise ValueError(f"beta must be > 1, got {self.beta}")
+        if self.eta < 0 or self.hc_cap < 1:
+            raise ValueError("eta must be >= 0 and hc_cap >= 1")
+        if self.psi_th is not None and self.psi_th < 0:
+            raise ValueError(f"psi_th must be >= 0, got {self.psi_th}")
+        if self.compact < 0:
+            raise ValueError(f"compact must be >= 0, got {self.compact}")
+        if self.mesh_devices is not None and self.mesh_devices < 1:
+            raise ValueError("mesh_devices must be >= 1")
+        if self.max_cap_retries < 0 or self.cap_growth <= 1.0:
+            raise ValueError(
+                "max_cap_retries must be >= 0 and cap_growth > 1")
+
+    @property
+    def distributed(self) -> bool:
+        return self.algo in DISTRIBUTED_ALGOS
+
+    # --------------------------------------------------- constructors
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "BuildPlan":
+        """Plan from an argparse ``Namespace`` (the launcher contract).
+
+        Reads the attributes that exist (``algo``, ``batch``, ``cap``,
+        ``beta``, ``eta``, ``psi_th``, ``compact``, ``mesh_devices``)
+        and leaves the rest at their defaults; ``overrides`` win.
+        """
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {}
+        for name in fields:
+            if hasattr(args, name) and getattr(args, name) is not None:
+                kw[name] = getattr(args, name)
+        kw.update(overrides)
+        return cls(**kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BuildPlan":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown BuildPlan keys: {sorted(unknown)}")
+        return cls(**d)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def replace(self, **kw) -> "BuildPlan":
+        return dataclasses.replace(self, **kw)

@@ -3,30 +3,32 @@
     python -m repro.launch.chl --graph road --n 1600 --algo hybrid \
         --ckpt-dir /tmp/chl_run --queries 1000
 
-Fault tolerance for the paper's workload: after every superstep the
-(partitioned) label table, the root-queue cursor, and the superstep
-schedule are checkpointed atomically; `--resume` continues from the
-last committed superstep. Combined with PLaNT's statelessness, a
-failed run never loses more than one superstep of work.
+Thin CLI over ``repro.index.build``: parses a ``BuildPlan``, runs the
+facade (which owns the superstep driver, checkpointing, and overflow
+auto-regrow), finalizes the run into a versioned ``CHLIndex`` artifact
+(``--save-index``, default ``<ckpt-dir>/index``), and optionally
+smoke-serves queries through ``CHLIndex.serve``.
+
+Fault tolerance: the distributed driver checkpoints the partitioned
+label table + superstep cursor after every superstep; ``--resume``
+continues from the last committed superstep. Combined with PLaNT's
+statelessness, a failed run never loses more than one superstep of
+work.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-from typing import Optional
+import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import labels as lbl
 from repro.core import dgll as dist
-from repro.core.hybrid import auto_psi_threshold
 from repro.graphs import grid_road, scale_free
 from repro.graphs.io import read_dimacs
 from repro.graphs.ranking import betweenness_ranking, degree_ranking
+from repro.index import BuildPlan, build
 
 
 def build_graph(args):
@@ -50,7 +52,7 @@ def main(argv=None) -> dict:
     ap.add_argument("--n", type=int, default=1600)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--algo", default="hybrid",
-                    choices=("plant", "dgll", "hybrid"))
+                    choices=("plant", "dgll", "hybrid", "plant-dist"))
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--beta", type=float, default=8.0)
     ap.add_argument("--eta", type=int, default=16)
@@ -60,7 +62,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--cap", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--save-index", default=None,
+                    help="finalize into a CHLIndex artifact dir "
+                         "(default: <ckpt-dir>/index)")
     ap.add_argument("--queries", type=int, default=0)
+    ap.add_argument("--query-mode", default="qlsn",
+                    choices=("qlsn", "qfdl", "qdol"))
     args = ap.parse_args(argv)
 
     g, rank = build_graph(args)
@@ -69,85 +76,30 @@ def main(argv=None) -> dict:
     print(f"graph n={g.n} m={g.m // (1 if g.directed else 2)}; "
           f"q={q} nodes; algo={args.algo}")
 
-    psi_th = {"plant": float("inf"), "dgll": 0.0,
-              "hybrid": args.psi_th if args.psi_th is not None
-              else auto_psi_threshold(q)}[args.algo]
-    n = g.n
-    cap = args.cap or max(16, 4 * int(np.sqrt(n)) + 32)
-    queues = dist.assign_roots(rank, q)
-    per = queues.shape[1]
+    # historical spelling: launcher "plant" = distributed PLaNT
+    algo = {"plant": "plant-dist"}.get(args.algo, args.algo)
+    plan = BuildPlan.from_args(args, algo=algo)
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
-    # -- superstep loop with checkpointing (mirrors hybrid driver) ---
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    state = dist.init_dist_state(mesh, n, cap, 1)
-    table = state.table
-    hc = state.hc
-    pos, size, plant_mode = 0, 1, psi_th > 0
-    if mgr and args.resume and mgr.latest_step() is not None:
-        tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(
-            x.shape, x.dtype), table)
-        table, pos, extra = mgr.restore(tmpl)
-        table = lbl.LabelTable(*(jnp.asarray(x) for x in table))
-        size = int(extra.get("size", 1))
-        plant_mode = bool(extra.get("plant_mode", plant_mode))
-        print(f"[resume] superstep cursor={pos} size={size}")
+    idx = build(g, rank, plan, mesh=mesh, ckpt=mgr,
+                resume=args.resume, verbose=True)
+    print(f"CHL done: {idx.report.summary()}")
 
-    rank_d = jnp.asarray(rank.astype(np.int32))
-    ell_src, ell_w = jnp.asarray(g.ell_src), jnp.asarray(g.ell_w)
-    node_sh = NamedSharding(mesh, P("node"))
-    fns = {}
-    t0 = time.time()
-    while pos < per:
-        T = -(-min(size, per - pos) // args.batch) * args.batch
-        key = (plant_mode, T)
-        if key not in fns:
-            fns[key] = dist.dgll_superstep_fn(
-                mesh, n, batch=args.batch, use_hc=False,
-                plant_trees=plant_mode, compact=args.compact)
-        roots = np.full((q, T), -1, np.int32)
-        take = min(T, per - pos)
-        roots[:, :take] = queues[:, pos:pos + take]
-        out = fns[key](table, hc, rank_d,
-                       jax.device_put(jnp.asarray(roots), node_sh),
-                       jax.device_put(jnp.asarray(roots >= 0), node_sh),
-                       ell_src, ell_w)
-        table = out.table
-        if bool(jnp.any(out.overflow)):
-            raise RuntimeError("label table overflow; raise --cap")
-        nl = int(jnp.sum(out.new_labels))
-        exp = int(jnp.sum(out.explored))
-        psi = exp / max(1, nl)
-        mode = "plant" if plant_mode else "dgll"
-        print(f"superstep pos={pos:6d} T={T:4d} mode={mode} "
-              f"labels={nl} psi={psi:.1f}")
-        if plant_mode and psi > psi_th:
-            plant_mode = False
-            print(f"  Ψ={psi:.1f} > Ψ_th={psi_th:.1f} → switching "
-                  f"to DGLL")
-        pos += T
-        size = int(size * args.beta)
-        if mgr:
-            mgr.save(pos, table,
-                     data_state={"size": size,
-                                 "plant_mode": plant_mode},
-                     blocking=False)
-    if mgr:
-        mgr.wait()
-    merged = dist.merge_partitions(table)
-    total = lbl.total_labels(merged)
-    print(f"CHL done in {time.time() - t0:.1f}s: {total} labels, "
-          f"ALS={total / g.n:.1f}")
+    out_dir = args.save_index or (
+        os.path.join(args.ckpt_dir, "index") if args.ckpt_dir else None)
+    if out_dir:
+        idx.save(out_dir)
+        print(f"index artifact saved to {out_dir}")
 
     if args.queries:
-        from repro.serve.query_server import QueryServer
         rng = np.random.default_rng(1)
-        srv = QueryServer.build(merged, mode="qlsn", batch_size=512)
+        srv = idx.serve(mode=args.query_mode, mesh=mesh, batch_size=512)
+        srv.warmup()
         srv.submit(rng.integers(0, g.n, args.queries),
                    rng.integers(0, g.n, args.queries))
         srv.flush()
         print("serving:", srv.stats())
-    return {"table": merged, "als": total / g.n}
+    return {"table": idx.table, "als": idx.report.als, "index": idx}
 
 
 if __name__ == "__main__":

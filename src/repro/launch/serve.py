@@ -2,6 +2,10 @@
 
     python -m repro.launch.serve --arch smollm_360m --smoke \
         --batch 4 --prompt-len 32 --gen 64
+
+CHL query serving moved behind the index artifact API: pass
+``--chl-index <dir>`` to delegate to ``repro.launch.serve_chl``
+(remaining argv is forwarded), or invoke that launcher directly.
 """
 
 from __future__ import annotations
@@ -21,6 +25,23 @@ from repro.train.trainer import make_serve_fns
 
 
 def main(argv=None) -> dict:
+    import sys
+    raw = list(sys.argv[1:] if argv is None else argv)
+    for i, a in enumerate(raw):              # CHL artifact serving path
+        if a == "--chl-index" or a.startswith("--chl-index="):
+            from repro.launch.serve_chl import main as chl_main
+            if "=" in a:
+                val = a.split("=", 1)[1]
+                rest = raw[:i] + raw[i + 1:]
+            elif i + 1 < len(raw):
+                val = raw[i + 1]
+                rest = raw[:i] + raw[i + 2:]
+            else:
+                raise SystemExit(
+                    "repro.launch.serve: --chl-index needs a value "
+                    "(the CHLIndex artifact directory)")
+            return chl_main(["--index", val] + rest)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm_360m")
     ap.add_argument("--smoke", action="store_true")

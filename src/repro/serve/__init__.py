@@ -1,1 +1,5 @@
+from repro.serve.backends import MODES, make_answer_fn, partition_by_hub
 from repro.serve.query_server import QueryServer, ServerStats
+
+__all__ = ["MODES", "QueryServer", "ServerStats", "make_answer_fn",
+           "partition_by_hub"]

@@ -1,0 +1,93 @@
+"""Storage-mode wiring for PPSD query serving (QLSN / QFDL / QDOL).
+
+One place that knows how to turn a label table into an ``answer(u, v)
+-> dist`` callable for each of the paper's §6.3 storage modes —
+previously open-coded in ``QueryServer.build`` and re-open-coded by
+every example/benchmark. ``CHLIndex.serve`` and ``QueryServer.build``
+both route through here.
+
+- **qlsn**: replicated table, local intersection (Pallas-accelerated
+  path lives in ``repro.kernels.label_query``; the jnp reference is
+  used here for portability).
+- **qfdl**: hub-partitioned ``[q, n, L]`` table + ``pmin`` reduce. If
+  no construction-time partitioned table is supplied, one is
+  synthesized by round-robin hub ownership (the construction layout of
+  §5.1: ``owner(h) = order_index(h) mod q``).
+- **qdol**: ζ-partition overlapping stores; layout + store are built
+  here so callers never touch ``qdol_layout``/``qdol_build``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import query as qm
+from repro.core.labels import LabelTable
+
+MODES = ("qlsn", "qfdl", "qdol")
+
+AnswerFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def partition_by_hub(table: LabelTable, rank: np.ndarray, mesh
+                     ) -> LabelTable:
+    """Synthesize the QFDL ``[q, n, L]`` hub-partitioned table from a
+    merged table: node ``i`` keeps exactly the labels whose hub it
+    would have generated (rank-order round-robin, §5.1)."""
+    q = int(mesh.devices.size)
+    n, L = table.hubs.shape
+    order = np.argsort(-np.asarray(rank).astype(np.int64), kind="stable")
+    owner = np.empty(n, dtype=np.int64)
+    owner[order] = np.arange(n) % q
+    th = np.asarray(table.hubs)
+    td = np.asarray(table.dist)
+    hubs = np.full((q, n, L), -1, dtype=np.int32)
+    dist = np.full((q, n, L), np.inf, dtype=np.float32)
+    count = np.zeros((q, n), dtype=np.int32)
+    hub_owner = np.where(th >= 0, owner[np.where(th >= 0, th, 0)], -1)
+    for k in range(q):
+        mine = hub_owner == k                     # [n, L]
+        dest = np.cumsum(mine, axis=1) - 1        # slot within row
+        rows, cols = np.nonzero(mine)
+        hubs[k, rows, dest[rows, cols]] = th[rows, cols]
+        dist[k, rows, dest[rows, cols]] = td[rows, cols]
+        count[k] = mine.sum(axis=1)
+    sh = NamedSharding(mesh, P("node"))
+    return LabelTable(jax.device_put(jnp.asarray(hubs), sh),
+                      jax.device_put(jnp.asarray(dist), sh),
+                      jax.device_put(jnp.asarray(count), sh))
+
+
+def make_answer_fn(table: LabelTable, mode: str = "qlsn", *,
+                   mesh=None, partitioned: Optional[LabelTable] = None,
+                   rank: Optional[np.ndarray] = None) -> AnswerFn:
+    """Answer callable for a storage mode; absorbs mesh/layout/store
+    ceremony. ``mesh`` defaults to all local devices for the
+    distributed modes; ``partitioned`` (construction-time layout) is
+    synthesized from ``rank`` when absent."""
+    if mode == "qlsn":
+        return jax.jit(lambda u, v: qm.qlsn(table, u, v))
+    if mode not in MODES:
+        raise ValueError(f"unknown query mode {mode!r}; one of {MODES}")
+    if mesh is None:
+        from repro.core.dgll import make_node_mesh
+        mesh = make_node_mesh()
+    if mode == "qfdl":
+        if partitioned is None:
+            if rank is None:
+                raise ValueError(
+                    "qfdl needs `partitioned` or `rank` to lay out the "
+                    "hub partitions")
+            partitioned = partition_by_hub(table, rank, mesh)
+        f = qm.qfdl_fn(mesh)
+        return lambda u, v: f(partitioned, u, v)
+    # qdol
+    layout = qm.qdol_layout(table.hubs.shape[0], int(mesh.devices.size))
+    store = qm.qdol_build(table, layout, mesh)
+    f = qm.qdol_fn(mesh, layout)
+    return lambda u, v: f(store, u, v)

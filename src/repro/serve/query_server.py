@@ -7,27 +7,35 @@ the tail), dispatches them to one of the three storage modes, and
 tracks latency percentiles. This module implements that loop with a
 pluggable backend:
 
-    srv = QueryServer.build(table, mode="qdol", mesh=mesh)
+    srv = index.serve(mode="qdol", mesh=mesh)   # repro.index.CHLIndex
+    srv.warmup()                    # jit compile outside the percentiles
     out = srv.submit(u, v)          # enqueues
     srv.flush()                     # drains queues in batches
     srv.stats()                     # latency/throughput accounting
 
-Backends reuse `repro.core.query` (QLSN / QFDL / QDOL) and the
-`label_query` Pallas kernel path for QLSN.
+Mode wiring (QLSN / QFDL / QDOL) lives in `repro.serve.backends`;
+``QueryServer.build`` is kept as a thin deprecated shim over it —
+prefer ``CHLIndex.serve``.
+
+Latency accounting: the first batch through a fresh jitted backend
+pays XLA compile time, which used to poison p50/p99. Unless the
+server was explicitly ``warmup()``-ed, the first flushed batch is
+treated as the warmup sample: recorded in ``ServerStats.warmup_s``
+and excluded from the latency percentiles and busy time.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import query as qm
 from repro.core.labels import LabelTable
+from repro.serve import backends
 
 
 @dataclasses.dataclass
@@ -35,29 +43,37 @@ class ServerStats:
     queries: int = 0
     batches: int = 0
     busy_s: float = 0.0
+    warmup_s: float = 0.0          # compile/first-batch time, kept apart
+    measured_queries: int = 0      # queries behind busy_s/lat_samples
     lat_samples: List[float] = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
         lat = np.asarray(self.lat_samples) if self.lat_samples else \
             np.zeros(1)
+        # throughput over the *measured* queries only — a warmup batch
+        # contributes neither time nor count, so a single-batch caller
+        # reports 0 rather than N/epsilon
         return {
             "queries": self.queries,
             "batches": self.batches,
-            "throughput_qps": self.queries / max(self.busy_s, 1e-9),
+            "throughput_qps": (self.measured_queries
+                               / max(self.busy_s, 1e-9)),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "warmup_ms": self.warmup_s * 1e3,
         }
 
 
 class QueryServer:
     def __init__(self, answer: Callable[[jax.Array, jax.Array],
                                         jax.Array],
-                 batch_size: int = 1024):
+                 batch_size: int = 1024, drop_first: bool = True):
         self._answer = answer
         self.batch_size = batch_size
         self._qu: List[np.ndarray] = []
         self._qv: List[np.ndarray] = []
         self._results: List[np.ndarray] = []
+        self._warm = not drop_first
         self.stats_ = ServerStats()
 
     # ------------------------------------------------------------ api
@@ -65,23 +81,23 @@ class QueryServer:
     @staticmethod
     def build(table: LabelTable, mode: str = "qlsn",
               mesh=None, partitioned: Optional[LabelTable] = None,
-              batch_size: int = 1024) -> "QueryServer":
-        if mode == "qlsn":
-            fn = jax.jit(lambda u, v: qm.qlsn(table, u, v))
-        elif mode == "qfdl":
-            assert mesh is not None and partitioned is not None
-            f = qm.qfdl_fn(mesh)
-            fn = lambda u, v: f(partitioned, u, v)      # noqa: E731
-        elif mode == "qdol":
-            assert mesh is not None
-            layout = qm.qdol_layout(table.hubs.shape[0],
-                                    int(mesh.devices.size))
-            store = qm.qdol_build(table, layout, mesh)
-            f = qm.qdol_fn(mesh, layout)
-            fn = lambda u, v: f(store, u, v)            # noqa: E731
-        else:
-            raise ValueError(mode)
+              batch_size: int = 1024, rank=None) -> "QueryServer":
+        """Deprecated shim — use ``repro.index.CHLIndex.serve``."""
+        fn = backends.make_answer_fn(table, mode, mesh=mesh,
+                                     partitioned=partitioned, rank=rank)
         return QueryServer(fn, batch_size=batch_size)
+
+    def warmup(self) -> float:
+        """Run one dummy batch through the backend so jit compile time
+        never lands in a real query's latency. Returns seconds spent
+        (also recorded in ``ServerStats.warmup_s``)."""
+        z = jnp.zeros(self.batch_size, jnp.int32)
+        t0 = time.perf_counter()
+        jax.block_until_ready(self._answer(z, z))
+        dt = time.perf_counter() - t0
+        self.stats_.warmup_s += dt
+        self._warm = True
+        return dt
 
     def submit(self, u: np.ndarray, v: np.ndarray) -> None:
         self._qu.append(np.asarray(u, np.int32))
@@ -109,8 +125,13 @@ class QueryServer:
             out[s:s + B - pad] = res[:B - pad]
             self.stats_.queries += B - pad
             self.stats_.batches += 1
-            self.stats_.busy_s += dt
-            self.stats_.lat_samples.append(dt)
+            if self._warm:
+                self.stats_.busy_s += dt
+                self.stats_.measured_queries += B - pad
+                self.stats_.lat_samples.append(dt)
+            else:                      # first batch = compile sample
+                self.stats_.warmup_s += dt
+                self._warm = True
         self._results.append(out)
         return out
 

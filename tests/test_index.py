@@ -1,0 +1,383 @@
+"""The `repro.index` artifact API: BuildPlan validation, one facade
+over every constructor, save/load round trips, rank-hash rejection,
+overflow auto-regrow, mode-agnostic serving, and warmup accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import labels as lbl
+from repro.core.labels import LabelOverflowError, default_cap
+from repro.core.pll import pll_directed, pll_undirected
+from repro.graphs import grid_road, random_connected, scale_free
+from repro.graphs.ranking import degree_ranking, random_ranking
+from repro.index import ALGOS, BuildPlan, BuildReport, CHLIndex, build
+
+
+def small_graph():
+    g = grid_road(5, 5, seed=1)
+    return g, degree_ranking(g)
+
+
+# ---------------------------------------------------------- BuildPlan
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        BuildPlan(algo="nope")
+    with pytest.raises(ValueError):
+        BuildPlan(batch=0)
+    with pytest.raises(ValueError):
+        BuildPlan(cap=-1)
+    with pytest.raises(ValueError):
+        BuildPlan(psi_th=-1.0)
+    with pytest.raises(ValueError):
+        BuildPlan(cap_growth=1.0)
+
+
+def test_plan_dict_round_trip():
+    plan = BuildPlan(algo="hybrid", batch=4, eta=8, psi_th=50.0)
+    assert BuildPlan.from_dict(plan.to_dict()) == plan
+    with pytest.raises(ValueError):
+        BuildPlan.from_dict({"algo": "plant", "bogus": 1})
+
+
+def test_plan_from_args_namespace():
+    import argparse
+    ns = argparse.Namespace(algo="dgll", batch=4, beta=4.0, cap=None,
+                            psi_th=None, compact=2, unrelated="x")
+    plan = BuildPlan.from_args(ns, eta=0)
+    assert plan.algo == "dgll" and plan.batch == 4
+    assert plan.compact == 2 and plan.eta == 0
+    assert plan.cap is None and plan.psi_th is None
+
+
+def test_default_cap_shared_heuristic():
+    assert default_cap(400) == 4 * 20 + 32
+    assert default_cap(4) == 4          # clamped to n
+    assert default_cap(100) >= 16
+
+
+# ------------------------------------------------------------- facade
+
+CHL_EXACT = ("plant", "gll", "lcc", "dgll", "hybrid", "plant-dist",
+             "pll-ref")
+
+
+@pytest.mark.parametrize("algo", [a for a in ALGOS if a != "directed"])
+def test_build_facade_covers_every_algo(algo):
+    g, rank = small_graph()
+    ref = pll_undirected(g, rank)
+    idx = build(g, rank, BuildPlan(algo=algo, batch=4, eta=4,
+                                   psi_th=50.0))
+    assert idx.validate_against(g)          # cover property, always
+    if algo in CHL_EXACT:
+        assert idx.validate_against(ref)    # exact CHL label sets
+    assert idx.report.algo == algo
+    assert idx.report.total_labels == idx.total_labels > 0
+    assert idx.report.wall_s > 0
+
+
+def test_build_directed_facade():
+    g = random_connected(24, extra_edges=40, seed=0, directed=True)
+    rank = degree_ranking(g)
+    idx = build(g, rank, BuildPlan(algo="directed", batch=8))
+    assert idx.directed
+    assert idx.validate_against(g)
+    assert idx.validate_against(pll_directed(g, rank))
+
+
+def test_build_rejects_wrong_directedness():
+    g, rank = small_graph()
+    with pytest.raises(ValueError):
+        build(g, rank, BuildPlan(algo="directed"))
+    gd = random_connected(12, extra_edges=10, seed=0, directed=True)
+    with pytest.raises(ValueError):
+        build(gd, degree_ranking(gd), BuildPlan(algo="plant"))
+
+
+def test_query_with_hub_witness_is_real():
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    u = np.array([0, 3, 7], np.int32)
+    v = np.array([24, 9, 7], np.int32)
+    d, h = idx.query_with_hub(u, v)
+    from repro.sssp.oracle import dijkstra
+    for ui, vi, di, hi in zip(u, v, d, h):
+        assert hi >= 0
+        du = dijkstra(g, int(ui))
+        dv = dijkstra(g, int(vi))
+        assert di == np.float32(du[hi] + dv[hi])
+
+
+# --------------------------------------------------- overflow regrow
+
+def test_constructor_raises_typed_overflow():
+    g, rank = small_graph()
+    from repro.core.plant import plant_chl
+    with pytest.raises(LabelOverflowError):
+        plant_chl(g, rank, batch=4, cap=2)
+
+
+def test_build_regrows_cap_instead_of_raising():
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=4, cap=4))
+    assert idx.report.cap_retries >= 1
+    assert idx.report.cap > 4
+    ev = idx.report.overflow_events[0]
+    assert ev.cap == 4 and ev.regrown_to > 4
+    assert idx.validate_against(pll_undirected(g, rank))
+
+
+def test_build_does_not_regrow_on_hc_cap_overflow():
+    # common-label-table overflow is not fixable by growing the vertex
+    # cap: must re-raise immediately, with no phantom retries
+    g = scale_free(40, attach=2, seed=1)
+    rank = degree_ranking(g)
+    with pytest.raises(LabelOverflowError, match="common label table"):
+        build(g, rank, BuildPlan(algo="hybrid", batch=4, eta=8,
+                                 hc_cap=1, psi_th=50.0))
+
+
+def test_build_regrow_exhaustion_reraises():
+    g, rank = small_graph()
+    with pytest.raises(LabelOverflowError):
+        build(g, rank, BuildPlan(algo="plant", batch=4, cap=2,
+                                 max_cap_retries=0))
+
+
+# ------------------------------------------------------- save / load
+
+def test_save_load_round_trip_undirected(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="gll", batch=4))
+    path = idx.save(str(tmp_path / "idx"))
+    idx2 = CHLIndex.load(path, rank=rank)
+    assert not idx2.directed
+    assert idx2.plan == idx.plan
+    assert idx2.report.total_labels == idx.report.total_labels
+    u = np.arange(g.n, dtype=np.int32)
+    v = (u[::-1]).copy()
+    np.testing.assert_array_equal(idx2.query(u, v), idx.query(u, v))
+    assert idx2.validate_against(g)
+
+
+def test_save_load_round_trip_directed(tmp_path):
+    g = random_connected(20, extra_edges=30, seed=1, directed=True)
+    rank = random_ranking(g.n, seed=2)
+    idx = build(g, rank, BuildPlan(algo="directed", batch=4))
+    path = idx.save(str(tmp_path / "idx"))
+    idx2 = CHLIndex.load(path, rank=rank)
+    assert idx2.directed
+    assert idx2.validate_against(g)
+
+
+def test_load_rejects_rank_hash_mismatch(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    path = idx.save(str(tmp_path / "idx"))
+    wrong = rank.copy()
+    wrong[:2] = wrong[1::-1]
+    with pytest.raises(ValueError, match="rank-hash mismatch"):
+        CHLIndex.load(path, rank=wrong)
+    CHLIndex.load(path, rank=rank)        # correct rank loads fine
+
+
+def test_save_overwrite_preserves_or_replaces(tmp_path):
+    # overwriting an existing artifact must go through a staged swap —
+    # afterwards the new artifact loads and no tmp debris remains
+    import os
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    idx.save(path)                      # overwrite the live artifact
+    assert CHLIndex.load(path).total_labels == idx.total_labels
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+    assert leftovers == []
+
+
+def test_load_rejects_foreign_directory(tmp_path):
+    import json
+    (tmp_path / "manifest.json").write_text(
+        json.dumps({"format": "something/else", "version": 1}))
+    with pytest.raises(ValueError, match="not a CHL index"):
+        CHLIndex.load(str(tmp_path))
+
+
+def test_save_load_query_exact_vs_dijkstra_road_grid(tmp_path):
+    """Acceptance: save→load→query exact vs Dijkstra on 20×20 grid."""
+    from repro.sssp.oracle import dijkstra
+    g = grid_road(20, 20, seed=7)
+    rank = degree_ranking(g)
+    idx = build(g, rank, BuildPlan(algo="plant", batch=32))
+    path = idx.save(str(tmp_path / "idx"))
+    idx2 = CHLIndex.load(path)
+    rng = np.random.default_rng(0)
+    srcs = rng.choice(g.n, 6, replace=False)
+    for s in srcs:
+        want = dijkstra(g, int(s)).astype(np.float32)
+        got = idx2.query(np.full(g.n, s, np.int32),
+                         np.arange(g.n, dtype=np.int32))
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------ serving
+
+def test_serve_all_modes_without_ceremony():
+    from repro.core.dgll import make_node_mesh
+    g = scale_free(40, attach=2, seed=1)
+    rank = degree_ranking(g)
+    mesh = make_node_mesh(1)
+    idx = build(g, rank, BuildPlan(algo="hybrid", batch=4, eta=4,
+                                   psi_th=50.0), mesh=mesh)
+    rng = np.random.default_rng(3)
+    u = rng.integers(0, g.n, 64).astype(np.int32)
+    v = rng.integers(0, g.n, 64).astype(np.int32)
+    ref = idx.query(u, v)
+    for mode in ("qlsn", "qfdl", "qdol"):
+        srv = idx.serve(mode=mode, mesh=mesh, batch_size=32)
+        srv.submit(u, v)
+        np.testing.assert_array_equal(srv.flush(), ref)
+    with pytest.raises(ValueError):
+        idx.serve(mode="bogus")
+
+
+def test_serve_qfdl_from_loaded_artifact(tmp_path):
+    """QFDL re-synthesizes the hub partition from the stored rank."""
+    from repro.core.dgll import make_node_mesh
+    g = scale_free(40, attach=2, seed=2)
+    rank = degree_ranking(g)
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    path = idx.save(str(tmp_path / "idx"))
+    idx2 = CHLIndex.load(path)
+    assert idx2.partitioned is None
+    mesh = make_node_mesh(1)
+    srv = idx2.serve(mode="qfdl", mesh=mesh, batch_size=32)
+    u = np.arange(g.n, dtype=np.int32)
+    v = u[::-1].copy()
+    srv.submit(u, v)
+    np.testing.assert_array_equal(srv.flush(), idx.query(u, v))
+
+
+def test_server_warmup_and_drop_first_accounting():
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    u = np.zeros(96, np.int32)
+    v = np.full(96, g.n - 1, np.int32)
+
+    # explicit warmup: compile time lands in warmup_s, not percentiles
+    srv = idx.serve(batch_size=32)
+    dt = srv.warmup()
+    assert dt > 0
+    srv.submit(u, v)
+    srv.flush()
+    st = srv.stats_
+    assert st.warmup_s >= dt
+    assert len(st.lat_samples) == 3          # all 3 batches measured
+    assert st.queries == 96 and st.batches == 3
+
+    # drop-first (default, no warmup call): first batch -> warmup_s
+    srv2 = idx.serve(batch_size=32)
+    srv2.submit(u, v)
+    srv2.flush()
+    st2 = srv2.stats_
+    assert st2.warmup_s > 0
+    assert len(st2.lat_samples) == 2         # first sample excluded
+    assert st2.queries == 96 and st2.batches == 3
+    assert srv2.stats()["warmup_ms"] > 0
+
+
+def test_server_single_batch_drop_first_reports_zero_throughput():
+    # a lone un-warmed batch has no measured sample: throughput must
+    # be 0, not queries/epsilon
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    srv = idx.serve(batch_size=32)
+    srv.submit(np.zeros(32, np.int32), np.zeros(32, np.int32))
+    srv.flush()
+    st = srv.stats()
+    assert st["queries"] == 32
+    assert st["throughput_qps"] == 0.0
+    assert st["warmup_ms"] > 0
+
+
+def test_memory_report():
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    rep = idx.memory_report(q=8)
+    assert rep["qfdl_total"] < rep["qdol_total"] < rep["qlsn_total"]
+
+
+# -------------------------------------------------------- checkpoints
+
+def test_build_checkpoint_resume_same_table(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.core.dgll import make_node_mesh
+    g = scale_free(40, attach=2, seed=4)
+    rank = degree_ranking(g)
+    mesh = make_node_mesh(1)
+    plan = BuildPlan(algo="hybrid", batch=4, eta=4, psi_th=50.0)
+    mgr = CheckpointManager(str(tmp_path))
+    idx = build(g, rank, plan, mesh=mesh, ckpt=mgr)
+    assert mgr.latest_step() is not None
+    # resume from the final cursor: no more work, identical labels
+    mgr2 = CheckpointManager(str(tmp_path))
+    idx2 = build(g, rank, plan, mesh=mesh, ckpt=mgr2, resume=True)
+    assert (lbl.to_numpy_sets(idx2.table)
+            == lbl.to_numpy_sets(idx.table))
+    # a finalized artifact sits next to the checkpoints
+    path = idx2.save(str(tmp_path / "index"))
+    assert CHLIndex.load(path).total_labels == idx.total_labels
+
+
+def test_distributed_regrow_clears_stale_checkpoints(tmp_path):
+    """An overflowing distributed attempt must raise before committing
+    a corrupt table, and the regrown retry must not leave stale
+    small-cap checkpoints behind to shadow future resumes."""
+    from repro.checkpoint import CheckpointManager
+    from repro.core.dgll import make_node_mesh
+    g = scale_free(40, attach=2, seed=5)
+    rank = degree_ranking(g)
+    mesh = make_node_mesh(1)
+    mgr = CheckpointManager(str(tmp_path))
+    idx = build(g, rank, BuildPlan(algo="plant-dist", batch=4, cap=3),
+                mesh=mesh, ckpt=mgr)
+    assert idx.report.cap_retries >= 1
+    assert idx.validate_against(pll_undirected(g, rank))
+    # every surviving checkpoint was written under the final cap
+    import json, os
+    for s in mgr.all_steps():
+        path = tmp_path / f"step_{s:010d}" / "manifest.json"
+        manifest = json.loads(path.read_text())
+        assert manifest["data_state"]["cap"] == idx.report.cap
+
+
+def test_resume_with_changed_cap_clears_stale_checkpoints(tmp_path):
+    import json
+    from repro.checkpoint import CheckpointManager
+    from repro.core.dgll import make_node_mesh
+    g = scale_free(40, attach=2, seed=6)
+    rank = degree_ranking(g)
+    mesh = make_node_mesh(1)
+    mgr = CheckpointManager(str(tmp_path))
+    plan = BuildPlan(algo="plant-dist", batch=4, cap=40)
+    idx = build(g, rank, plan, mesh=mesh, ckpt=mgr)
+    # resume under a different cap: stale checkpoints must be dropped,
+    # not left shadowing the fresh run's lower step numbers
+    mgr2 = CheckpointManager(str(tmp_path))
+    idx2 = build(g, rank, plan.replace(cap=30), mesh=mesh, ckpt=mgr2,
+                 resume=True)
+    assert (lbl.to_numpy_sets(idx2.table)
+            == lbl.to_numpy_sets(idx.table))
+    for s in mgr2.all_steps():
+        manifest = json.loads(
+            (tmp_path / f"step_{s:010d}" / "manifest.json").read_text())
+        assert manifest["data_state"]["cap"] == 30
+
+
+def test_report_dict_round_trip():
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="hybrid", batch=4, eta=4,
+                                   psi_th=50.0))
+    rep2 = BuildReport.from_dict(idx.report.to_dict())
+    assert rep2 == idx.report
+    assert rep2.summary() == idx.report.summary()
