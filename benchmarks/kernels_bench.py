@@ -1,16 +1,30 @@
-"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp ref on the
-two hot-spots — correctness-weighted; real perf numbers come from the
-roofline (TPU is the target, CPU interpret mode is an emulation)."""
+"""Kernel micro-benchmarks: Pallas vs pure-jnp ref on the three
+kernel hot-spots (minplus, label_query, ell_relax) plus an end-to-end
+`plant_chl` wall-clock row — correctness-weighted; real perf numbers
+come from the roofline (TPU is the target, CPU interpret mode is an
+emulation).
+
+Besides the CSV rows for `benchmarks.run`, this module regenerates
+``BENCH_kernels.json`` at the repo root — the perf-trajectory artifact
+CI smokes in interpret mode (``REPRO_PALLAS_BACKEND=interpret``).
+"""
+
+import json
+import pathlib
+from typing import List
 
 import numpy as np
-from typing import List
 
 import jax.numpy as jnp
 
 from benchmarks.common import Row, row, timed
-from repro.compat import resolve_interpret
+from repro.compat import jax_version_str, resolve_interpret
+from repro.kernels.ell_relax import ell_sweep
 from repro.kernels.label_query import label_query_padded, label_query_ref
 from repro.kernels.minplus import minplus_padded, minplus_ref
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_kernels.json"
 
 
 def run() -> List[Row]:
@@ -48,4 +62,63 @@ def run() -> List[Row]:
     _, t = timed(lambda: label_query_padded(hu, du, hv, dv)
                  .block_until_ready(), repeat=3)
     out.append(row(f"kernels/label_query/pallas_{mode}", t, note))
+
+    out += _run_ell_relax(mode, note, rng)
+    _write_json(out, mode)
     return out
+
+
+def _run_ell_relax(mode: str, note: str, rng) -> List[Row]:
+    """Fused ELL relaxation sweep: ref vs Pallas, plus end-to-end
+    `plant_chl` (the construction hot path the kernel serves)."""
+    from benchmarks.common import bench_graphs
+    from repro.core.plant import plant_chl
+
+    out: List[Row] = []
+    B, n, deg = 16, 512, 16
+    dist = jnp.asarray(np.where(rng.random((B, n)) < 0.5,
+                                rng.integers(0, 9, (B, n)), np.inf),
+                       jnp.float32)
+    mrank = jnp.asarray(np.where(np.isfinite(dist),
+                                 rng.integers(0, 99, (B, n)), -1),
+                        jnp.int32)
+    alive = jnp.ones(B, dtype=bool)
+    ell_src = jnp.asarray(rng.integers(0, n, (n, deg)), jnp.int32)
+    ell_w = jnp.asarray(np.where(rng.random((n, deg)) < 0.4,
+                                 rng.integers(1, 9, (n, deg)), np.inf),
+                        jnp.float32)
+    rank = jnp.asarray(rng.permutation(n), jnp.int32)
+    _, t = timed(lambda: ell_sweep(dist, mrank, dist, alive, ell_src,
+                                   ell_w, rank, use_kernel=False)[0]
+                 .block_until_ready(), repeat=3)
+    out.append(row("kernels/ell_relax/ref_jnp", t,
+                   f"B={B} n={n} deg={deg}"))
+    _, t = timed(lambda: ell_sweep(dist, mrank, dist, alive, ell_src,
+                                   ell_w, rank, use_kernel=True)[0]
+                 .block_until_ready(), repeat=3)
+    out.append(row(f"kernels/ell_relax/pallas_{mode}", t, note))
+
+    # end-to-end: full PLaNT construction (sweep loop + frontier
+    # gating + strided fixpoint checks) on a small paper-style graph
+    name, g, gr = bench_graphs("small")[1]       # scale-free
+    _, t = timed(lambda: plant_chl(g, gr, batch=16), repeat=1)
+    out.append(row("kernels/ell_relax/plant_chl_e2e", t,
+                   f"{name} n={g.n} batch=16"))
+    return out
+
+
+def _write_json(rows: List[Row], mode: str) -> None:
+    BENCH_JSON.write_text(json.dumps({
+        "generated_by": "benchmarks/kernels_bench.py",
+        "jax": jax_version_str(),
+        "pallas_backend": mode,
+        "rows": rows,
+    }, indent=2) + "\n")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        d = str(r.get("derived", "")).replace(",", ";")
+        print(f"{r['name']},{r['us_per_call']},{d}")
+    print(f"wrote {BENCH_JSON}")

@@ -33,14 +33,17 @@ def plant_directed_chl(g, rank: np.ndarray, *, batch: int = 16,
     rank_d = jnp.asarray(rank.astype(np.int32))
     fwd = (jnp.asarray(g.ell_src), jnp.asarray(g.ell_w))      # pull on G
     bwd = (jnp.asarray(gr.ell_src), jnp.asarray(gr.ell_w))    # pull on Gᵀ
+    # overflow accumulates on device; one host check after the loop
+    overflow = jnp.zeros((), dtype=bool)
     for roots, valid in _batches(order, batch):
         r, v = jnp.asarray(roots), jnp.asarray(valid)
         tb_f = plant_batch(fwd[0], fwd[1], rank_d, r, v)
         l_in, o1 = lbl.insert_batch(l_in, r, tb_f.emit, tb_f.dist)
         tb_b = plant_batch(bwd[0], bwd[1], rank_d, r, v)
         l_out, o2 = lbl.insert_batch(l_out, r, tb_b.emit, tb_b.dist)
-        if bool(o1) or bool(o2):
-            raise lbl.LabelOverflowError(cap)
+        overflow = overflow | o1 | o2
+    if bool(overflow):
+        raise lbl.LabelOverflowError(cap)
     return l_out, l_in
 
 

@@ -125,7 +125,11 @@ def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
     threshold = np.inf if alpha is None else alpha * n
     stats = {"supersteps": 0, "cleaned": 0, "constructed": 0,
              "superstep_sizes": []}
-    overflow = False
+    # overflow accumulates on device and is checked once after the
+    # loop. Note the construction loop still blocks once per batch on
+    # the emitted-label count — the α-threshold flush decision needs
+    # it on the host; only the redundant overflow sync is removed.
+    overflow = jnp.zeros((), dtype=bool)
 
     def flush():
         nonlocal glob, loc, pending, local_labels, overflow
@@ -139,7 +143,7 @@ def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
             stats["cleaned"] += int(jnp.sum(red))
             emit = emit & ~red
         glob, ovf = lbl.insert_batch(glob, roots, emit, dist)
-        overflow |= bool(ovf)
+        overflow = overflow | ovf
         stats["supersteps"] += 1
         stats["superstep_sizes"].append(int(roots.shape[0]))
         loc = lbl.empty(n, cap)
@@ -157,7 +161,7 @@ def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
                                  glob, loc, rank_queries=rank_queries)
         first = False
         loc, ovf = lbl.insert_batch(loc, roots_d, bl.emit, bl.dist)
-        overflow |= bool(ovf)
+        overflow = overflow | ovf
         pending.append(bl)
         nl = int(jnp.sum(bl.emit))
         local_labels += nl
@@ -165,7 +169,7 @@ def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
         if local_labels >= threshold:
             flush()
     flush()
-    if overflow:
+    if bool(overflow):
         raise lbl.LabelOverflowError(cap)
     return glob, stats
 

@@ -143,9 +143,10 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                           jax.device_put(jnp.asarray(roots >= 0), node_sh),
                           ell_src, ell_w)
             table = out.table
-            if bool(jnp.any(out.overflow)):
+            nl, exp, ovf, _ = _fetch_stats(out)
+            if ovf:
                 raise lbl.LabelOverflowError(cap)
-            _record(stats, "plant-hc", out)
+            _record(stats, "plant-hc", nl, exp)
             pos += k0
             if ckpt is not None:
                 ckpt.save(pos, table,
@@ -154,7 +155,7 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                                       "cap": cap},
                           blocking=False)
 
-    plant_fn = dgll_fn = None
+    plant_fn = dgll_fn = dense_fn = None
     while pos < per:
         T = min(size, per - pos)
         T = -(-T // batch) * batch               # multiple of batch
@@ -169,6 +170,7 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
             out = plant_fn[1](table, hc, rank_d, roots_d, valid_d,
                               ell_src, ell_w)
             mode = "plant"
+            nl, exp, ovf, _ = _fetch_stats(out)
         else:
             if dgll_fn is None or dgll_fn[0] != T:
                 dgll_fn = (T, dist.dgll_superstep_fn(
@@ -178,28 +180,30 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                              ell_src, ell_w)
             mode = "dgll"
             slots = q * T * min(compact, n) if compact else q * T * n
-            if compact and bool(jnp.any(out.compact_overflow)):
+            nl, exp, ovf, compact_ovf = _fetch_stats(out)
+            if compact and compact_ovf:
                 # §Perf-2 fallback: budget too small for this
                 # superstep's label yield → redo densely (correctness
                 # over speed; rare once DGLL mode starts — Fig. 2)
-                if dgll_fn is None or dgll_fn[0] != T or True:
-                    dense_fn = dist.dgll_superstep_fn(
+                if dense_fn is None or dense_fn[0] != T:
+                    dense_fn = (T, dist.dgll_superstep_fn(
                         mesh, n, batch=batch, use_hc=eta > 0,
-                        plant_trees=False, compact=0)
-                out = dense_fn(table, hc, rank_d, roots_d, valid_d,
-                               ell_src, ell_w)
+                        plant_trees=False, compact=0))
+                out = dense_fn[1](table, hc, rank_d, roots_d, valid_d,
+                                  ell_src, ell_w)
                 mode = "dgll-dense-fallback"
                 slots = q * T * n
+                nl, exp, ovf, _ = _fetch_stats(out)
             stats["comm_label_slots"] += slots
         table = out.table
-        if bool(jnp.any(out.overflow)):
+        if ovf:
             # raise BEFORE committing a checkpoint: insert_batch drops
             # labels on overflow, and a saved corrupt table would be
             # silently restored by --resume
             if ckpt is not None:
                 ckpt.wait()
             raise lbl.LabelOverflowError(cap)
-        psi = _record(stats, mode, out)
+        psi = _record(stats, mode, nl, exp)
         if verbose:
             print(f"superstep pos={pos:6d} T={T:4d} mode={mode} "
                   f"labels={stats['labels'][-1]} psi={psi:.1f}")
@@ -233,9 +237,25 @@ def _pad_step(queues: np.ndarray, pos: int, T: int, batch: int
     return out
 
 
-def _record(stats: dict, mode: str, out) -> float:
-    nl = int(jnp.sum(out.new_labels))
-    exp = int(jnp.sum(out.explored))
+def _fetch_stats(out) -> Tuple[int, int, bool, bool]:
+    """All of a superstep's scalar stats in ONE blocking device fetch.
+
+    The reductions run on device and are packed into a single [4]
+    array, so stats collection costs one host sync per superstep
+    instead of four — the dispatch pipeline is not serialized on
+    four separate ``int(jnp.sum(...))`` round trips.
+    """
+    packed = np.asarray(jnp.stack([
+        jnp.sum(out.new_labels, dtype=jnp.int32),
+        jnp.sum(out.explored, dtype=jnp.int32),
+        jnp.any(out.overflow).astype(jnp.int32),
+        jnp.any(out.compact_overflow).astype(jnp.int32),
+    ]))
+    return (int(packed[0]), int(packed[1]),
+            bool(packed[2]), bool(packed[3]))
+
+
+def _record(stats: dict, mode: str, nl: int, exp: int) -> float:
     psi = exp / max(1, nl)
     stats["supersteps"].append(mode)
     stats["mode"].append(mode)

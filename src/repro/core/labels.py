@@ -180,19 +180,31 @@ def delete_mask(table: LabelTable, drop: Array) -> LabelTable:
 
 
 def to_numpy_sets(table: LabelTable) -> list[dict[int, float]]:
-    """Host-side view: per-vertex {hub: dist} (tests/benchmarks)."""
+    """Host-side view: per-vertex {hub: dist} (tests/benchmarks).
+
+    Vectorized with numpy masking (it runs inside ``validate_against``
+    and several benchmarks): slot validity, duplicate-hub min-dist
+    dedup and the (vertex, hub) grouping are all array ops; only the
+    final O(total labels) dict fill remains Python — not the old
+    O(n·cap) double loop over mostly-empty padding.
+    """
     hubs = np.asarray(table.hubs)
     dist = np.asarray(table.dist)
     count = np.asarray(table.count)
-    out = []
-    for v in range(hubs.shape[0]):
-        row = {}
-        for k in range(count[v]):
-            h = int(hubs[v, k])
-            if h >= 0:
-                d = float(dist[v, k])
-                row[h] = min(d, row.get(h, np.inf))
-        out.append(row)
+    n, cap = hubs.shape
+    mask = (np.arange(cap)[None, :] < count[:, None]) & (hubs >= 0)
+    v_idx, k_idx = np.nonzero(mask)
+    h = hubs[v_idx, k_idx].astype(np.int64)
+    d = dist[v_idx, k_idx].astype(float)
+    # keep the min distance per (vertex, hub) duplicate group
+    order = np.lexsort((d, h, v_idx))
+    v_s, h_s, d_s = v_idx[order], h[order], d[order]
+    first = np.ones(len(v_s), dtype=bool)
+    first[1:] = (v_s[1:] != v_s[:-1]) | (h_s[1:] != h_s[:-1])
+    out: list[dict[int, float]] = [{} for _ in range(n)]
+    for v, hub, dd in zip(v_s[first].tolist(), h_s[first].tolist(),
+                          d_s[first].tolist()):
+        out[v][hub] = dd
     return out
 
 

@@ -101,20 +101,30 @@ def plant_chl(g, rank: np.ndarray, *, batch: int = 16,
     ell_src = jnp.asarray(g.ell_src)
     ell_w = jnp.asarray(g.ell_w)
     rank_d = jnp.asarray(rank.astype(np.int32))
-    stats = {"explored": [], "labels": [], "sweeps": [], "psi": []}
-    overflowed = False
+    # Stats are accumulated on device and fetched ONCE after the loop:
+    # per-batch ``int(jnp.sum(...))`` conversions would block the host
+    # on every superstep and serialize the dispatch pipeline.
+    per_batch = []
+    overflowed = jnp.zeros((), dtype=bool)
     for roots, valid in _batches(order, batch):
         tb = plant_batch(ell_src, ell_w, rank_d, jnp.asarray(roots),
                          jnp.asarray(valid), hc=hc, use_hc=hc is not None)
         table, ovf = lbl.insert_batch(table, jnp.asarray(roots),
                                       tb.emit, tb.dist)
-        overflowed |= bool(ovf)
-        exp = int(jnp.sum(tb.explored * valid))
-        nl = int(jnp.sum(tb.emit))
-        stats["explored"].append(exp)
-        stats["labels"].append(nl)
-        stats["sweeps"].append(int(tb.sweeps))
-        stats["psi"].append(exp / max(1, nl))
-    if overflowed:
+        overflowed = overflowed | ovf
+        per_batch.append(jnp.stack([
+            jnp.sum(tb.explored * valid, dtype=jnp.int32),
+            jnp.sum(tb.emit, dtype=jnp.int32),
+            tb.sweeps.astype(jnp.int32)]))
+    if per_batch:
+        fetched = np.asarray(jnp.stack(per_batch))       # one transfer
+        exp, nl, sw = (fetched[:, 0], fetched[:, 1], fetched[:, 2])
+    else:
+        exp = nl = sw = np.zeros(0, dtype=np.int64)
+    stats = {"explored": exp.tolist(), "labels": nl.tolist(),
+             "sweeps": sw.tolist(),
+             "psi": [e / max(1, l) for e, l in zip(exp.tolist(),
+                                                   nl.tolist())]}
+    if bool(overflowed):
         raise lbl.LabelOverflowError(cap)
     return table, stats

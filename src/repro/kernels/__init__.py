@@ -1,7 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
+- ``ell_relax``:   fused ELL (min,+,max-rank) relaxation sweep — the
+                   engine under ``repro.sssp.relax``, i.e. the inner
+                   loop of every construction algorithm (frontier-
+                   gated, per-tree retirement, VMEM tiles).
 - ``minplus``:     blocked lexicographic (min,+) contraction — the
-                   PLaNT tree-relaxation inner loop (VPU, VMEM tiles).
+                   dense-core PLaNT relaxation path (VPU, VMEM tiles).
 - ``label_query``: batched PPSD label-intersection — the query-serving
                    hot loop (QLSN/QFDL/QDOL all reduce to it).
 

@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: fused ELL (min,+,max-rank) relaxation sweep.
+
+The hottest loop in the repo — every `BuildPlan` algorithm bottoms out
+in a pull-based relaxation over the padded ELL adjacency
+(`repro.sssp.relax`). The pure-jnp sweep materializes five
+``[B, n, deg]`` HBM-resident intermediates per sweep (neighbor dist,
+neighbor mrank, candidates, the attain mask, candidate ranks); this
+kernel fuses the ELL gather, the lexicographic (min,+) reduction and
+the max-rank tie-break into VMEM tiles, so the ``[BB, BN, DK]``
+candidate cube never leaves on-chip memory.
+
+Layout (one grid cell = one ``[BB, BN]`` output tile, folded over DK
+in-edge chunks, reusing the `repro.kernels.minplus` fold idiom):
+
+- the gather *sources* (``prop``/``mrank`` planes) are staged as full
+  ``[BB, n]`` rows — an ELL row may pull from any vertex, so the
+  source plane must be VMEM-resident in its entirety. VMEM bound:
+  ``2 · BB · n · 4 B`` (≈ 6.4 MB at BB=8, n=100k) — `ops.py` documents
+  the fallback for larger n;
+- the gather *targets* (``ell_src``/``ell_w`` tiles, the dist/mrank
+  tiles being relaxed, the rank row) are ``[BN, DK]`` / ``[BB, BN]``
+  blocks;
+- the K (in-edge chunk) axis is innermost with ``arbitrary``
+  semantics: the lexicographic fold accumulates into the output block
+  (three resident tiles regardless of deg), and the epilogue — the
+  min-with-self + keep/through mrank merge of `relax._sweep` — runs
+  fused at the last chunk;
+- **frontier gating**: `prop` is the dist plane pre-masked to ``+inf``
+  at blocked / inactive sources (computed by the sweep driver), and
+  ``alive[b]`` flags trees whose frontier is non-empty. A ``[BB]``
+  tile whose trees are all retired skips the gather+fold entirely and
+  passes its dist/mrank tile through — converged trees stop paying
+  sweep cost while the rest of the batch runs to fixpoint.
+
+All arithmetic is min/max/add over exact float values (integral
+weights, ``+inf`` padding), so the chunked fold is bit-identical to
+the one-shot jnp reduction in `ref.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compat import pallas_call, resolve_interpret
+
+NEG = -1  # mrank payload for "unreached"
+
+
+def _ell_relax_kernel(dist_ref, mrank_ref, prop_ref, psrc_ref, alive_ref,
+                      src_ref, w_ref, rank_ref, out_d_ref, out_m_ref):
+    """One (b, v, k) grid step: fold in-edge chunk k into tile (b, v)."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+    live = jnp.any(alive_ref[...] > 0)
+
+    @pl.when(jnp.logical_not(live))
+    def _retired():
+        # every tree in this [BB] tile has an empty frontier: its sweep
+        # is the identity — copy through, skip the gather and the fold
+        @pl.when(k == 0)
+        def _copy():
+            out_d_ref[...] = dist_ref[...]
+            out_m_ref[...] = mrank_ref[...]
+
+    @pl.when(live)
+    def _relax():
+        prop = prop_ref[...]             # [BB, n] f32, inf at ~frontier
+        psrc = psrc_ref[...]             # [BB, n] i32 source mranks
+        src = src_ref[...]               # [BN, DK] i32 in-edge sources
+        w = w_ref[...]                   # [BN, DK] f32, inf padding
+
+        nd = jnp.take(prop, src, axis=1)            # [BB, BN, DK]
+        nm = jnp.take(psrc, src, axis=1)
+        cand = nd + w[None, :, :]
+        tile_d = jnp.min(cand, axis=-1)             # [BB, BN]
+        attain = (cand <= tile_d[..., None]) & jnp.isfinite(cand)
+        tile_m = jnp.max(jnp.where(attain, nm, NEG), axis=-1)
+
+        @pl.when(k == 0)
+        def _init():
+            out_d_ref[...] = tile_d
+            out_m_ref[...] = tile_m
+
+        @pl.when(k > 0)
+        def _fold():
+            acc_d = out_d_ref[...]
+            acc_m = out_m_ref[...]
+            new_d = jnp.minimum(acc_d, tile_d)
+            keep_acc = jnp.where(acc_d <= new_d, acc_m, NEG)
+            keep_new = jnp.where(tile_d <= new_d, tile_m, NEG)
+            out_d_ref[...] = new_d
+            out_m_ref[...] = jnp.maximum(keep_acc, keep_new)
+
+        @pl.when(k == nk - 1)
+        def _epilogue():
+            # min-with-self + keep/through merge (relax._sweep lines)
+            od = out_d_ref[...]
+            om = out_m_ref[...]
+            dist_t = dist_ref[...]                  # [BB, BN]
+            mrank_t = mrank_ref[...]
+            rnk = rank_ref[...]                     # [1, BN]
+            new_dist = jnp.minimum(dist_t, od)
+            through = jnp.where((od <= new_dist) & (om >= 0),
+                                jnp.maximum(om, rnk), NEG)
+            keep = jnp.where(dist_t <= new_dist, mrank_t, NEG)
+            out_d_ref[...] = new_dist
+            out_m_ref[...] = jnp.maximum(keep, through)
+
+
+def ell_relax(dist: jax.Array, mrank: jax.Array, prop: jax.Array,
+              prop_mrank: jax.Array, alive: jax.Array,
+              ell_src: jax.Array, ell_w: jax.Array, rank: jax.Array, *,
+              bb: int = 8, bn: int = 128, dk: int = 128,
+              interpret: bool | None = None):
+    """Fused ELL relaxation sweep (tile-aligned shapes; `ops.py` pads).
+
+    Args:
+      dist:  f32 [B, n] tentative distances being relaxed.
+      mrank: i32 [B, n] max-rank payloads (−1 = unreached).
+      prop:  f32 [B, n] propagation plane — ``dist`` with blocked and
+        out-of-frontier sources masked to ``+inf``.
+      prop_mrank: i32 [B, n] source mrank plane (usually ``mrank``).
+      alive: i32 [B, 1] — 0 retires the tree (frontier empty).
+      ell_src: i32 [n, deg] in-edge sources (pull layout).
+      ell_w:   f32 [n, deg] in-edge weights, ``+inf`` padding.
+      rank:  i32 [1, n] vertex ranks.
+      interpret: None = compat backend dispatch (compiled on TPU,
+        interpreter elsewhere; `REPRO_PALLAS_BACKEND` overrides).
+    Returns:
+      (new_dist f32 [B, n], new_mrank i32 [B, n]).
+    """
+    # resolve before jit so the backend choice is part of the jit
+    # cache key (env changes after the first call are not silently
+    # ignored by a stale trace)
+    return _ell_relax_jit(dist, mrank, prop, prop_mrank, alive,
+                          ell_src, ell_w, rank, bb=bb, bn=bn, dk=dk,
+                          interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "bn", "dk", "interpret"))
+def _ell_relax_jit(dist, mrank, prop, prop_mrank, alive,
+                   ell_src, ell_w, rank, *,
+                   bb: int, bn: int, dk: int, interpret: bool):
+    B, n = dist.shape
+    deg = ell_src.shape[1]
+    assert mrank.shape == (B, n) and prop.shape == (B, n)
+    assert prop_mrank.shape == (B, n) and alive.shape == (B, 1)
+    assert ell_w.shape == (n, deg) and rank.shape == (1, n)
+    assert B % bb == 0 and n % bn == 0 and deg % dk == 0, (B, n, deg)
+
+    grid = (B // bb, n // bn, deg // dk)
+    return pallas_call(
+        _ell_relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda b, v, k: (b, v)),   # dist tile
+            pl.BlockSpec((bb, bn), lambda b, v, k: (b, v)),   # mrank tile
+            pl.BlockSpec((bb, n), lambda b, v, k: (b, 0)),    # prop rows
+            pl.BlockSpec((bb, n), lambda b, v, k: (b, 0)),    # mrank rows
+            pl.BlockSpec((bb, 1), lambda b, v, k: (b, 0)),    # alive
+            pl.BlockSpec((bn, dk), lambda b, v, k: (v, k)),   # ell_src
+            pl.BlockSpec((bn, dk), lambda b, v, k: (v, k)),   # ell_w
+            pl.BlockSpec((1, bn), lambda b, v, k: (0, v)),    # rank
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bn), lambda b, v, k: (b, v)),
+            pl.BlockSpec((bb, bn), lambda b, v, k: (b, v)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n), jnp.float32),
+            jax.ShapeDtypeStruct((B, n), jnp.int32),
+        ],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+    )(dist, mrank, prop, prop_mrank, alive, ell_src, ell_w, rank)

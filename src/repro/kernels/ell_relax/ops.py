@@ -1,0 +1,121 @@
+"""Shape-safe wrappers around the fused ELL relaxation kernel.
+
+``ell_sweep`` is the single entry point the sweep driver
+(`repro.sssp.relax`) calls: it pads every operand to tile multiples,
+invokes the Pallas kernel (or the bit-identical jnp reference) and
+slices the padding back off.
+
+Backend selection (``use_kernel``):
+
+- ``True``  — always run the Pallas kernel (via the compat
+  ``pallas_call`` dispatcher, so `REPRO_PALLAS_BACKEND` still decides
+  compiled-TPU vs interpreter execution);
+- ``False`` — always run the jnp reference;
+- ``None``  — auto: the kernel wherever the compat layer resolves a
+  *compiled* Pallas backend (TPU), the jnp reference where Pallas
+  would only be interpreter emulation (CPU/GPU) — emulating the hot
+  loop per sweep is strictly slower than the fused-XLA reference.
+  ``REPRO_ELL_RELAX=kernel|ref|auto`` overrides the auto choice
+  (e.g. ``kernel`` + ``REPRO_PALLAS_BACKEND=interpret`` exercises the
+  emulated kernel path end-to-end, as CI's bench smoke does).
+
+VMEM note: the kernel stages the two [BB, n] gather-source planes in
+VMEM (an ELL row may pull from anywhere), ≈ ``8·BB·n`` bytes — 6.4 MB
+at BB=8, n=100k. Past `_KERNEL_MAX_N` the padded wrapper falls back
+to the reference rather than risk a VMEM OOM; sharding the source
+plane needs scalar-prefetch DMA and is future work (ROADMAP).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import resolve_interpret
+from repro.kernels.ell_relax.ell_relax import ell_relax
+from repro.kernels.ell_relax.ref import ell_sweep_ref
+
+ELL_RELAX_ENV_VAR = "REPRO_ELL_RELAX"
+
+# The two [BB, n] source planes (f32 + i32) at BB=8 cost 2·8·4 = 64n
+# bytes of VMEM → ~8.4 MB at this cap, leaving headroom in 16 MB.
+_KERNEL_MAX_N = 131072
+
+
+def kernel_fits(n: int) -> bool:
+    """Whether the fused kernel's VMEM-resident source planes fit for
+    an n-vertex graph (past this, `ell_sweep` runs the reference)."""
+    return n <= _KERNEL_MAX_N
+
+
+def resolve_use_kernel(use_kernel: bool | None = None, *,
+                       interpret: bool | None = None) -> bool:
+    """Kernel-vs-reference dispatch for the relaxation sweep."""
+    if use_kernel is not None:
+        return bool(use_kernel)
+    mode = os.environ.get(ELL_RELAX_ENV_VAR, "auto").strip().lower()
+    if mode == "kernel":
+        return True
+    if mode == "ref":
+        return False
+    if mode not in ("", "auto"):
+        raise ValueError(f"{ELL_RELAX_ENV_VAR}={mode!r}; expected "
+                         "auto, kernel, or ref")
+    # auto: fused kernel on the compiled backend; under interpreter
+    # emulation the jnp reference IS the fast path
+    return not resolve_interpret(interpret)
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, fill) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank, *,
+              use_kernel: bool | None = None,
+              interpret: bool | None = None):
+    """One frontier-gated relaxation sweep; shape-safe.
+
+    Args:
+      dist:  f32 [B, n];  mrank: i32 [B, n];
+      prop:  f32 [B, n] — dist masked to +inf at blocked/inactive
+        sources (frontier gating);
+      alive: bool/i32 [B] — False retires the whole tree;
+      ell_src/ell_w: [n, deg] pull ELL; rank: i32 [n].
+    Returns (new_dist f32 [B, n], new_mrank i32 [B, n]).
+    """
+    interp = resolve_interpret(interpret)
+    kern = (resolve_use_kernel(use_kernel, interpret=interp)
+            and kernel_fits(dist.shape[1]))
+    return _ell_sweep_jit(dist, mrank, prop, alive, ell_src, ell_w,
+                          rank, use_kernel=kern, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def _ell_sweep_jit(dist, mrank, prop, alive, ell_src, ell_w, rank, *,
+                   use_kernel: bool, interpret: bool):
+    if not use_kernel:
+        return ell_sweep_ref(dist, mrank, prop, mrank,
+                             ell_src, ell_w, rank)
+    B, n = dist.shape
+    deg = ell_src.shape[1]
+    bb, bn = 8, 128
+    dk = min(128, -(-deg // 8) * 8)     # single chunk for small degrees
+    d = _pad_to(_pad_to(dist, bb, 0, jnp.inf), bn, 1, jnp.inf)
+    m = _pad_to(_pad_to(mrank, bb, 0, -1), bn, 1, -1)
+    p = _pad_to(_pad_to(prop, bb, 0, jnp.inf), bn, 1, jnp.inf)
+    a = _pad_to(alive.astype(jnp.int32)[:, None], bb, 0, 0)
+    es = _pad_to(_pad_to(ell_src, bn, 0, 0), dk, 1, 0)
+    ew = _pad_to(_pad_to(ell_w, bn, 0, jnp.inf), dk, 1, jnp.inf)
+    r = _pad_to(rank.astype(jnp.int32)[None, :], bn, 1, 0)
+    nd, nm = ell_relax(d, m, p, m, a, es, ew, r,
+                       bb=bb, bn=bn, dk=dk, interpret=interpret)
+    return nd[:B, :n], nm[:B, :n]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused ELL relaxation sweep.
+
+Semantically identical to the historical `repro.sssp.relax._sweep`,
+with the blocking mask pre-folded into the propagation plane: the
+caller passes ``prop = where(blocked | ~frontier, +inf, dist)`` and
+``+inf`` sources contribute no candidates (``inf + w = inf``), which
+is bit-for-bit the old ``where(nblk, inf, nd + w)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_sweep_ref(dist: jax.Array, mrank: jax.Array, prop: jax.Array,
+                  prop_mrank: jax.Array,
+                  ell_src: jax.Array, ell_w: jax.Array, rank: jax.Array):
+    """One relaxation sweep. dist/mrank/prop/prop_mrank [B, n];
+    ell_* [n, deg]; rank [n]. Returns (new_dist, new_mrank)."""
+    nd = prop[:, ell_src]                       # [B, n, deg]
+    nm = prop_mrank[:, ell_src]
+    cand = nd + ell_w[None, :, :]
+    best = jnp.min(cand, axis=-1)               # [B, n]
+    new_dist = jnp.minimum(dist, best)
+    attains = (cand <= new_dist[..., None]) & jnp.isfinite(cand)
+    best_in = jnp.max(jnp.where(attains, nm, -1), axis=-1)
+    through = jnp.where(best_in >= 0,
+                        jnp.maximum(best_in, rank[None, :]), -1)
+    keep = jnp.where(dist <= new_dist, mrank, -1)
+    new_mrank = jnp.maximum(keep, through)
+    return new_dist, new_mrank

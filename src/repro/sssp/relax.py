@@ -2,8 +2,8 @@
 
 This module is the hardware adaptation of the paper's per-thread
 binary-heap Dijkstra (DESIGN.md §2 A1/A2): a *pull-based* iterate
-over a padded ELL adjacency that relaxes **all** vertices of a **batch
-of trees** per sweep, to fixpoint. Two quantities propagate jointly:
+over a padded ELL adjacency that relaxes a **batch of trees** per
+sweep, to fixpoint. Two quantities propagate jointly:
 
 - ``dist[b, v]``  — tentative distance from ``roots[b]`` to ``v``;
 - ``mrank[b, v]`` — the maximum rank over the *union of all shortest
@@ -25,6 +25,36 @@ do not propagate outward and never emit. Re-evaluating the mask at each
 sweep converges to the pruned-Dijkstra semantics: along any surviving
 shortest path the chain of vertices unblocks inductively from the root
 (see the correctness discussion in DESIGN.md §2 A3).
+
+Execution model (this is the single hottest path in the repo):
+
+- each sweep runs through ``repro.kernels.ell_relax.ell_sweep`` — the
+  fused Pallas ELL (min,+,max-rank) kernel on the compiled backend,
+  the bit-identical jnp reference otherwise (``use_kernel`` /
+  ``REPRO_ELL_RELAX`` override; `REPRO_PALLAS_BACKEND` picks the
+  Pallas execution mode underneath);
+- sweeps are **frontier-gated** (default on the kernel path): only
+  vertices whose (dist, mrank) changed last sweep — plus vertices
+  that just *unblocked*, whose pending contribution was masked while
+  blocked — propagate. The blocked semantics are preserved exactly:
+  the propagation plane is re-derived every sweep as
+  ``where(blocked | ~frontier, +inf, dist)`` and monotonicity of
+  (min-dist, max-mrank) makes gated fixpoints equal to dense ones (a
+  non-frontier source's contribution was already folded the sweep
+  after it last changed or unblocked);
+- trees whose frontier is empty are **retired**: an ``alive`` flag per
+  tree lets the kernel skip their tiles, so converged roots stop
+  paying sweep cost while the batch's stragglers finish. On the
+  dense-XLA reference path masking cannot skip gather work, so
+  gating defaults off there (``frontier_gating`` overrides either
+  way; fixpoints are identical);
+- the fixpoint condition is checked every ``check_every`` sweeps
+  (strided convergence checks) instead of reducing ``any(changed)``
+  over ``[B, n]`` after every sweep — overshoot past the fixpoint is
+  a no-op (empty frontier ⇒ identity sweep), bounded by
+  ``check_every - 1`` cheap extra sweeps. Default stride follows the
+  backend too: ``DEFAULT_CHECK_EVERY`` on the kernel path (amortizes
+  the per-iteration cond sync), 1 on the jnp path.
 """
 
 from __future__ import annotations
@@ -34,20 +64,29 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ell_relax import (ell_sweep, kernel_fits,
+                                     resolve_use_kernel)
+
 Array = jax.Array
 BlockFn = Callable[[Array, Array], Array]   # (dist [B,n], roots [B]) -> blocked [B,n]
+
+DEFAULT_CHECK_EVERY = 4
 
 
 class RelaxState(NamedTuple):
     dist: Array     # f32 [B, n]
     mrank: Array    # i32 [B, n] ; -1 where unreached
-    sweeps: Array   # i32 scalar — sweeps executed (diagnostic / Ψ input)
+    sweeps: Array   # i32 scalar — sweeps executed (diagnostic / Ψ input;
+    #                 counts up to check_every-1 no-op sweeps past fixpoint)
     explored: Array  # i32 [B] — #vertices each tree touched (Ψ numerator)
 
 
 def _sweep(dist: Array, mrank: Array, blocked: Array,
            ell_src: Array, ell_w: Array, rank: Array):
-    """One relaxation sweep. Shapes: dist/mrank [B,n]; ell_* [n,deg]."""
+    """One dense (ungated) relaxation sweep — the historical pure-jnp
+    reference, retained as the parity oracle for the fused kernel and
+    the frontier-gated driver. Shapes: dist/mrank [B,n]; ell_* [n,deg].
+    """
     # Gather neighbor states along in-edges: [B, n, deg]
     nd = dist[:, ell_src]
     nm = mrank[:, ell_src]
@@ -83,6 +122,9 @@ def batched_sssp_maxrank(
     *,
     block_fn: Optional[BlockFn] = None,
     max_sweeps: Optional[int] = None,
+    check_every: Optional[int] = None,
+    use_kernel: Optional[bool] = None,
+    frontier_gating: Optional[bool] = None,
 ) -> RelaxState:
     """Relax a batch of trees to fixpoint.
 
@@ -94,6 +136,20 @@ def batched_sssp_maxrank(
       block_fn: optional per-sweep pruning mask (rank/distance queries).
         Roots are force-unblocked.
       max_sweeps: safety bound (default: n sweeps — Bellman–Ford bound).
+      check_every: sweeps between fixpoint checks; 1 = check after
+        every sweep. Default: ``DEFAULT_CHECK_EVERY`` on the fused
+        kernel path (amortizes the per-iteration cond sync), 1 on the
+        jnp path (XLA cannot skip the overshoot sweeps, so striding
+        only adds work there).
+      use_kernel: fused Pallas ELL kernel vs jnp reference; ``None`` =
+        compat-resolved dispatch (``REPRO_ELL_RELAX`` /
+        ``REPRO_PALLAS_BACKEND`` honored).
+      frontier_gating: mask propagation down to the active frontier
+        and retire converged trees. Default: follows the kernel
+        decision — gating lets the kernel skip retired tiles, while
+        on the dense-XLA path masking cannot reduce the gather cost
+        and would only add per-sweep mask work. Either setting
+        reaches the identical fixpoint (monotone lattice).
 
     Returns:
       RelaxState with fixpoint ``dist``/``mrank``.
@@ -102,6 +158,14 @@ def batched_sssp_maxrank(
     B = roots.shape[0]
     rank = rank.astype(jnp.int32)
     cap = n if max_sweeps is None else max_sweeps
+    # gating/stride defaults must track the path that actually runs:
+    # past the kernel's VMEM cap ell_sweep falls back to the reference,
+    # where gating + striding would only add work
+    kern = resolve_use_kernel(use_kernel) and kernel_fits(n)
+    gated = kern if frontier_gating is None else bool(frontier_gating)
+    stride = ((DEFAULT_CHECK_EVERY if kern else 1)
+              if check_every is None else check_every)
+    stride = max(1, min(stride, cap))
     dist0, mrank0 = _init(n, roots, rank)
 
     def blocked_of(dist):
@@ -111,46 +175,76 @@ def batched_sssp_maxrank(
         # the root of each tree never blocks its own propagation
         return blk.at[jnp.arange(B), roots].set(False)
 
+    has_block = block_fn is not None
+    carry_blocked = has_block and gated
+
+    def sweep_once(carry, _):
+        if carry_blocked:
+            dist, mrank, prev_blocked, frontier = carry
+        else:
+            dist, mrank, frontier = carry
+        if gated:
+            if has_block:
+                blocked = blocked_of(dist)
+                # frontier ∪ newly-unblocked: a vertex that unblocks
+                # without a state change still owes its (previously
+                # masked) contribution
+                active = frontier | (prev_blocked & ~blocked)
+                prop = jnp.where(blocked | ~active, jnp.inf, dist)
+            else:
+                active = frontier
+                prop = jnp.where(active, dist, jnp.inf)
+            alive = jnp.any(active, axis=1)
+        else:
+            prop = (jnp.where(blocked_of(dist), jnp.inf, dist)
+                    if has_block else dist)
+            alive = jnp.ones((B,), dtype=bool)
+        nd, nm = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w,
+                           rank, use_kernel=kern)
+        new_frontier = (nd < dist) | (nm != mrank)
+        if carry_blocked:
+            return (nd, nm, blocked, new_frontier), None
+        return (nd, nm, new_frontier), None
+
     def cond(carry):
-        dist, mrank, it, changed = carry
-        return changed & (it < cap)
+        state, it = carry
+        return jnp.any(state[-1]) & (it < cap)
 
     def body(carry):
-        dist, mrank, it, _ = carry
-        blocked = blocked_of(dist)
-        nd, nm = _sweep(dist, mrank, blocked, ell_src, ell_w, rank)
-        changed = jnp.any(nd < dist) | jnp.any(nm != mrank)
-        return nd, nm, it + 1, changed
+        state, it = carry
+        for _ in range(stride):          # unrolled: XLA fuses sweeps
+            state, _ = sweep_once(state, None)
+        return state, it + stride
 
-    dist, mrank, sweeps, _ = jax.lax.while_loop(
-        cond, body, (dist0, mrank0, jnp.int32(0), jnp.bool_(True)))
+    # first sweep is dense (everything is in the initial frontier);
+    # prev_blocked is seeded consistently so no spurious unblocks fire
+    frontier0 = jnp.ones((B, n), dtype=bool)
+    state0 = ((dist0, mrank0, blocked_of(dist0), frontier0)
+              if carry_blocked else (dist0, mrank0, frontier0))
+    state, sweeps = jax.lax.while_loop(cond, body, (state0, jnp.int32(0)))
+    dist, mrank = state[0], state[1]
     explored = jnp.sum(jnp.isfinite(dist), axis=-1).astype(jnp.int32)
     return RelaxState(dist=dist, mrank=mrank, sweeps=sweeps,
                       explored=explored)
 
 
 def batched_sssp(ell_src: Array, ell_w: Array, roots: Array,
-                 *, max_sweeps: Optional[int] = None) -> Array:
-    """Plain batched SSSP distances (no rank tracking): f32 [B, n]."""
+                 *, max_sweeps: Optional[int] = None,
+                 check_every: Optional[int] = None,
+                 use_kernel: Optional[bool] = None,
+                 frontier_gating: Optional[bool] = None) -> Array:
+    """Plain batched SSSP distances (no rank tracking): f32 [B, n].
+
+    Runs through the same fused/gated engine with a constant-zero rank
+    plane (the mrank lattice is then reachability, which converges with
+    dist and adds no sweeps).
+    """
     n = ell_src.shape[0]
-    B = roots.shape[0]
-    dist0 = jnp.full((B, n), jnp.inf, dtype=jnp.float32)
-    dist0 = dist0.at[jnp.arange(B), roots].set(0.0)
-    cap = n if max_sweeps is None else max_sweeps
-
-    def cond(c):
-        _, it, changed = c
-        return changed & (it < cap)
-
-    def body(c):
-        dist, it, _ = c
-        cand = dist[:, ell_src] + ell_w[None, :, :]
-        nd = jnp.minimum(dist, jnp.min(cand, axis=-1))
-        return nd, it + 1, jnp.any(nd < dist)
-
-    dist, _, _ = jax.lax.while_loop(cond, body,
-                                    (dist0, jnp.int32(0), jnp.bool_(True)))
-    return dist
+    st = batched_sssp_maxrank(
+        ell_src, ell_w, jnp.zeros((n,), dtype=jnp.int32), roots,
+        max_sweeps=max_sweeps, check_every=check_every,
+        use_kernel=use_kernel, frontier_gating=frontier_gating)
+    return st.dist
 
 
 def rank_block(rank: Array) -> BlockFn:

@@ -1,0 +1,261 @@
+"""Fused ELL relaxation kernel vs the retained jnp reference.
+
+Three layers of parity, all bit-exact (integral float weights make
+(min,+,max) arithmetic exact in f32):
+
+1. sweep level — `ell_sweep(use_kernel=True)` (Pallas, via the compat
+   backend dispatch) against `ell_sweep_ref` across odd shapes,
+   inf-padded ELL rows, equal-distance rank ties, unreachable
+   vertices and frontier/blocked masks;
+2. fixpoint level — `batched_sssp_maxrank` with the fused kernel vs
+   the jnp path, with and without block_fn pruning;
+3. driver level — frontier gating + strided convergence checks
+   (``check_every > 1``) against per-sweep checking and against a
+   dense ungated loop built from the retained `relax._sweep`
+   reference.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.graphs import grid_road, random_connected, scale_free
+from repro.graphs.ranking import degree_ranking, random_ranking
+from repro.kernels.ell_relax import (ELL_RELAX_ENV_VAR, ell_sweep,
+                                     ell_sweep_ref, resolve_use_kernel)
+from repro.sssp import relax
+from repro.sssp.relax import batched_sssp_maxrank
+
+
+def _rand_sweep_state(rng, B, n, deg, reach=0.5, density=0.3):
+    dist = np.where(rng.random((B, n)) < reach,
+                    rng.integers(0, 9, (B, n)), np.inf).astype(np.float32)
+    mrank = np.where(np.isfinite(dist),
+                     rng.integers(0, 99, (B, n)), -1).astype(np.int32)
+    blocked = rng.random((B, n)) < 0.2
+    frontier = rng.random((B, n)) < 0.7
+    prop = np.where(blocked | ~frontier, np.inf, dist).astype(np.float32)
+    alive = frontier.any(axis=1)
+    ell_src = rng.integers(0, n, (n, deg)).astype(np.int32)
+    ell_w = np.where(rng.random((n, deg)) < density,
+                     rng.integers(1, 9, (n, deg)), np.inf).astype(np.float32)
+    rank = rng.permutation(n).astype(np.int32)
+    return dist, mrank, prop, alive, ell_src, ell_w, rank
+
+
+@pytest.mark.parametrize("B,n,deg", [
+    (1, 1, 1), (3, 5, 7), (8, 128, 8), (16, 130, 17), (5, 260, 140),
+    (2, 40, 3), (9, 300, 33),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ell_sweep_kernel_matches_ref(B, n, deg, seed):
+    rng = np.random.default_rng(seed)
+    dist, mrank, prop, alive, es, ew, rank = _rand_sweep_state(
+        rng, B, n, deg)
+    args = [jnp.asarray(x) for x in
+            (dist, mrank, prop, alive, es, ew, rank)]
+    dk, mk = ell_sweep(*args, use_kernel=True)
+    dr, mr = ell_sweep(*args, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+
+
+def test_ell_sweep_ref_equals_retained_dense_sweep():
+    """prop-plane form == the historical blocked-gather `_sweep`."""
+    rng = np.random.default_rng(5)
+    B, n, deg = 6, 90, 11
+    dist, mrank, _, _, es, ew, rank = _rand_sweep_state(rng, B, n, deg)
+    blocked = rng.random((B, n)) < 0.25
+    prop = np.where(blocked, np.inf, dist).astype(np.float32)
+    j = jnp.asarray
+    nd_ref, nm_ref = relax._sweep(j(dist), j(mrank), j(blocked),
+                                  j(es), j(ew), j(rank))
+    nd, nm = ell_sweep_ref(j(dist), j(mrank), j(prop), j(mrank),
+                           j(es), j(ew), j(rank))
+    np.testing.assert_array_equal(np.asarray(nd), np.asarray(nd_ref))
+    np.testing.assert_array_equal(np.asarray(nm), np.asarray(nm_ref))
+
+
+def test_ell_sweep_all_unreachable_and_padded_rows():
+    B, n, deg = 4, 37, 5
+    dist = np.full((B, n), np.inf, np.float32)
+    mrank = np.full((B, n), -1, np.int32)
+    alive = np.ones(B, bool)
+    ell_src = np.zeros((n, deg), np.int32)
+    ell_w = np.full((n, deg), np.inf, np.float32)   # fully inf-padded ELL
+    rank = np.arange(n, dtype=np.int32)
+    args = [jnp.asarray(x) for x in
+            (dist, mrank, dist, alive, ell_src, ell_w, rank)]
+    nd, nm = ell_sweep(*args, use_kernel=True)
+    assert not np.isfinite(np.asarray(nd)).any()
+    assert (np.asarray(nm) == -1).all()
+
+
+def test_ell_sweep_equal_distance_rank_tie():
+    # v=2 reachable from u=0 (mrank 7) and u=1 (mrank 9) at equal
+    # distance: the payload must merge to max(9, rank[2])
+    dist = np.array([[1.0, 1.0, np.inf]], np.float32)
+    mrank = np.array([[7, 9, -1]], np.int32)
+    ell_src = np.array([[0, 0], [0, 0], [0, 1]], np.int32)
+    ell_w = np.array([[np.inf, np.inf], [np.inf, np.inf], [2.0, 2.0]],
+                     np.float32)
+    rank = np.array([7, 9, 3], np.int32)
+    alive = np.ones(1, bool)
+    args = [jnp.asarray(x) for x in
+            (dist, mrank, dist, alive, ell_src, ell_w, rank)]
+    for uk in (True, False):
+        nd, nm = ell_sweep(*args, use_kernel=uk)
+        assert np.asarray(nd)[0, 2] == 3.0
+        assert np.asarray(nm)[0, 2] == 9
+
+
+def test_ell_sweep_retired_tree_is_identity():
+    rng = np.random.default_rng(3)
+    B, n, deg = 5, 64, 6
+    dist, mrank, _, _, es, ew, rank = _rand_sweep_state(rng, B, n, deg)
+    prop = np.full((B, n), np.inf, np.float32)      # empty frontier
+    alive = np.zeros(B, bool)
+    args = [jnp.asarray(x) for x in
+            (dist, mrank, prop, alive, es, ew, rank)]
+    for uk in (True, False):
+        nd, nm = ell_sweep(*args, use_kernel=uk)
+        np.testing.assert_array_equal(np.asarray(nd), dist)
+        np.testing.assert_array_equal(np.asarray(nm), mrank)
+
+
+GRAPHS = [
+    ("grid", lambda s: grid_road(6, 7, seed=s)),
+    ("ba", lambda s: scale_free(48, attach=2, seed=s)),
+    ("tree+", lambda s: random_connected(35, extra_edges=25, seed=s)),
+    ("digraph", lambda s: random_connected(25, extra_edges=40, seed=s,
+                                           directed=True)),
+]
+
+
+@pytest.mark.parametrize("name,gen", GRAPHS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fixpoint_kernel_matches_ref_path(name, gen, seed):
+    g = gen(seed)
+    rank = random_ranking(g.n, seed=seed + 11)
+    roots = np.arange(0, g.n, max(1, g.n // 6), dtype=np.int32)
+    j = jnp.asarray
+    kw = dict(block_fn=relax.rank_block(j(rank.astype(np.int32))))
+    st_k = batched_sssp_maxrank(j(g.ell_src), j(g.ell_w), j(rank),
+                                j(roots), use_kernel=True, **kw)
+    st_r = batched_sssp_maxrank(j(g.ell_src), j(g.ell_w), j(rank),
+                                j(roots), use_kernel=False, **kw)
+    np.testing.assert_array_equal(np.asarray(st_k.dist),
+                                  np.asarray(st_r.dist))
+    np.testing.assert_array_equal(np.asarray(st_k.mrank),
+                                  np.asarray(st_r.mrank))
+
+
+@pytest.mark.parametrize("name,gen", GRAPHS[:2])
+@pytest.mark.parametrize("check_every", [1, 2, 3, 7])
+def test_strided_checks_and_gating_reach_same_fixpoint(name, gen,
+                                                       check_every):
+    """Frontier gating + check_every > 1 == per-sweep dense checking,
+    including against an ungated loop over the retained `_sweep`."""
+    g = gen(0)
+    rank = degree_ranking(g)
+    roots = np.arange(0, g.n, max(1, g.n // 5), dtype=np.int32)
+    j = jnp.asarray
+    st = batched_sssp_maxrank(j(g.ell_src), j(g.ell_w), j(rank),
+                              j(roots), check_every=check_every,
+                              frontier_gating=True)
+    st1 = batched_sssp_maxrank(j(g.ell_src), j(g.ell_w), j(rank),
+                               j(roots), check_every=1,
+                               frontier_gating=False)
+    np.testing.assert_array_equal(np.asarray(st.dist),
+                                  np.asarray(st1.dist))
+    np.testing.assert_array_equal(np.asarray(st.mrank),
+                                  np.asarray(st1.mrank))
+    # dense ungated fixpoint via the retained reference sweep
+    rank_d = j(rank.astype(np.int32))
+    dist, mrank = relax._init(g.n, j(roots), rank_d)
+    blocked = jnp.zeros(dist.shape, dtype=bool)
+    for _ in range(g.n):
+        nd, nm = relax._sweep(dist, mrank, blocked, j(g.ell_src),
+                              j(g.ell_w), rank_d)
+        if bool(jnp.all(nd == dist) & jnp.all(nm == mrank)):
+            break
+        dist, mrank = nd, nm
+    np.testing.assert_array_equal(np.asarray(st.dist), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(st.mrank),
+                                  np.asarray(mrank))
+
+
+def test_gated_fixpoint_with_cover_block_fn():
+    """Distance-query (cover) pruning under gating: the blocked mask is
+    re-derived from frontier ∪ newly-unblocked every sweep and must
+    agree with the ungated pruned fixpoint."""
+    g = scale_free(60, attach=2, seed=4)
+    rank = degree_ranking(g)
+    roots = np.arange(8, dtype=np.int32)
+    j = jnp.asarray
+    # a synthetic cover plane: pretend the top hub covers everything at
+    # distance <= 3 (exercises blocked→unblocked transitions as dist
+    # tightens under it)
+    cover = jnp.full((len(roots), g.n), 3.0, dtype=jnp.float32)
+
+    def block(dist, roots_):
+        return cover <= dist
+
+    out = {}
+    for gated in (False, True):
+        for uk in (False, True):
+            st = batched_sssp_maxrank(j(g.ell_src), j(g.ell_w), j(rank),
+                                      j(roots), block_fn=block,
+                                      use_kernel=uk,
+                                      frontier_gating=gated)
+            out[gated, uk] = st
+    ref = out[False, False]
+    for key, st in out.items():
+        np.testing.assert_array_equal(np.asarray(st.dist),
+                                      np.asarray(ref.dist))
+        np.testing.assert_array_equal(np.asarray(st.mrank),
+                                      np.asarray(ref.mrank))
+
+
+def test_resolve_use_kernel_env(monkeypatch):
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "kernel")
+    assert resolve_use_kernel(None) is True
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "ref")
+    assert resolve_use_kernel(None) is False
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "auto")
+    assert resolve_use_kernel(None, interpret=False) is True
+    assert resolve_use_kernel(None, interpret=True) is False
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "bogus")
+    with pytest.raises(ValueError):
+        resolve_use_kernel(None)
+    monkeypatch.delenv(ELL_RELAX_ENV_VAR, raising=False)
+    # explicit arg always wins
+    assert resolve_use_kernel(True, interpret=True) is True
+    assert resolve_use_kernel(False, interpret=False) is False
+
+
+def test_explicit_env_kernel_end_to_end(monkeypatch):
+    """REPRO_ELL_RELAX=kernel routes the whole construction through
+    the Pallas path (interpret mode here) with identical labels.
+
+    The backend choice is resolved at trace time, so the jit caches
+    are cleared between runs — same caveat as REPRO_PALLAS_BACKEND
+    under an outer jit (see `kernels.minplus`).
+    """
+    import jax
+
+    from repro.core import labels as lbl
+    from repro.core.plant import plant_chl
+    g = grid_road(4, 4, seed=2)
+    rank = degree_ranking(g)
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "ref")
+    jax.clear_caches()
+    t_ref, _ = plant_chl(g, rank, batch=8)
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "kernel")
+    jax.clear_caches()
+    t_k, _ = plant_chl(g, rank, batch=8)
+    jax.clear_caches()
+    assert lbl.to_numpy_sets(t_k) == lbl.to_numpy_sets(t_ref)
