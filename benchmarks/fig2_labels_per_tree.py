@@ -5,14 +5,14 @@ switch."""
 from typing import List
 
 from benchmarks.common import Row, bench_graphs, row
-from repro.core.plant import plant_chl
+from repro.index import BuildPlan, build
 
 
 def run() -> List[Row]:
     out: List[Row] = []
     for name, g, rank in bench_graphs("small"):
-        _, stats = plant_chl(g, rank, batch=16)
-        lab = stats["labels"]
+        idx = build(g, rank, BuildPlan(algo="plant", batch=16))
+        lab = [s.labels for s in idx.report.supersteps]
         head = sum(lab[:max(1, len(lab) // 10)])
         total = max(1, sum(lab))
         out.append(row(

@@ -5,14 +5,14 @@ which drives the PLaNT→DGLL switch point."""
 from typing import List
 
 from benchmarks.common import Row, bench_graphs, row
-from repro.core.plant import plant_chl
+from repro.index import BuildPlan, build
 
 
 def run() -> List[Row]:
     out: List[Row] = []
     for name, g, rank in bench_graphs("small"):
-        _, stats = plant_chl(g, rank, batch=16)
-        psi = stats["psi"]
+        idx = build(g, rank, BuildPlan(algo="plant", batch=16))
+        psi = [s.psi for s in idx.report.supersteps]
         out.append(row(
             f"fig3/{name}", 0.0,
             f"psi first={psi[0]:.1f} mid={psi[len(psi)//2]:.1f} "

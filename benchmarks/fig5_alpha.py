@@ -4,14 +4,14 @@ robust in a band (paper: 2–32), degrading at the extremes."""
 from typing import List
 
 from benchmarks.common import Row, bench_graphs, row, timed
-from repro.core.gll import gll_chl
+from repro.index import BuildPlan, build
 
 
 def run() -> List[Row]:
     out: List[Row] = []
     for name, g, rank in bench_graphs("small")[:1]:
         for alpha in (1.0, 2.0, 4.0, 8.0, 16.0, 32.0):
-            _, t = timed(lambda a=alpha: gll_chl(g, rank, batch=8,
-                                                 alpha=a)[0])
+            _, t = timed(lambda a=alpha: build(
+                g, rank, BuildPlan(algo="gll", batch=8, alpha=a)))
             out.append(row(f"fig5/{name}/alpha={alpha}", t))
     return out

@@ -6,7 +6,7 @@ from typing import List
 
 from benchmarks.common import Row, bench_graphs, row, timed
 from repro.core.dgll import make_node_mesh
-from repro.core.hybrid import hybrid_chl
+from repro.index import BuildPlan, build
 
 
 def run() -> List[Row]:
@@ -14,12 +14,15 @@ def run() -> List[Row]:
     mesh = make_node_mesh(1)
     for name, g, rank in bench_graphs("small"):
         for psi in (1.0, 10.0, 100.0, 500.0, 1e9):
-            (tbl, stats), t = timed(
-                lambda p=psi: hybrid_chl(g, rank, mesh=mesh, batch=8,
-                                         eta=8, psi_threshold=p))
-            plant_ss = sum(1 for m in stats["mode"] if "plant" in m)
+            idx, t = timed(
+                lambda p=psi: build(g, rank,
+                                    BuildPlan(algo="hybrid", batch=8,
+                                              eta=8, psi_th=p),
+                                    mesh=mesh))
+            plant_ss = sum(1 for s in idx.report.supersteps
+                           if "plant" in s.mode)
             out.append(row(
                 f"fig6/{name}/psith={psi:g}", t,
                 f"plant_supersteps={plant_ss} "
-                f"comm_slots={stats['comm_label_slots']}"))
+                f"comm_slots={idx.report.comm_label_slots}"))
     return out

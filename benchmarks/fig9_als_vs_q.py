@@ -6,20 +6,25 @@ from typing import List
 
 from benchmarks.common import Row, bench_graphs, row
 from repro.core import labels as lbl
-from repro.core.gll import parapll_chl
-from repro.core.plant import plant_chl
 from repro.core.pll import average_label_size
+from repro.index import BuildPlan, build
+
+
+def _als(idx) -> float:
+    """Deduped ALS from the materialized table (paraPLL emits
+    duplicate (vertex, hub) pairs; the figure counts distinct hubs)."""
+    return average_label_size(lbl.to_numpy_sets(idx.table))
 
 
 def run() -> List[Row]:
     out: List[Row] = []
     for name, g, rank in bench_graphs("small"):
-        chl_tbl, _ = plant_chl(g, rank, batch=8)
-        chl = average_label_size(lbl.to_numpy_sets(chl_tbl))
+        chl = _als(build(g, rank, BuildPlan(algo="plant", batch=8)))
         vals = []
         for q in (1, 4, 16, 64):
-            tbl, _ = parapll_chl(g, rank, batch=q, cap=8 * g.n)
-            vals.append((q, average_label_size(lbl.to_numpy_sets(tbl))))
+            idx = build(g, rank, BuildPlan(algo="parapll", batch=q,
+                                           cap=g.n))
+            vals.append((q, _als(idx)))
         out.append(row(
             f"fig9/{name}", 0.0,
             f"CHL(any q)={chl:.1f}; DparaPLL " +

@@ -69,10 +69,10 @@ def run() -> List[Row]:
 
 
 def _run_ell_relax(mode: str, note: str, rng) -> List[Row]:
-    """Fused ELL relaxation sweep: ref vs Pallas, plus end-to-end
-    `plant_chl` (the construction hot path the kernel serves)."""
+    """Fused ELL relaxation sweep: ref vs Pallas, plus an end-to-end
+    PLaNT construction row (the hot path the kernel serves)."""
     from benchmarks.common import bench_graphs
-    from repro.core.plant import plant_chl
+    from repro.index import BuildPlan, build
 
     out: List[Row] = []
     B, n, deg = 16, 512, 16
@@ -101,9 +101,48 @@ def _run_ell_relax(mode: str, note: str, rng) -> List[Row]:
     # end-to-end: full PLaNT construction (sweep loop + frontier
     # gating + strided fixpoint checks) on a small paper-style graph
     name, g, gr = bench_graphs("small")[1]       # scale-free
-    _, t = timed(lambda: plant_chl(g, gr, batch=16), repeat=1)
+    plan = BuildPlan(algo="plant", batch=16)
+    idx, t = timed(lambda: build(g, gr, plan), repeat=1)
     out.append(row("kernels/ell_relax/plant_chl_e2e", t,
                    f"{name} n={g.n} batch=16"))
+    out += _run_label_store(idx, g, rng)
+    return out
+
+
+def _run_label_store(idx, g, rng) -> List[Row]:
+    """Serving trajectory: dense vs sharded vs spill label-store query
+    latency (QLSN probes over the same index), so BENCH_kernels.json
+    tracks the storage backends alongside the kernels."""
+    import os
+    import tempfile
+
+    from repro.index import CHLIndex
+
+    out: List[Row] = []
+    Q = 512
+    u = rng.integers(0, g.n, Q).astype(np.int32)
+    v = rng.integers(0, g.n, Q).astype(np.int32)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = idx.save(os.path.join(tmp, "index"))
+        stores = [
+            ("dense", CHLIndex.load(path, store="dense")),
+            ("sharded", CHLIndex.load(path, store="sharded", shards=4)),
+            ("spill", CHLIndex.load(path, store="spill")),
+        ]
+        ref = None
+        for kind, loaded in stores:
+            srv = loaded.serve(mode="qlsn", batch_size=Q)
+            srv.warmup()
+            srv.submit(u, v)
+            got = srv.flush()
+            if ref is None:
+                ref = got
+            assert np.array_equal(ref, got), kind
+            _, t = timed(lambda s=srv: (s.submit(u, v), s.flush()),
+                         repeat=3)
+            out.append(row(f"serve/store_{kind}", t / Q,
+                           f"qlsn Q={Q} "
+                           f"shards={loaded.store.num_shards}"))
     return out
 
 

@@ -1,6 +1,8 @@
 """Table 4: query-mode throughput + memory (QLSN / QFDL / QDOL) on an
-8-device subprocess mesh. Memory = label bytes per node & total;
-throughput = batched queries/s (1-core caveat in EXPERIMENTS.md)."""
+8-device subprocess mesh, plus the label-store serving trajectory
+(dense vs sharded vs spill residency over the same saved artifact).
+Memory = label bytes per node & total; throughput = batched queries/s
+(1-core caveat in EXPERIMENTS.md)."""
 
 import json
 import os
@@ -17,7 +19,7 @@ set_host_device_count(8)
 import numpy as np
 import jax
 from repro.core.dgll import make_node_mesh
-from repro.core.query import label_memory_bytes, qdol_layout
+from repro.core.query import qdol_layout
 from repro.graphs import scale_free
 from repro.graphs.ranking import degree_ranking
 from repro.index import BuildPlan, build
@@ -30,7 +32,7 @@ rng = np.random.default_rng(0)
 Q = 1024
 u = rng.integers(0, g.n, Q).astype(np.int32)
 v = rng.integers(0, g.n, Q).astype(np.int32)
-base = label_memory_bytes(idx.table)
+base = idx.store.label_bytes()
 zeta = qdol_layout(g.n, 8).zeta
 out = {"base_bytes": base, "n": g.n, "Q": Q, "zeta": zeta}
 answers = {}
@@ -47,6 +49,22 @@ for mode, per_node in (("qlsn", base), ("qfdl", base // 8),
 # answers agree
 assert np.array_equal(answers["qlsn"], answers["qfdl"])
 assert np.array_equal(answers["qlsn"], answers["qdol"])
+# label-store residency trajectory over the same saved artifact
+import tempfile, os as _os
+from repro.index import CHLIndex
+with tempfile.TemporaryDirectory() as tmp:
+    path = idx.save(_os.path.join(tmp, "index"))
+    for kind, kw in (("dense", {}), ("sharded", {"shards": 8}),
+                     ("spill", {})):
+        loaded = CHLIndex.load(path, store=kind, **kw)
+        srv = loaded.serve(mode="qlsn", batch_size=Q)
+        srv.warmup()
+        t0 = time.perf_counter()
+        for _ in range(2):
+            srv.submit(u, v)
+            got = srv.flush()
+        out[f"store_{kind}_s"] = (time.perf_counter() - t0) / 2
+        assert np.array_equal(got, answers["qlsn"]), kind
 print("RESULT" + json.dumps(out))
 """
 
@@ -71,4 +89,9 @@ def run() -> List[Row]:
             f"throughput={Q/s:,.0f} q/s "
             f"bytes/node={res[f'{mode}_bytes_per_node']:,}"
             + (f" zeta={res['zeta']}" if mode == "qdol" else "")))
+    for kind in ("dense", "sharded", "spill"):
+        s = res[f"store_{kind}_s"]
+        out.append(row(f"table4/store_{kind}", s / Q,
+                       f"qlsn residency={kind} "
+                       f"throughput={Q/s:,.0f} q/s"))
     return out

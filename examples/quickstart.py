@@ -51,6 +51,15 @@ def main() -> None:
         print(f"\nsave → load → serve round trip OK "
               f"(warmup {srv.stats()['warmup_ms']:.0f} ms kept out of "
               f"p50/p99)")
+
+        # label residency is pluggable: the same artifact re-homes as
+        # hub-sharded partitions or memory-mapped spill segments
+        sharded = CHLIndex.load(path, store="sharded", shards=2)
+        assert np.array_equal(sharded.query(u, v), d)
+        spilled = CHLIndex.load(path, store="spill")
+        assert np.array_equal(spilled.query(u, v), d)
+        print(f"sharded ({sharded.store.num_shards} hub partitions) "
+              f"and spill (memory-mapped) stores answer identically")
     print("all queries exact — cover property holds")
 
 

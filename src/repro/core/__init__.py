@@ -1,14 +1,52 @@
 """The paper's algorithms: PLL oracle, LCC, GLL, DGLL, PLaNT, Hybrid,
-and the QLSN/QFDL/QDOL distributed query modes."""
+and the QLSN/QFDL/QDOL distributed query modes.
+
+The per-algo ``*_chl`` constructors re-exported here are the
+**deprecated engine layer**: application code builds through
+``repro.index`` (``BuildPlan`` → ``build()`` → ``CHLIndex``), and the
+re-exports below emit a ``DeprecationWarning`` when called. The
+defining modules (``repro.core.plant`` etc.) stay warning-free — that
+is the engine surface ``repro.index.build`` and the tests drive.
+"""
+
+import functools
+import warnings
 
 from repro.core.labels import (LabelTable, LabelOverflowError, default_cap,
                                empty, from_numpy_sets, to_numpy_sets)
 from repro.core.pll import (pll_undirected, pll_directed,
                             chl_by_definition, average_label_size)
-from repro.core.plant import plant_chl, plant_batch
-from repro.core.gll import gll_chl, lcc_chl, parapll_chl
-from repro.core.dgll import dgll_chl, make_node_mesh, assign_roots
-from repro.core.hybrid import hybrid_chl, plant_distributed_chl
+from repro.core.plant import plant_batch
+from repro.core.plant import plant_chl as _plant_chl
+from repro.core.gll import gll_chl as _gll_chl
+from repro.core.gll import lcc_chl as _lcc_chl
+from repro.core.gll import parapll_chl as _parapll_chl
+from repro.core.dgll import make_node_mesh, assign_roots
+from repro.core.dgll import dgll_chl as _dgll_chl
+from repro.core.hybrid import hybrid_chl as _hybrid_chl
+from repro.core.hybrid import plant_distributed_chl as _plant_dist_chl
+
+
+def _deprecated_shim(fn, name):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.{name} is a deprecated engine-layer shim; "
+            "build through repro.index "
+            "(build(g, rank, BuildPlan(algo=...)))",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return wrapper
+
+
+plant_chl = _deprecated_shim(_plant_chl, "plant_chl")
+gll_chl = _deprecated_shim(_gll_chl, "gll_chl")
+lcc_chl = _deprecated_shim(_lcc_chl, "lcc_chl")
+parapll_chl = _deprecated_shim(_parapll_chl, "parapll_chl")
+dgll_chl = _deprecated_shim(_dgll_chl, "dgll_chl")
+hybrid_chl = _deprecated_shim(_hybrid_chl, "hybrid_chl")
+plant_distributed_chl = _deprecated_shim(_plant_dist_chl,
+                                         "plant_distributed_chl")
 
 __all__ = [
     "LabelTable", "LabelOverflowError", "default_cap", "empty",

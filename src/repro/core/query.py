@@ -158,15 +158,21 @@ def label_memory_bytes(table: LabelTable) -> int:
     return int(np.asarray(jnp.sum(table.count))) * 8
 
 
-def mode_memory_report(table: LabelTable, q: int) -> dict:
-    """Per-mode total label storage across the cluster (Table 4)."""
-    base = label_memory_bytes(table)
-    layout = qdol_layout(table.hubs.shape[0], q)
-    zeta = layout.zeta
+def mode_memory_totals(n: int, base_bytes: int, q: int) -> dict:
+    """Per-mode total label storage across the cluster (Table 4),
+    from the resident label bytes alone — store backends report this
+    without materializing a dense table."""
+    zeta = qdol_layout(n, q).zeta
     return {
-        "qlsn_total": base * q,               # replicated everywhere
-        "qfdl_total": base,                   # partitioned by hub
+        "qlsn_total": base_bytes * q,         # replicated everywhere
+        "qfdl_total": base_bytes,             # partitioned by hub
         # each of C(ζ,2) nodes stores ≈ 2·base/ζ → total ≈ base·(ζ-1)
-        "qdol_total": base * (zeta - 1),
+        "qdol_total": base_bytes * (zeta - 1),
         "q": q, "zeta": zeta,
     }
+
+
+def mode_memory_report(table: LabelTable, q: int) -> dict:
+    """Table-4 memory report for a dense label table."""
+    return mode_memory_totals(table.hubs.shape[0],
+                              label_memory_bytes(table), q)

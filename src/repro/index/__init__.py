@@ -10,9 +10,14 @@ The single entry point for the paper's pipeline:
     idx.save("run/index")            # versioned artifact on disk
     idx = CHLIndex.load("run/index")
 
+Label residency is pluggable (``repro.index.store``): build with
+``BuildPlan(store="sharded", shards=K)`` for hub-partitioned labels,
+or load with ``store="spill"`` to memory-map an index whose labels
+exceed host RAM.
+
 Direct constructor calls (``plant_chl``, ``gll_chl``, ``hybrid_chl``,
 …) remain supported as the engine layer but are deprecated as an
-application API — new code should go through ``build``.
+application API (they warn) — new code goes through ``build``.
 """
 
 from repro.index.artifact import CHLIndex, rank_hash
@@ -20,9 +25,13 @@ from repro.index.build import build
 from repro.index.plan import ALGOS, DISTRIBUTED_ALGOS, BuildPlan
 from repro.index.report import (BuildReport, OverflowEvent,
                                 SuperstepStat, normalize_stats)
+from repro.index.store import (BUILD_STORE_KINDS, LOAD_STORE_KINDS,
+                               DenseStore, LabelStore, ShardedStore,
+                               SpillStore)
 
 __all__ = [
-    "ALGOS", "DISTRIBUTED_ALGOS", "BuildPlan", "BuildReport",
-    "CHLIndex", "OverflowEvent", "SuperstepStat", "build",
-    "normalize_stats", "rank_hash",
+    "ALGOS", "BUILD_STORE_KINDS", "DISTRIBUTED_ALGOS", "BuildPlan",
+    "BuildReport", "CHLIndex", "DenseStore", "LOAD_STORE_KINDS",
+    "LabelStore", "OverflowEvent", "ShardedStore", "SpillStore",
+    "SuperstepStat", "build", "normalize_stats", "rank_hash",
 ]

@@ -1,31 +1,42 @@
 """`CHLIndex` — the queryable, servable, persistable CHL artifact.
 
-One object owns the outcome of a build: the padded label table (or the
-directed L_out/L_in pair), the plan that produced it, the normalized
-build report, and the vertex hierarchy it was built under. Everything
-downstream of construction happens through it:
+One object owns the outcome of a build: a pluggable **label store**
+(``repro.index.store`` — dense / hub-sharded / memory-map-spilled
+residency; the directed L_out/L_in pair stays dense), the plan that
+produced it, the normalized build report, and the vertex hierarchy it
+was built under. Everything downstream of construction happens through
+it:
 
-    idx = build(g, rank, BuildPlan(algo="hybrid"))
+    idx = build(g, rank, BuildPlan(algo="hybrid", store="sharded"))
     idx.query(u, v)                      # batched PPSD distances
     srv = idx.serve(mode="qdol")         # QueryServer, any §6.3 mode
     idx.validate_against(oracle)         # exact-CHL / distance check
-    idx.save("run/index")                # versioned npz + manifest
-    idx2 = CHLIndex.load("run/index")
+    idx.save("run/index")                # versioned sharded artifact
+    idx2 = CHLIndex.load("run/index", store="spill")
 
-On-disk format (version 1):
+On-disk format (version 2):
 
-    <dir>/manifest.json   {"format": "repro.index/chl", "version": 1,
+    <dir>/manifest.json   {"format": "repro.index/chl", "version": 2,
                            "plan": BuildPlan.to_dict(),
                            "report": BuildReport.to_dict(),
                            "rank_hash": sha256(rank bytes),
                            "directed": bool, "n": int,
-                           "total_labels": int, "als": float}
-    <dir>/arrays.npz      rank + hubs/dist/count
-                          (directed: out_*/in_* pairs)
+                           "total_labels": int, "als": float,
+                           "store": {"kind": "dense"|"sharded",
+                                     "shards": K,
+                                     "shard_labels": [per-shard totals]}}
+    <dir>/rank.npy        the vertex hierarchy
+    <dir>/shard_<k>.npz   hubs/dist/count of label shard k
+                          (directed: one shard of out_*/in_* pairs)
 
-Loads are rejected on format/version mismatch and on rank-hash
-mismatch (a label table is only valid for the hierarchy it was built
-under). Writes go through a tmp dir + ``os.replace`` swap: a fresh
+Version-1 artifacts (monolithic ``arrays.npz``) still load, into a
+:class:`DenseStore`, bit-identically. ``load(store=...)`` re-homes
+either version: ``"dense"`` merges shards, ``"sharded"`` partitions by
+hub rank, ``"spill"`` memory-maps the shard files so labels larger
+than host RAM stay serveable. Loads are rejected on format/version
+mismatch, rank-hash mismatch, and per-shard label-count mismatch (a
+truncated shard file names itself instead of raising a numpy
+traceback). Writes go through a tmp dir + ``os.replace`` swap: a fresh
 save is atomic, and an overwrite never deletes the live artifact
 before the replacement is staged (a crash leaves the old copy
 recoverable at ``.tmp_index_<name>.old``), so a ``CheckpointManager``
@@ -48,11 +59,14 @@ from repro.core import query as qm
 from repro.core.labels import LabelTable
 from repro.index.plan import BuildPlan
 from repro.index.report import BuildReport
+from repro.index.store import (LOAD_STORE_KINDS, DenseStore, LabelStore,
+                               ShardedStore, SpillStore, open_shard,
+                               shard_filename)
 from repro.serve import backends
 from repro.serve.query_server import QueryServer
 
 FORMAT = "repro.index/chl"
-VERSION = 1
+VERSION = 2
 
 
 def rank_hash(rank: np.ndarray) -> str:
@@ -64,25 +78,31 @@ def rank_hash(rank: np.ndarray) -> str:
 class CHLIndex:
     """A built Canonical Hub Labeling, packaged for serving.
 
-    ``table`` for undirected graphs; ``l_out``/``l_in`` for directed
-    (footnote 1 forward/backward labels). ``partitioned`` is the
-    construction-time ``[q, n, L]`` hub-partitioned table when the
-    build was distributed (QFDL serves straight from it; otherwise the
-    layout is synthesized on demand from ``rank``).
+    ``store`` (a :class:`~repro.index.store.LabelStore`) holds the
+    labels for undirected graphs; ``l_out``/``l_in`` for directed
+    (footnote 1 forward/backward labels, dense residency only).
+    ``partitioned`` is the construction-time ``[q, n, L]``
+    hub-partitioned table when the build was distributed (QFDL serves
+    straight from it; otherwise the layout comes from the store or is
+    synthesized from ``rank``).
     """
 
     def __init__(self, table: Optional[LabelTable] = None, *,
+                 store: Optional[LabelStore] = None,
                  l_out: Optional[LabelTable] = None,
                  l_in: Optional[LabelTable] = None,
                  plan: BuildPlan, report: BuildReport,
                  rank: np.ndarray,
                  partitioned: Optional[LabelTable] = None):
-        if (table is None) == (l_out is None):
-            raise ValueError("exactly one of `table` or the "
+        given = sum(x is not None for x in (table, store, l_out))
+        if given != 1:
+            raise ValueError("exactly one of `table`, `store`, or the "
                              "`l_out`/`l_in` pair must be given")
         if (l_out is None) != (l_in is None):
             raise ValueError("directed indices need both l_out and l_in")
-        self.table = table
+        if table is not None:
+            store = DenseStore(table)
+        self.store = store
         self.l_out = l_out
         self.l_in = l_in
         self.plan = plan
@@ -94,19 +114,28 @@ class CHLIndex:
 
     @property
     def directed(self) -> bool:
-        return self.table is None
+        return self.store is None
+
+    @property
+    def table(self) -> Optional[LabelTable]:
+        """Materialized dense view of the store (undirected only).
+
+        For a :class:`DenseStore` this is the exact underlying table;
+        for sharded/spill stores it merges shards — O(total label
+        slots) memory, meant for host-side analysis, not serving.
+        """
+        return None if self.directed else self.store.to_table()
 
     @property
     def n(self) -> int:
-        t = self.table if not self.directed else self.l_out
-        return t.n
+        return self.l_out.n if self.directed else self.store.n
 
     @property
     def total_labels(self) -> int:
         if self.directed:
             return (lbl.total_labels(self.l_out)
                     + lbl.total_labels(self.l_in))
-        return lbl.total_labels(self.table)
+        return self.store.total_labels
 
     @property
     def als(self) -> float:
@@ -123,15 +152,16 @@ class CHLIndex:
 
     def query_with_hub(self, u, v) -> Tuple[np.ndarray, np.ndarray]:
         """Distances plus the witnessing hub id (-1 when disjoint)."""
-        u = jnp.atleast_1d(jnp.asarray(u, jnp.int32))
-        v = jnp.atleast_1d(jnp.asarray(v, jnp.int32))
         if self.directed:
             from repro.core.directed import query_directed
+            u = jnp.atleast_1d(jnp.asarray(u, jnp.int32))
+            v = jnp.atleast_1d(jnp.asarray(v, jnp.int32))
             d, h = query_directed(self.l_out, self.l_in, u, v,
                                   with_hub=True)
-        else:
-            d, h = lbl.query_pairs(self.table, u, v)
-        return np.asarray(d), np.asarray(h)
+            return np.asarray(d), np.asarray(h)
+        # each store normalizes its own inputs (a spill store runs in
+        # host numpy — don't bounce its queries through the device)
+        return self.store.query(u, v)
 
     # --------------------------------------------------------- serve
 
@@ -140,11 +170,14 @@ class CHLIndex:
               ) -> QueryServer:
         """Query server in any §6.3 storage mode — no mesh/layout/store
         ceremony at the call site (undirected only; directed serving
-        is an open ROADMAP item)."""
+        is an open ROADMAP item). Routes through the label store:
+        dense stores serve all three modes as before, sharded stores
+        answer from their own hub partitions, spill stores serve QLSN
+        from the memory-mapped shards."""
         if self.directed:
             raise NotImplementedError(
                 "serve() currently supports undirected indices")
-        fn = backends.make_answer_fn(self.table, mode, mesh=mesh,
+        fn = backends.make_answer_fn(self.store, mode, mesh=mesh,
                                      partitioned=self.partitioned,
                                      rank=self.rank)
         return QueryServer(fn, batch_size=batch_size,
@@ -191,36 +224,53 @@ class CHLIndex:
 
     def memory_report(self, q: Optional[int] = None) -> dict:
         """Per-mode cluster label storage (Table 4). ``q`` defaults to
-        the build mesh size."""
+        the build mesh size. Sharded/spill stores additionally report
+        the per-shard split, without materializing the dense table."""
         q = q or self.report.q
         if self.directed:
             return {"l_out_bytes": qm.label_memory_bytes(self.l_out),
                     "l_in_bytes": qm.label_memory_bytes(self.l_in),
                     "q": q}
-        return qm.mode_memory_report(self.table, q)
+        base = self.store.label_bytes()
+        out = qm.mode_memory_totals(self.n, base, q)
+        out["store"] = self.store.kind
+        out["shards"] = self.store.num_shards
+        if isinstance(self.store, ShardedStore):
+            out["shard_bytes"] = self.store.shard_label_bytes()
+        return out
 
     # ---------------------------------------------------------- disk
 
     def save(self, directory: str) -> str:
-        """Atomically write the versioned on-disk artifact; returns
-        the directory path."""
+        """Atomically write the versioned on-disk artifact (format
+        version 2: per-shard npz segments); returns the directory
+        path. One shard is resident at a time, so saving a spill store
+        never materializes the full table."""
         parent = os.path.dirname(os.path.abspath(directory)) or "."
         os.makedirs(parent, exist_ok=True)
         tmp = os.path.join(parent,
                            f".tmp_index_{os.path.basename(directory)}")
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        arrays = {"rank": np.asarray(self.rank)}
+        np.save(os.path.join(tmp, "rank.npy"), np.asarray(self.rank))
         if self.directed:
+            arrays = {}
             for pfx, t in (("out", self.l_out), ("in", self.l_in)):
                 arrays[f"{pfx}_hubs"] = np.asarray(t.hubs)
                 arrays[f"{pfx}_dist"] = np.asarray(t.dist)
                 arrays[f"{pfx}_count"] = np.asarray(t.count)
+            np.savez(os.path.join(tmp, shard_filename(0)), **arrays)
+            store_info = {"kind": "dense", "shards": 1,
+                          "shard_labels": [self.total_labels]}
         else:
-            arrays["hubs"] = np.asarray(self.table.hubs)
-            arrays["dist"] = np.asarray(self.table.dist)
-            arrays["count"] = np.asarray(self.table.count)
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            shard_labels = []
+            for k, arrs in self.store.shard_arrays():
+                np.savez(os.path.join(tmp, shard_filename(k)), **arrs)
+                shard_labels.append(int(np.sum(arrs["count"])))
+            kind = "sharded" if self.store.num_shards > 1 else "dense"
+            store_info = {"kind": kind,
+                          "shards": self.store.num_shards,
+                          "shard_labels": shard_labels}
         manifest = {
             "format": FORMAT,
             "version": VERSION,
@@ -231,6 +281,7 @@ class CHLIndex:
             "n": self.n,
             "total_labels": self.total_labels,
             "als": self.als,
+            "store": store_info,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=2)
@@ -246,23 +297,42 @@ class CHLIndex:
         return directory
 
     @classmethod
-    def load(cls, directory: str,
-             rank: Optional[np.ndarray] = None) -> "CHLIndex":
+    def load(cls, directory: str, rank: Optional[np.ndarray] = None, *,
+             store: Optional[str] = None,
+             shards: Optional[int] = None) -> "CHLIndex":
         """Load a saved index. When ``rank`` is given it must hash to
         the manifest's ``rank_hash`` — a label table is meaningless
-        under a different hierarchy."""
+        under a different hierarchy.
+
+        ``store`` overrides the residency the artifact was saved with:
+        ``"dense"`` merges shards into one table, ``"sharded"``
+        (re-)partitions by hub rank (``shards`` picks K when re-homing
+        a dense artifact), ``"spill"`` memory-maps the shard segments
+        instead of loading them. Default: the artifact's own layout.
+        """
+        if store is not None and store not in LOAD_STORE_KINDS:
+            raise ValueError(f"store {store!r} not one of "
+                             f"{LOAD_STORE_KINDS}")
         with open(os.path.join(directory, "manifest.json")) as f:
             manifest = json.load(f)
         if manifest.get("format") != FORMAT:
             raise ValueError(
                 f"{directory}: not a CHL index artifact "
                 f"(format={manifest.get('format')!r})")
-        if manifest.get("version", 0) > VERSION:
+        version = manifest.get("version", 0)
+        if version > VERSION:
             raise ValueError(
                 f"{directory}: index version {manifest['version']} is "
                 f"newer than supported ({VERSION})")
-        arrs = np.load(os.path.join(directory, "arrays.npz"))
-        stored_rank = arrs["rank"]
+        plan = BuildPlan.from_dict(manifest["plan"])
+        report = BuildReport.from_dict(manifest["report"])
+
+        if version < 2:
+            stored_rank, built = cls._load_v1(directory, manifest,
+                                              spill=store == "spill")
+        else:
+            stored_rank, built = cls._load_v2(directory, manifest,
+                                              spill=store == "spill")
         if rank_hash(stored_rank) != manifest["rank_hash"]:
             raise ValueError(f"{directory}: stored rank does not match "
                              "manifest rank_hash (corrupt artifact)")
@@ -270,8 +340,33 @@ class CHLIndex:
             raise ValueError(
                 f"{directory}: rank-hash mismatch — this index was "
                 "built under a different vertex hierarchy")
-        plan = BuildPlan.from_dict(manifest["plan"])
-        report = BuildReport.from_dict(manifest["report"])
+
+        if manifest["directed"]:
+            if store not in (None, "dense"):
+                raise NotImplementedError(
+                    "directed indices support only dense residency")
+            l_out, l_in = built
+            return cls(l_out=l_out, l_in=l_in, plan=plan, report=report,
+                       rank=stored_rank)
+        built = cls._rehome(built, store, stored_rank, shards)
+        return cls(store=built, plan=plan, report=report,
+                   rank=stored_rank)
+
+    # ------------------------------------------------- load internals
+
+    @staticmethod
+    def _load_v1(directory: str, manifest: dict, spill: bool = False):
+        """Version-1 monolithic ``arrays.npz`` → dense residency,
+        bit-identical to the pre-store loader (``spill`` maps the
+        members instead of loading them — one big shard)."""
+        path = os.path.join(directory, "arrays.npz")
+        if spill and not manifest["directed"]:
+            from repro.index.store import open_npz_arrays
+            arrs = open_npz_arrays(path, path)
+            return np.asarray(arrs["rank"]), SpillStore(
+                [{k: arrs[k] for k in ("hubs", "dist", "count")}])
+        arrs = np.load(path)
+        stored_rank = arrs["rank"]
 
         def tbl(pfx: str) -> LabelTable:
             return LabelTable(jnp.asarray(arrs[f"{pfx}hubs"]),
@@ -279,6 +374,59 @@ class CHLIndex:
                               jnp.asarray(arrs[f"{pfx}count"]))
 
         if manifest["directed"]:
-            return cls(l_out=tbl("out_"), l_in=tbl("in_"), plan=plan,
-                       report=report, rank=stored_rank)
-        return cls(tbl(""), plan=plan, report=report, rank=stored_rank)
+            return stored_rank, (tbl("out_"), tbl("in_"))
+        return stored_rank, DenseStore(tbl(""))
+
+    @staticmethod
+    def _load_v2(directory: str, manifest: dict, spill: bool):
+        stored_rank = np.load(os.path.join(directory, "rank.npy"))
+        info = manifest.get("store") or {}
+        K = int(info.get("shards", 1))
+        expected = info.get("shard_labels")
+        shards = []
+        for k in range(K):
+            arrs = open_shard(directory, k)
+            if expected is not None:
+                got = int(np.sum(np.asarray(arrs["count"]))) \
+                    if not manifest["directed"] else \
+                    int(np.sum(np.asarray(arrs["out_count"]))
+                        + np.sum(np.asarray(arrs["in_count"])))
+                if got != int(expected[k]):
+                    raise ValueError(
+                        f"{directory}: {shard_filename(k)} holds {got} "
+                        f"labels but the manifest recorded "
+                        f"{int(expected[k])} (corrupt or mixed-version "
+                        "artifact)")
+            shards.append(arrs)
+        if manifest["directed"]:
+            (s,) = shards
+
+            def tbl(pfx: str) -> LabelTable:
+                return LabelTable(jnp.asarray(s[f"{pfx}hubs"]),
+                                  jnp.asarray(s[f"{pfx}dist"]),
+                                  jnp.asarray(s[f"{pfx}count"]))
+
+            return stored_rank, (tbl("out_"), tbl("in_"))
+        if spill:
+            return stored_rank, SpillStore(shards)
+        if info.get("kind") == "sharded" or K > 1:
+            return stored_rank, ShardedStore.from_shard_arrays(shards)
+        return stored_rank, DenseStore.from_shard_arrays(shards)
+
+    @staticmethod
+    def _rehome(store: LabelStore, kind: Optional[str],
+                rank: np.ndarray, shards: Optional[int]) -> LabelStore:
+        """Convert a loaded store to the requested residency."""
+        if kind is None or kind == "spill":
+            return store          # spill was honored at open time
+        if kind == "dense":
+            if isinstance(store, DenseStore):
+                return store
+            return DenseStore(store.to_table())
+        # kind == "sharded": repartition unless the shard count already
+        # matches (``shards`` only forces K when it differs)
+        if isinstance(store, ShardedStore) and shards in (
+                None, store.num_shards):
+            return store
+        K = shards or max(2, store.num_shards)
+        return ShardedStore.from_table(store.to_table(), rank, K)

@@ -30,6 +30,7 @@ from repro.index.artifact import CHLIndex
 from repro.index.plan import BuildPlan
 from repro.index.report import (BuildReport, OverflowEvent,
                                 normalize_stats)
+from repro.index.store import DenseStore, ShardedStore
 
 
 def _dispatch(g, rank: np.ndarray, plan: BuildPlan, cap: int, mesh,
@@ -86,9 +87,21 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
     if plan.algo != "directed" and g.directed:
         raise ValueError(f"algo={plan.algo!r} needs an undirected "
                          "graph; use algo='directed'")
+    if plan.algo == "directed" and plan.store != "dense":
+        raise ValueError("directed builds support only store='dense' "
+                         "(sharded directed serving is a ROADMAP item)")
     n = g.n
     cap = plan.cap or lbl.default_cap(n)
     cap = min(cap, n)
+    notes = []
+    if plan.algo != "pll-ref":           # the host oracle runs no sweeps
+        from repro.kernels.ell_relax import (kernel_fits,
+                                             resolve_use_kernel,
+                                             vmem_fallback_note)
+        if resolve_use_kernel(None) and not kernel_fits(n):
+            # surface the documented VMEM limit in the report, not just
+            # a one-time runtime warning from the sweep itself
+            notes.append(vmem_fallback_note(n))
     overflow_events = []
     t0 = time.perf_counter()
     attempt = 0
@@ -131,7 +144,8 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
         kw = normalize_stats(plan.algo, stats)
         report = BuildReport(algo=plan.algo, wall_s=wall,
                              total_labels=total, als=als, cap=cap,
-                             overflow_events=overflow_events, **kw)
+                             overflow_events=overflow_events,
+                             notes=notes, **kw)
         return CHLIndex(l_out=l_out, l_in=l_in, plan=plan, report=report,
                         rank=rank)
 
@@ -143,6 +157,17 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
     kw = normalize_stats(plan.algo, stats)
     report = BuildReport(algo=plan.algo, wall_s=wall, total_labels=total,
                          als=total / max(1, n), cap=cap,
-                         overflow_events=overflow_events, **kw)
-    return CHLIndex(table, plan=plan, report=report, rank=rank,
+                         overflow_events=overflow_events, notes=notes,
+                         **kw)
+    if plan.store == "sharded":
+        K = plan.shards
+        if K is None:                    # default: build mesh, else all
+            K = int(kw.get("q") or 1)    # local devices
+            if K == 1:
+                import jax
+                K = max(1, jax.local_device_count())
+        store = ShardedStore.from_table(table, rank, K)
+    else:
+        store = DenseStore(table)
+    return CHLIndex(store=store, plan=plan, report=report, rank=rank,
                     partitioned=partitioned)

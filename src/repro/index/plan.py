@@ -28,6 +28,10 @@ class BuildPlan:
     ``cap_growth`` (clamped to n), at most ``max_cap_retries`` times.
     ``psi_th=None`` → auto Ψ-threshold (γ·q) for the hybrid.
     ``mesh_devices=None`` → all local devices for distributed algos.
+    ``store`` picks the label residency of the built index ("dense" =
+    one table, "sharded" = hub-partitioned ``LabelStore``; "spill" is
+    a load/serve-time choice, not a build product); ``shards=None`` →
+    the build mesh size for distributed algos, else all local devices.
     """
 
     algo: str = "hybrid"
@@ -42,6 +46,8 @@ class BuildPlan:
     mesh_devices: Optional[int] = None
     max_cap_retries: int = 4
     cap_growth: float = 2.0
+    store: str = "dense"              # label residency (repro.index.store)
+    shards: Optional[int] = None      # hub partitions for store="sharded"
 
     def __post_init__(self):
         if self.algo not in ALGOS:
@@ -63,6 +69,14 @@ class BuildPlan:
         if self.max_cap_retries < 0 or self.cap_growth <= 1.0:
             raise ValueError(
                 "max_cap_retries must be >= 0 and cap_growth > 1")
+        from repro.index.store import BUILD_STORE_KINDS
+        if self.store not in BUILD_STORE_KINDS:
+            raise ValueError(
+                f"store {self.store!r} not one of {BUILD_STORE_KINDS} "
+                "(\"spill\" is a load/serve-time residency — see "
+                "CHLIndex.load)")
+        if self.shards is not None and self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
 
     @property
     def distributed(self) -> bool:

@@ -1,0 +1,94 @@
+"""`LabelStore` — the pluggable label-residency protocol behind
+``CHLIndex``.
+
+The paper's second headline claim is that partitioned labels let PLaNT
+keep indexes ~14x larger than one host's RAM fully in memory across a
+cluster. The artifact API therefore no longer assumes "one dense
+LabelTable in process memory": a :class:`CHLIndex` owns a *store*, and
+the store decides residency —
+
+- :class:`~repro.index.store.dense.DenseStore` — one dense table, the
+  v1-compatible default;
+- :class:`~repro.index.store.sharded.ShardedStore` — labels partitioned
+  by hub rank into K shards (the §5.1 construction layout made the
+  first-class representation), queries answered by per-shard partial
+  mins plus one cross-shard reduction;
+- :class:`~repro.index.store.spill.SpillStore` — per-shard
+  memory-mapped npz segments, so an index whose labels exceed host RAM
+  still loads and serves (latency traded for capacity).
+
+**Standing rule:** everything outside ``repro/index/store/`` talks to
+the protocol below (``query`` / ``to_table`` / ``shard_arrays`` /
+``label_bytes``), never to a backend's internal arrays. New backends
+implement this protocol.
+
+Every backend must be *query-exact*: partitioning labels by hub keeps
+PPSD answers bit-identical, because all labels of a given hub live in
+exactly one shard, so every common hub of a pair (u, v) is intersected
+in exactly one partial min and f32 ``min`` is order-insensitive.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+__all__ = ["BUILD_STORE_KINDS", "LOAD_STORE_KINDS", "LabelStore",
+           "shard_filename"]
+
+#: store kinds a :class:`repro.index.plan.BuildPlan` may request.
+#: ("spill" is a *load/serve-time* residency choice — there is nothing
+#: to memory-map until an artifact exists on disk.)
+BUILD_STORE_KINDS = ("dense", "sharded")
+
+#: store kinds `CHLIndex.load(..., store=...)` may request.
+LOAD_STORE_KINDS = ("dense", "sharded", "spill")
+
+
+@runtime_checkable
+class LabelStore(Protocol):
+    """What ``CHLIndex`` and ``repro.serve`` require of a label store."""
+
+    #: backend name ("dense" | "sharded" | "spill")
+    kind: str
+
+    @property
+    def n(self) -> int:
+        """Number of vertices."""
+        ...
+
+    @property
+    def num_shards(self) -> int:
+        """Number of label shards (1 for a dense store)."""
+        ...
+
+    @property
+    def total_labels(self) -> int:
+        """Total (hub, dist) pairs actually present."""
+        ...
+
+    def query(self, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched PPSD: (distance f32 [Q], witnessing hub i32 [Q];
+        +inf / -1 when the label sets are disjoint)."""
+        ...
+
+    def to_table(self):
+        """Materialize one dense :class:`~repro.core.labels.LabelTable`
+        (host-side analysis, QDOL layout, directed queries). May cost
+        O(total label slots) memory — spill callers beware."""
+        ...
+
+    def shard_arrays(self) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+        """Yield ``(k, {"hubs", "dist", "count"})`` per shard, one shard
+        resident at a time — the save path, bounded-memory by contract."""
+        ...
+
+    def label_bytes(self) -> int:
+        """Bytes to store the (hub, dist) pairs actually present."""
+        ...
+
+
+def shard_filename(k: int) -> str:
+    """On-disk name of shard ``k`` in a version-2 artifact."""
+    return f"shard_{k}.npz"

@@ -1,0 +1,152 @@
+"""`ShardedStore` — labels partitioned by hub rank into K shards.
+
+The paper's §5.1 collaborative partitioning made the *first-class*
+representation instead of a serving-time view: shard ``k`` holds, for
+every vertex, exactly the labels whose hub it owns
+(``order_index(hub) mod K``). A PPSD query is K per-shard partial
+intersections plus one cross-shard ``min`` — exact, because every
+common hub of a pair is intersected in exactly one shard and f32
+``min`` is order-insensitive.
+
+Execution: the stacked ``[K, n, Ls]`` arrays answer queries through a
+vmapped partial-min + reduce on one device (the time-multiplexed
+path), and :meth:`as_partitioned` places shard ``k`` on device ``k``
+of a mesh so ``repro.core.query.qfdl_fn`` runs the same computation as
+a real ``shard_map`` + ``pmin`` — the QFDL mode served from the
+store's own layout rather than a synthesized copy.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as lbl
+from repro.core.labels import LabelTable
+from repro.index.store.dense import DenseStore
+from repro.parallel.sharding import hub_partition_arrays
+
+
+@jax.jit
+def _stacked_query(hubs, dist, count, u, v):
+    """Per-shard partial PPSD mins over [K, n, Ls], one cross-shard
+    reduce. Bit-identical to the dense answer (disjoint hub subsets)."""
+    def one(h, d, c):
+        return lbl.query_pairs(LabelTable(h, d, c), u, v)
+
+    ds, hs = jax.vmap(one)(hubs, dist, count)          # [K, Q]
+    best = jnp.min(ds, axis=0)
+    k = jnp.argmin(ds, axis=0)
+    hub = jnp.take_along_axis(hs, k[None, :], axis=0)[0]
+    return best, jnp.where(jnp.isfinite(best), hub, -1)
+
+
+class ShardedStore:
+    kind = "sharded"
+
+    def __init__(self, hubs, dist, count):
+        """``hubs`` i32 [K, n, Ls], ``dist`` f32 [K, n, Ls],
+        ``count`` i32 [K, n] — shard-major stacked label arrays."""
+        self.hubs = jnp.asarray(hubs)
+        self.dist = jnp.asarray(dist)
+        self.count = jnp.asarray(count)
+        if self.hubs.ndim != 3 or self.count.ndim != 2:
+            raise ValueError("ShardedStore wants [K, n, Ls] labels and "
+                             "[K, n] counts")
+
+    # ---------------------------------------------------- protocol
+
+    @property
+    def n(self) -> int:
+        return self.hubs.shape[1]
+
+    @property
+    def num_shards(self) -> int:
+        return self.hubs.shape[0]
+
+    @property
+    def shard_cap(self) -> int:
+        return self.hubs.shape[2]
+
+    @property
+    def total_labels(self) -> int:
+        return int(np.asarray(jnp.sum(self.count)))
+
+    def query(self, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        u = jnp.atleast_1d(jnp.asarray(u, jnp.int32))
+        v = jnp.atleast_1d(jnp.asarray(v, jnp.int32))
+        d, h = _stacked_query(self.hubs, self.dist, self.count, u, v)
+        return np.asarray(d), np.asarray(h)
+
+    def to_table(self) -> LabelTable:
+        return DenseStore.from_shard_arrays(
+            arrs for _, arrs in self.shard_arrays()).to_table()
+
+    def shard_arrays(self) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+        hubs = np.asarray(self.hubs)
+        dist = np.asarray(self.dist)
+        count = np.asarray(self.count)
+        for k in range(self.num_shards):
+            # trim each shard to its own tight cap — per-shard files
+            # should not pay the widest shard's padding
+            cap = int(max(1, count[k].max()))
+            yield k, {"hubs": hubs[k, :, :cap], "dist": dist[k, :, :cap],
+                      "count": count[k]}
+
+    def label_bytes(self) -> int:
+        return self.total_labels * 8
+
+    def shard_label_bytes(self) -> list:
+        """Per-shard resident label bytes (capacity-planning view)."""
+        per = np.asarray(jnp.sum(self.count, axis=1))
+        return [int(c) * 8 for c in per]
+
+    # ------------------------------------------------------ serving
+
+    def as_partitioned(self, mesh) -> LabelTable:
+        """The stacked arrays as a mesh-placed ``[K, n, Ls]``
+        LabelTable (shard k on device k) for ``qfdl_fn`` — requires
+        ``mesh`` size == ``num_shards``."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if int(mesh.devices.size) != self.num_shards:
+            raise ValueError(
+                f"mesh has {int(mesh.devices.size)} devices but the "
+                f"store has {self.num_shards} shards")
+        sh = NamedSharding(mesh, P("node"))
+        return LabelTable(jax.device_put(self.hubs, sh),
+                          jax.device_put(self.dist, sh),
+                          jax.device_put(self.count, sh))
+
+    # ------------------------------------------------- constructors
+
+    @classmethod
+    def from_table(cls, table: LabelTable, rank: np.ndarray,
+                   num_shards: int) -> "ShardedStore":
+        """Partition a dense table by hub ownership (§5.1 layout)."""
+        h, d, c = hub_partition_arrays(table.hubs, table.dist, rank,
+                                       num_shards)
+        return cls(h, d, c)
+
+    @classmethod
+    def from_shard_arrays(cls, shards) -> "ShardedStore":
+        """Stack per-shard ``{hubs, dist, count}`` dicts (ragged
+        per-shard caps are padded to the widest)."""
+        shards = list(shards)
+        caps = [np.asarray(s["hubs"]).shape[1] for s in shards]
+        Ls = max([1] + caps)
+        hubs, dist, count = [], [], []
+        for s in shards:
+            h = np.asarray(s["hubs"])
+            d = np.asarray(s["dist"])
+            pad = Ls - h.shape[1]
+            if pad:
+                h = np.pad(h, ((0, 0), (0, pad)), constant_values=-1)
+                d = np.pad(d, ((0, 0), (0, pad)),
+                           constant_values=np.inf)
+            hubs.append(h)
+            dist.append(d)
+            count.append(np.asarray(s["count"]))
+        return cls(np.stack(hubs), np.stack(dist), np.stack(count))

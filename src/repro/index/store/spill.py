@@ -1,0 +1,200 @@
+"""`SpillStore` — per-shard memory-mapped npz segments.
+
+An index whose labels exceed host RAM still loads and serves: each
+``shard_<k>.npz`` member is memory-mapped straight out of the
+(uncompressed) zip archive, so only the label rows a query batch
+actually touches are paged in. Queries run the same per-shard
+partial-min + cross-shard reduction as :class:`ShardedStore`, but in
+host numpy over the mapped segments — latency traded for capacity.
+
+``np.savez`` stores members uncompressed (ZIP_STORED), so a member is
+a verbatim ``.npy`` file at a fixed offset inside the archive; we
+parse the local zip header + npy header once and hand the data range
+to ``np.memmap``. Compressed or exotically-versioned members fall back
+to one-shot ``np.load`` of that shard (still one shard resident at a
+time). Truncated/missing shard files raise a ``ValueError`` naming the
+shard, not a numpy traceback.
+"""
+
+from __future__ import annotations
+
+import os
+import zipfile
+from typing import Dict, Iterator, List, Tuple
+
+import numpy as np
+
+from repro.core.labels import LabelTable
+from repro.index.store.base import shard_filename
+from repro.index.store.dense import DenseStore
+
+
+class _Unmappable(Exception):
+    """Member can't be memory-mapped (compressed / unknown header) —
+    fall back to eager np.load for that shard."""
+
+
+def _npz_member_memmaps(path: str) -> Dict[str, np.memmap]:
+    """Memory-map every member of an uncompressed ``.npz``."""
+    out: Dict[str, np.memmap] = {}
+    with zipfile.ZipFile(path) as zf, open(path, "rb") as f:
+        for zinfo in zf.infolist():
+            if zinfo.compress_type != zipfile.ZIP_STORED:
+                raise _Unmappable(zinfo.filename)
+            key = zinfo.filename
+            if key.endswith(".npy"):
+                key = key[:-4]
+            # local file header: 30 fixed bytes, name/extra lengths at
+            # offsets 26/28 (they can differ from the central directory)
+            f.seek(zinfo.header_offset)
+            hdr = f.read(30)
+            if len(hdr) != 30 or hdr[:4] != b"PK\x03\x04":
+                raise _Unmappable(zinfo.filename)
+            name_len = int.from_bytes(hdr[26:28], "little")
+            extra_len = int.from_bytes(hdr[28:30], "little")
+            f.seek(zinfo.header_offset + 30 + name_len + extra_len)
+            version = np.lib.format.read_magic(f)
+            if version == (1, 0):
+                shape, fortran, dtype = \
+                    np.lib.format.read_array_header_1_0(f)
+            elif version == (2, 0):
+                shape, fortran, dtype = \
+                    np.lib.format.read_array_header_2_0(f)
+            else:
+                raise _Unmappable(zinfo.filename)
+            if fortran:
+                raise _Unmappable(zinfo.filename)
+            out[key] = np.memmap(path, dtype=dtype, mode="r",
+                                 shape=shape, offset=f.tell())
+    return out
+
+
+def open_npz_arrays(path: str, label: str) -> Dict[str, np.ndarray]:
+    """Open an ``.npz`` as memmaps (eager fallback for compressed /
+    exotic members); clear errors naming ``label`` for missing or
+    corrupt files."""
+    if not os.path.exists(path):
+        raise ValueError(f"missing shard file {label} — artifact is "
+                         "incomplete (copy interrupted?)")
+    try:
+        return _npz_member_memmaps(path)
+    except _Unmappable:
+        pass
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        raise ValueError(
+            f"shard file {label} is truncated or corrupt ({e})") from e
+    try:
+        with np.load(path) as z:
+            return {name: z[name] for name in z.files}
+    except Exception as e:
+        raise ValueError(
+            f"shard file {label} is truncated or corrupt ({e})") from e
+
+
+def open_shard(directory: str, k: int) -> Dict[str, np.ndarray]:
+    """Open ``<directory>/shard_<k>.npz`` lazily (see
+    :func:`open_npz_arrays`)."""
+    path = os.path.join(directory, shard_filename(k))
+    return open_npz_arrays(path, path)
+
+
+#: budget (in f32 elements) for one [q, Lu, Lv] intersection
+#: temporary — bounds transient host RAM on the path whose whole point
+#: is indexes larger than RAM
+_INTERSECT_BUDGET = 1 << 22
+
+
+def _partial_query_np(hubs: np.ndarray, dist: np.ndarray,
+                      u: np.ndarray, v: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side mirror of ``labels.query_pairs`` over one shard's
+    mapped arrays — fancy indexing copies only the touched rows, and
+    the [q, Lu, Lv] intersection temporaries are Q-chunked to stay
+    within ``_INTERSECT_BUDGET`` elements."""
+    Q = len(u)
+    L2 = max(1, hubs.shape[1] * hubs.shape[1])
+    step = max(1, min(Q, _INTERSECT_BUDGET // L2))
+    best = np.empty(Q, dtype=np.float32)
+    hub = np.empty(Q, dtype=np.int32)
+    for s in range(0, Q, step):
+        hu = np.asarray(hubs[u[s:s + step]])
+        du = np.asarray(dist[u[s:s + step]], dtype=np.float32)
+        hv = np.asarray(hubs[v[s:s + step]])
+        dv = np.asarray(dist[v[s:s + step]], dtype=np.float32)
+        match = (hu[:, :, None] == hv[:, None, :]) & (hu[:, :, None] >= 0)
+        dd = np.where(match, du[:, :, None] + dv[:, None, :], np.inf)
+        b = dd.min(axis=(1, 2))
+        flat = dd.reshape(dd.shape[0], -1).argmin(axis=-1)
+        bi = flat // dd.shape[2]
+        best[s:s + step] = b
+        hub[s:s + step] = np.where(
+            np.isfinite(b),
+            np.take_along_axis(hu, bi[:, None], axis=1)[:, 0], -1)
+    return best, hub
+
+
+class SpillStore:
+    kind = "spill"
+
+    def __init__(self, shards: List[Dict[str, np.ndarray]]):
+        """``shards``: per-shard ``{hubs, dist, count}`` with hubs/dist
+        typically ``np.memmap`` views (``open`` builds them)."""
+        if not shards:
+            raise ValueError("SpillStore needs at least one shard")
+        self._shards = shards
+        # counts are [n] i32 — small; materialize for totals
+        self._counts = [np.asarray(s["count"]) for s in shards]
+
+    @classmethod
+    def open(cls, directory: str, num_shards: int) -> "SpillStore":
+        return cls([open_shard(directory, k) for k in range(num_shards)])
+
+    # ---------------------------------------------------- protocol
+
+    @property
+    def n(self) -> int:
+        return self._shards[0]["hubs"].shape[0]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def total_labels(self) -> int:
+        return int(sum(int(c.sum()) for c in self._counts))
+
+    def query(self, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        u = np.atleast_1d(np.asarray(u, np.int64))
+        v = np.atleast_1d(np.asarray(v, np.int64))
+        best = np.full(len(u), np.inf, dtype=np.float32)
+        hub = np.full(len(u), -1, dtype=np.int32)
+        for s in self._shards:
+            d, h = _partial_query_np(s["hubs"], s["dist"], u, v)
+            take = d < best
+            hub = np.where(take, h, hub)
+            best = np.where(take, d, best)
+        return best, hub
+
+    def to_table(self) -> LabelTable:
+        """Materializes everything — O(total label slots) host memory;
+        use only for offline analysis, never on the serving path."""
+        return DenseStore.from_shard_arrays(
+            arrs for _, arrs in self.shard_arrays()).to_table()
+
+    def shard_arrays(self) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+        for k, s in enumerate(self._shards):
+            yield k, {"hubs": s["hubs"], "dist": s["dist"],
+                      "count": self._counts[k]}
+
+    def label_bytes(self) -> int:
+        return self.total_labels * 8
+
+    def resident_bytes(self) -> int:
+        """Host bytes held eagerly (counts only — labels stay mapped)."""
+        return int(sum(c.nbytes for c in self._counts))
+
+    def is_mapped(self) -> bool:
+        """True when every shard's label arrays are memory-mapped."""
+        return all(isinstance(s["hubs"], np.memmap)
+                   and isinstance(s["dist"], np.memmap)
+                   for s in self._shards)

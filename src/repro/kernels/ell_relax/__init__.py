@@ -1,7 +1,10 @@
 from repro.kernels.ell_relax.ell_relax import ell_relax
 from repro.kernels.ell_relax.ops import (ELL_RELAX_ENV_VAR, ell_sweep,
-                                         kernel_fits, resolve_use_kernel)
+                                         kernel_fits, resolve_use_kernel,
+                                         vmem_fallback_note,
+                                         warn_vmem_fallback)
 from repro.kernels.ell_relax.ref import ell_sweep_ref
 
 __all__ = ["ell_relax", "ell_sweep", "ell_sweep_ref",
-           "resolve_use_kernel", "kernel_fits", "ELL_RELAX_ENV_VAR"]
+           "resolve_use_kernel", "kernel_fits", "ELL_RELAX_ENV_VAR",
+           "vmem_fallback_note", "warn_vmem_fallback"]

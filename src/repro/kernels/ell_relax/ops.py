@@ -22,14 +22,17 @@ Backend selection (``use_kernel``):
 VMEM note: the kernel stages the two [BB, n] gather-source planes in
 VMEM (an ELL row may pull from anywhere), ≈ ``8·BB·n`` bytes — 6.4 MB
 at BB=8, n=100k. Past `_KERNEL_MAX_N` the padded wrapper falls back
-to the reference rather than risk a VMEM OOM; sharding the source
-plane needs scalar-prefetch DMA and is future work (ROADMAP).
+to the reference rather than risk a VMEM OOM — announced by a
+one-time ``UserWarning`` (and a ``BuildReport.notes`` entry when the
+build goes through ``repro.index``); sharding the source plane needs
+scalar-prefetch DMA and is future work (ROADMAP).
 """
 
 from __future__ import annotations
 
 import functools
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +52,30 @@ def kernel_fits(n: int) -> bool:
     """Whether the fused kernel's VMEM-resident source planes fit for
     an n-vertex graph (past this, `ell_sweep` runs the reference)."""
     return n <= _KERNEL_MAX_N
+
+
+_vmem_fallback_warned = False
+
+
+def vmem_fallback_note(n: int) -> str:
+    return (f"ell_relax: n={n} exceeds the fused kernel's VMEM budget "
+            f"(n <= {_KERNEL_MAX_N}); relaxation sweeps run the jnp "
+            "reference. Sharding the gather-source plane via "
+            "scalar-prefetch DMA is an open ROADMAP item.")
+
+
+def warn_vmem_fallback(n: int) -> bool:
+    """If the fused kernel was *wanted* but ``n`` exceeds the VMEM cap,
+    emit a one-time ``UserWarning`` (the documented limit, visible at
+    runtime instead of only in ROADMAP.md). Returns True when the
+    fallback engaged."""
+    global _vmem_fallback_warned
+    if kernel_fits(n):
+        return False
+    if not _vmem_fallback_warned:
+        _vmem_fallback_warned = True
+        warnings.warn(vmem_fallback_note(n), stacklevel=3)
+    return True
 
 
 def resolve_use_kernel(use_kernel: bool | None = None, *,
@@ -93,8 +120,9 @@ def ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank, *,
     Returns (new_dist f32 [B, n], new_mrank i32 [B, n]).
     """
     interp = resolve_interpret(interpret)
-    kern = (resolve_use_kernel(use_kernel, interpret=interp)
-            and kernel_fits(dist.shape[1]))
+    kern = resolve_use_kernel(use_kernel, interpret=interp)
+    if kern and warn_vmem_fallback(dist.shape[1]):
+        kern = False
     return _ell_sweep_jit(dist, mrank, prop, alive, ell_src, ell_w,
                           rank, use_kernel=kern, interpret=interp)
 

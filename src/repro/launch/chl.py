@@ -60,6 +60,13 @@ def main(argv=None) -> dict:
                     help="default: auto = gamma*q")
     ap.add_argument("--compact", type=int, default=0)
     ap.add_argument("--cap", type=int, default=None)
+    ap.add_argument("--store", default="dense",
+                    choices=("dense", "sharded"),
+                    help="label residency of the built index "
+                         "(repro.index.store)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="hub partitions for --store sharded "
+                         "(default: mesh size)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--save-index", default=None,
@@ -99,7 +106,10 @@ def main(argv=None) -> dict:
                    rng.integers(0, g.n, args.queries))
         srv.flush()
         print("serving:", srv.stats())
-    return {"table": idx.table, "als": idx.report.als, "index": idx}
+    # no "table" key: materializing a dense copy here would defeat a
+    # --store sharded build; callers reach labels via index.store (or
+    # index.table when they accept the materialization cost)
+    return {"als": idx.report.als, "index": idx}
 
 
 if __name__ == "__main__":

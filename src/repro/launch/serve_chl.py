@@ -1,12 +1,16 @@
 """Query-serving launcher over a saved ``CHLIndex`` artifact.
 
     python -m repro.launch.serve_chl --index /tmp/chl_run/index \
-        --mode qdol --queries 4096 --batch-size 512
+        --mode qdol --queries 4096 --batch-size 512 \
+        --store sharded --shards 4
 
 Loads the versioned artifact written by ``repro.launch.chl`` (or
 ``CHLIndex.save``) and drives the batched ``QueryServer`` in any of
 the three §6.3 storage modes — construction and serving can live in
-different processes, which is the production shape.
+different processes, which is the production shape. ``--store``
+overrides the label residency: ``sharded`` re-homes the labels into
+hub partitions (``--shards`` picks K), ``spill`` memory-maps the
+shard segments so an index larger than host RAM still serves.
 """
 
 from __future__ import annotations
@@ -24,14 +28,22 @@ def main(argv=None) -> dict:
                     help="CHLIndex artifact directory")
     ap.add_argument("--mode", default="qlsn",
                     choices=("qlsn", "qfdl", "qdol"))
+    ap.add_argument("--store", default=None,
+                    choices=("dense", "sharded", "spill"),
+                    help="label residency override "
+                         "(default: the artifact's own layout)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="hub partitions when re-homing to sharded")
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--batch-size", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    idx = CHLIndex.load(args.index)
+    idx = CHLIndex.load(args.index, store=args.store,
+                        shards=args.shards)
     print(f"loaded index: n={idx.n} labels={idx.total_labels} "
-          f"ALS={idx.als:.1f} built-by={idx.plan.algo}")
+          f"ALS={idx.als:.1f} built-by={idx.plan.algo} "
+          f"store={idx.store.kind}/{idx.store.num_shards}")
     print("memory:", idx.memory_report())
 
     srv = idx.serve(mode=args.mode, batch_size=args.batch_size)

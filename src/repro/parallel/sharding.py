@@ -1,6 +1,8 @@
-"""Parameter-sharding resolver: logical axis names → NamedShardings.
+"""Sharding layouts: logical-axis resolution for model params, and the
+hub-ownership layout for partitioned label stores.
 
-One rule set serves every assigned architecture because resolution is
+**Parameter sharding** — logical axis names → NamedShardings. One rule
+set serves every assigned architecture because resolution is
 *shape-aware*: a mesh axis is silently dropped for a dimension it does
 not divide (e.g. 15 query heads or 4 KV heads vs a 16-way ``model``
 axis → the head dim falls back to replication and, where rules allow,
@@ -10,13 +12,24 @@ Two preset rule sets:
 - ``TP_RULES``   — megatron tensor parallelism on ``model`` only;
 - ``FSDP_RULES`` — TP + ZeRO-style sharding of the remaining large
   dimension over ``data`` (params and optimizer state).
+
+**Label sharding** — the paper's §5.1 construction layout: hub ``h``
+is owned by shard ``order_index(h) mod K`` (rank-descending
+round-robin), so every label ``(h, δ)`` of every vertex lives in
+exactly one shard and PPSD intersection decomposes exactly into
+per-shard partial mins. ``hub_owner`` / ``hub_partition_arrays`` are
+the one implementation of that layout, shared by
+``repro.index.store.ShardedStore`` (first-class sharded artifacts) and
+``repro.serve.backends.partition_by_hub`` (the QFDL view synthesized
+from a dense table).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -89,3 +102,53 @@ def batch_sharding(mesh: Mesh, rules: Dict[str, MeshAxes],
                    ndim: int, shape=None) -> NamedSharding:
     names = ["batch"] + [None] * (ndim - 1)
     return NamedSharding(mesh, spec_for(names, rules, mesh, shape))
+
+
+# --------------------------------------------------------------------
+# label-store sharding (§5.1 hub ownership)
+# --------------------------------------------------------------------
+
+def hub_owner(rank: np.ndarray, num_shards: int) -> np.ndarray:
+    """``owner[h]`` = shard owning hub ``h``: rank-descending
+    round-robin (§5.1: R(v) mod K), the construction-time assignment
+    ``assign_roots`` uses for root queues."""
+    order = np.argsort(-np.asarray(rank).astype(np.int64), kind="stable")
+    owner = np.empty(len(order), dtype=np.int64)
+    owner[order] = np.arange(len(order)) % max(1, num_shards)
+    return owner
+
+
+def hub_partition_arrays(hubs: np.ndarray, dist: np.ndarray,
+                         rank: np.ndarray, num_shards: int,
+                         shard_cap: Optional[int] = None
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split a padded ``[n, L]`` label table into the hub-partitioned
+    ``[K, n, Ls]`` layout (shard k keeps exactly the labels whose hub
+    it owns, rows compacted left).
+
+    Returns ``(hubs [K, n, Ls] i32, dist [K, n, Ls] f32,
+    count [K, n] i32)``; ``Ls`` defaults to the tightest per-shard
+    per-vertex cap. Exactness: each hub's labels land in exactly one
+    shard, so per-shard partial PPSD mins reduce to the dense answer.
+    """
+    hubs = np.asarray(hubs)
+    dist = np.asarray(dist)
+    n, L = hubs.shape
+    K = max(1, num_shards)
+    owner = hub_owner(rank, K)
+    valid = hubs >= 0
+    slot_owner = np.where(valid, owner[np.where(valid, hubs, 0)], -1)
+    count = np.stack([(slot_owner == k).sum(axis=1) for k in range(K)])
+    Ls = int(max(1, count.max())) if shard_cap is None else int(shard_cap)
+    if count.max() > Ls:
+        raise ValueError(f"shard_cap={Ls} < max per-shard row "
+                         f"{int(count.max())}")
+    out_h = np.full((K, n, Ls), -1, dtype=np.int32)
+    out_d = np.full((K, n, Ls), np.inf, dtype=np.float32)
+    for k in range(K):
+        mine = slot_owner == k                     # [n, L]
+        dest = np.cumsum(mine, axis=1) - 1         # slot within row
+        rows, cols = np.nonzero(mine)
+        out_h[k, rows, dest[rows, cols]] = hubs[rows, cols]
+        out_d[k, rows, dest[rows, cols]] = dist[rows, cols]
+    return out_h, out_d, count.astype(np.int32)

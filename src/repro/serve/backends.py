@@ -1,25 +1,38 @@
 """Storage-mode wiring for PPSD query serving (QLSN / QFDL / QDOL).
 
-One place that knows how to turn a label table into an ``answer(u, v)
--> dist`` callable for each of the paper's §6.3 storage modes —
-previously open-coded in ``QueryServer.build`` and re-open-coded by
-every example/benchmark. ``CHLIndex.serve`` and ``QueryServer.build``
-both route through here.
+One place that knows how to turn a **label store** into an
+``answer(u, v) -> dist`` callable for each of the paper's §6.3 storage
+modes — previously open-coded in the ``QueryServer`` build shim and
+re-open-coded by every example/benchmark. ``CHLIndex.serve`` and the
+deprecated shim both route through here; nothing in this module
+reaches into a store's internal arrays except through the
+``repro.index.store`` protocol.
 
-- **qlsn**: replicated table, local intersection (Pallas-accelerated
-  path lives in ``repro.kernels.label_query``; the jnp reference is
-  used here for portability).
-- **qfdl**: hub-partitioned ``[q, n, L]`` table + ``pmin`` reduce. If
-  no construction-time partitioned table is supplied, one is
-  synthesized by round-robin hub ownership (the construction layout of
-  §5.1: ``owner(h) = order_index(h) mod q``).
-- **qdol**: ζ-partition overlapping stores; layout + store are built
-  here so callers never touch ``qdol_layout``/``qdol_build``.
+Per store backend:
+
+- **DenseStore** (and bare ``LabelTable``s, auto-wrapped):
+  - *qlsn*: replicated table, local intersection;
+  - *qfdl*: hub-partitioned ``[q, n, L]`` table + ``pmin`` reduce. If
+    no construction-time partitioned table is supplied, one is
+    synthesized by round-robin hub ownership (the construction layout
+    of §5.1: ``owner(h) = order_index(h) mod q``);
+  - *qdol*: ζ-partition overlapping stores; layout + store are built
+    here so callers never touch ``qdol_layout``/``qdol_build``.
+- **ShardedStore**: the store's own hub partitions answer the query —
+  QFDL made real instead of synthesized. When the mesh size matches
+  the shard count, shard k lives on device k and ``qfdl_fn`` runs the
+  partial-min + ``pmin`` as a ``shard_map``; otherwise the identical
+  computation runs time-multiplexed on one device (vmapped partial
+  mins + one reduction). *qdol* materializes the dense table once
+  (the ζ-overlap layout needs full label rows).
+- **SpillStore**: QLSN from the memory-mapped shard segments (host
+  numpy — capacity over latency). The distributed modes need labels
+  in device memory; asking for them raises with guidance.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +41,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import query as qm
 from repro.core.labels import LabelTable
+from repro.index.store import (DenseStore, LabelStore, ShardedStore,
+                               SpillStore)
+from repro.parallel.sharding import hub_partition_arrays
 
 MODES = ("qlsn", "qfdl", "qdol")
 
@@ -41,39 +57,26 @@ def partition_by_hub(table: LabelTable, rank: np.ndarray, mesh
     would have generated (rank-order round-robin, §5.1)."""
     q = int(mesh.devices.size)
     n, L = table.hubs.shape
-    order = np.argsort(-np.asarray(rank).astype(np.int64), kind="stable")
-    owner = np.empty(n, dtype=np.int64)
-    owner[order] = np.arange(n) % q
-    th = np.asarray(table.hubs)
-    td = np.asarray(table.dist)
-    hubs = np.full((q, n, L), -1, dtype=np.int32)
-    dist = np.full((q, n, L), np.inf, dtype=np.float32)
-    count = np.zeros((q, n), dtype=np.int32)
-    hub_owner = np.where(th >= 0, owner[np.where(th >= 0, th, 0)], -1)
-    for k in range(q):
-        mine = hub_owner == k                     # [n, L]
-        dest = np.cumsum(mine, axis=1) - 1        # slot within row
-        rows, cols = np.nonzero(mine)
-        hubs[k, rows, dest[rows, cols]] = th[rows, cols]
-        dist[k, rows, dest[rows, cols]] = td[rows, cols]
-        count[k] = mine.sum(axis=1)
+    hubs, dist, count = hub_partition_arrays(
+        np.asarray(table.hubs), np.asarray(table.dist), rank, q,
+        shard_cap=L)
     sh = NamedSharding(mesh, P("node"))
     return LabelTable(jax.device_put(jnp.asarray(hubs), sh),
                       jax.device_put(jnp.asarray(dist), sh),
                       jax.device_put(jnp.asarray(count), sh))
 
 
-def make_answer_fn(table: LabelTable, mode: str = "qlsn", *,
-                   mesh=None, partitioned: Optional[LabelTable] = None,
-                   rank: Optional[np.ndarray] = None) -> AnswerFn:
-    """Answer callable for a storage mode; absorbs mesh/layout/store
-    ceremony. ``mesh`` defaults to all local devices for the
-    distributed modes; ``partitioned`` (construction-time layout) is
-    synthesized from ``rank`` when absent."""
+def _as_store(store_or_table: Union[LabelStore, LabelTable]) -> LabelStore:
+    if isinstance(store_or_table, LabelTable):
+        return DenseStore(store_or_table)
+    return store_or_table
+
+
+def _dense_answer_fn(table: LabelTable, mode: str, *, mesh,
+                     partitioned: Optional[LabelTable],
+                     rank: Optional[np.ndarray]) -> AnswerFn:
     if mode == "qlsn":
         return jax.jit(lambda u, v: qm.qlsn(table, u, v))
-    if mode not in MODES:
-        raise ValueError(f"unknown query mode {mode!r}; one of {MODES}")
     if mesh is None:
         from repro.core.dgll import make_node_mesh
         mesh = make_node_mesh()
@@ -91,3 +94,49 @@ def make_answer_fn(table: LabelTable, mode: str = "qlsn", *,
     store = qm.qdol_build(table, layout, mesh)
     f = qm.qdol_fn(mesh, layout)
     return lambda u, v: f(store, u, v)
+
+
+def _sharded_answer_fn(store: ShardedStore, mode: str, *, mesh,
+                       partitioned: Optional[LabelTable],
+                       rank: Optional[np.ndarray]) -> AnswerFn:
+    if mode == "qfdl" and mesh is not None \
+            and int(mesh.devices.size) == store.num_shards:
+        # the real thing: shard k on device k, partial min + pmin
+        part = store.as_partitioned(mesh)
+        f = qm.qfdl_fn(mesh)
+        return lambda u, v: f(part, u, v)
+    if mode in ("qlsn", "qfdl"):
+        # same partial-min + cross-shard reduction, time-multiplexed
+        # on the local device(s)
+        return lambda u, v: jnp.asarray(store.query(u, v)[0])
+    # qdol needs full label rows per vertex — materialize once
+    return _dense_answer_fn(store.to_table(), mode, mesh=mesh,
+                            partitioned=partitioned, rank=rank)
+
+
+def make_answer_fn(store: Union[LabelStore, LabelTable],
+                   mode: str = "qlsn", *,
+                   mesh=None, partitioned: Optional[LabelTable] = None,
+                   rank: Optional[np.ndarray] = None) -> AnswerFn:
+    """Answer callable for a storage mode; absorbs mesh/layout/store
+    ceremony. Accepts any ``repro.index.store`` backend (bare
+    ``LabelTable``s are wrapped dense). ``mesh`` defaults to all local
+    devices for the distributed modes; ``partitioned``
+    (construction-time layout) is synthesized from ``rank`` when
+    absent."""
+    if mode not in MODES:
+        raise ValueError(f"unknown query mode {mode!r}; one of {MODES}")
+    store = _as_store(store)
+    if isinstance(store, SpillStore):
+        if mode != "qlsn":
+            raise NotImplementedError(
+                f"mode {mode!r} needs labels in device memory; a spill "
+                "store serves qlsn only — reload with store='dense' or "
+                "'sharded' for the distributed modes")
+        return lambda u, v: jnp.asarray(
+            store.query(np.asarray(u), np.asarray(v))[0])
+    if isinstance(store, ShardedStore):
+        return _sharded_answer_fn(store, mode, mesh=mesh,
+                                  partitioned=partitioned, rank=rank)
+    return _dense_answer_fn(store.to_table(), mode, mesh=mesh,
+                            partitioned=partitioned, rank=rank)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, List, Optional
 
 import jax
@@ -83,6 +84,10 @@ class QueryServer:
               mesh=None, partitioned: Optional[LabelTable] = None,
               batch_size: int = 1024, rank=None) -> "QueryServer":
         """Deprecated shim — use ``repro.index.CHLIndex.serve``."""
+        warnings.warn(
+            "QueryServer.build is a deprecated engine-layer shim; "
+            "serve through repro.index (build(...).serve(mode=...))",
+            DeprecationWarning, stacklevel=2)
         fn = backends.make_answer_fn(table, mode, mesh=mesh,
                                      partitioned=partitioned, rank=rank)
         return QueryServer(fn, batch_size=batch_size)

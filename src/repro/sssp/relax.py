@@ -65,7 +65,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ell_relax import (ell_sweep, kernel_fits,
-                                     resolve_use_kernel)
+                                     resolve_use_kernel,
+                                     warn_vmem_fallback)
 
 Array = jax.Array
 BlockFn = Callable[[Array, Array], Array]   # (dist [B,n], roots [B]) -> blocked [B,n]
@@ -161,7 +162,9 @@ def batched_sssp_maxrank(
     # gating/stride defaults must track the path that actually runs:
     # past the kernel's VMEM cap ell_sweep falls back to the reference,
     # where gating + striding would only add work
-    kern = resolve_use_kernel(use_kernel) and kernel_fits(n)
+    kern = resolve_use_kernel(use_kernel)
+    if kern and warn_vmem_fallback(n):
+        kern = False
     gated = kern if frontier_gating is None else bool(frontier_gating)
     stride = ((DEFAULT_CHECK_EVERY if kern else 1)
               if check_every is None else check_every)

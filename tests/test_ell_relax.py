@@ -259,3 +259,44 @@ def test_explicit_env_kernel_end_to_end(monkeypatch):
     t_k, _ = plant_chl(g, rank, batch=8)
     jax.clear_caches()
     assert lbl.to_numpy_sets(t_k) == lbl.to_numpy_sets(t_ref)
+
+
+def test_vmem_fallback_warns_once_and_lands_in_report(monkeypatch):
+    """Past the kernel's VMEM cap the sweep silently ran the jnp
+    reference; now the first fallback warns (once) and `build` records
+    the limit in BuildReport.notes."""
+    import warnings
+
+    from repro.kernels.ell_relax import ops
+
+    rng = np.random.default_rng(0)
+    B, n, deg = 4, 32, 4
+    dist, mrank, prop, alive, ell_src, ell_w, rank = _rand_sweep_state(
+        rng, B, n, deg)
+
+    monkeypatch.setattr(ops, "_KERNEL_MAX_N", 16)   # n=32 exceeds it
+    monkeypatch.setattr(ops, "_vmem_fallback_warned", False)
+    with pytest.warns(UserWarning, match="VMEM"):
+        got = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank,
+                        use_kernel=True)
+    # one-time: a second oversized sweep stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        again = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w,
+                          rank, use_kernel=True)
+    # and the fallback really ran the reference
+    want = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank,
+                     use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(again[1]),
+                                  np.asarray(want[1]))
+
+    # build(): the limit is visible in the report, not only at runtime
+    from repro.index import BuildPlan, build
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "kernel")
+    monkeypatch.setattr(ops, "_vmem_fallback_warned", True)  # quiet
+    g = grid_road(5, 5, seed=1)
+    idx = build(g, degree_ranking(g), BuildPlan(algo="plant", batch=8))
+    assert any("VMEM" in note for note in idx.report.notes)
+    assert any("VMEM" in n2 for n2 in
+               type(idx.report).from_dict(idx.report.to_dict()).notes)

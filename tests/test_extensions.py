@@ -71,11 +71,11 @@ def test_chl_launcher_checkpoint_resume(tmp_path):
     g = scale_free(80, attach=2, seed=0)
     from repro.graphs.ranking import degree_ranking
     ref = pll_undirected(g, degree_ranking(g))
-    validate.check_equal(to_numpy_sets(out["table"]), ref)
+    validate.check_equal(to_numpy_sets(out["index"].table), ref)
 
     # resume from the final cursor: no more work, same table
     out2 = chl_main(["--graph", "scalefree", "--n", "80",
                      "--algo", "hybrid", "--batch", "4",
                      "--ckpt-dir", str(tmp_path), "--resume"])
-    validate.check_equal(to_numpy_sets(out2["table"]),
-                         to_numpy_sets(out["table"]))
+    validate.check_equal(to_numpy_sets(out2["index"].table),
+                         to_numpy_sets(out["index"].table))

@@ -1,0 +1,362 @@
+"""Pluggable label stores: dense/sharded/spill parity, the v1→v2
+format migration, per-shard integrity errors, and the engine-layer
+deprecation hygiene."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import labels as lbl
+from repro.graphs import grid_road, scale_free
+from repro.graphs.ranking import degree_ranking
+from repro.index import (BuildPlan, CHLIndex, DenseStore, ShardedStore,
+                         SpillStore, build)
+from repro.index.artifact import rank_hash
+from repro.index.store import shard_filename
+
+
+def small_graph():
+    g = scale_free(48, attach=2, seed=3)
+    return g, degree_ranking(g)
+
+
+def query_batch(n, count=96, seed=5):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, n, count).astype(np.int32),
+            rng.integers(0, n, count).astype(np.int32))
+
+
+# ------------------------------------------------------------- parity
+
+def test_sharded_store_query_parity_with_dense():
+    """Acceptance: a 2-shard ShardedStore returns distances identical
+    to the dense index on the same build."""
+    g, rank = small_graph()
+    dense = build(g, rank, BuildPlan(algo="plant", batch=8))
+    sharded = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                       store="sharded", shards=2))
+    assert isinstance(dense.store, DenseStore)
+    assert isinstance(sharded.store, ShardedStore)
+    assert sharded.store.num_shards == 2
+    assert sharded.total_labels == dense.total_labels
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(sharded.query(u, v), dense.query(u, v))
+    # witness hubs are real witnesses even if tie-broken differently
+    d, h = sharded.query_with_hub(u, v)
+    finite = np.isfinite(d)
+    assert (h[finite] >= 0).all() and (h[~finite] == -1).all()
+
+
+def test_sharded_store_partition_is_exact_by_hub():
+    """Every label lands in exactly one shard (hub ownership)."""
+    g, rank = small_graph()
+    dense = build(g, rank, BuildPlan(algo="plant", batch=8))
+    st = ShardedStore.from_table(dense.table, rank, 3)
+    merged = lbl.to_numpy_sets(st.to_table())
+    assert merged == lbl.to_numpy_sets(dense.table)
+
+
+def test_serve_mode_parity_dense_vs_sharded():
+    """Acceptance: dense vs 2-shard parity across all three serve
+    modes."""
+    from repro.core.dgll import make_node_mesh
+    g, rank = small_graph()
+    mesh = make_node_mesh(1)
+    dense = build(g, rank, BuildPlan(algo="plant", batch=8))
+    sharded = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                       store="sharded", shards=2))
+    u, v = query_batch(g.n)
+    ref = dense.query(u, v)
+    for idx in (dense, sharded):
+        for mode in ("qlsn", "qfdl", "qdol"):
+            srv = idx.serve(mode=mode, mesh=mesh, batch_size=32)
+            srv.submit(u, v)
+            np.testing.assert_array_equal(srv.flush(), ref)
+
+
+def test_spill_store_serves_without_materializing(tmp_path):
+    """Acceptance: SpillStore serves a saved index with labels
+    memory-mapped, not resident."""
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    loaded = CHLIndex.load(path, store="spill")
+    assert isinstance(loaded.store, SpillStore)
+    assert loaded.store.is_mapped()          # labels are np.memmap views
+    # eager host residency is just the per-shard counts
+    assert loaded.store.resident_bytes() < loaded.store.label_bytes()
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(loaded.query(u, v), idx.query(u, v))
+    srv = loaded.serve(mode="qlsn", batch_size=32)
+    srv.submit(u, v)
+    np.testing.assert_array_equal(srv.flush(), idx.query(u, v))
+    with pytest.raises(NotImplementedError, match="spill"):
+        loaded.serve(mode="qfdl")
+
+
+# -------------------------------------------------- format migration
+
+def write_v1_artifact(directory, idx, rank):
+    """A pre-store artifact, byte-layout of format version 1."""
+    os.makedirs(directory)
+    t = idx.table
+    np.savez(os.path.join(directory, "arrays.npz"), rank=rank,
+             hubs=np.asarray(t.hubs), dist=np.asarray(t.dist),
+             count=np.asarray(t.count))
+    manifest = {"format": "repro.index/chl", "version": 1,
+                "plan": idx.plan.to_dict(),
+                "report": idx.report.to_dict(),
+                "rank_hash": rank_hash(rank), "directed": False,
+                "n": idx.n, "total_labels": idx.total_labels,
+                "als": idx.als}
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def test_v1_artifact_loads_dense_bit_identical(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="gll", batch=4))
+    d = str(tmp_path / "v1")
+    write_v1_artifact(d, idx, rank)
+    loaded = CHLIndex.load(d, rank=rank)
+    assert isinstance(loaded.store, DenseStore)
+    t1, t2 = idx.table, loaded.table
+    np.testing.assert_array_equal(np.asarray(t1.hubs),
+                                  np.asarray(t2.hubs))
+    np.testing.assert_array_equal(np.asarray(t1.dist),
+                                  np.asarray(t2.dist))
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(loaded.query(u, v), idx.query(u, v))
+
+
+def test_v1_artifact_resaves_as_v2_and_spills(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    d = str(tmp_path / "v1")
+    write_v1_artifact(d, idx, rank)
+    u, v = query_batch(g.n)
+    # v1 can be opened spilled directly (one big mapped shard)
+    spilled = CHLIndex.load(d, store="spill")
+    assert spilled.store.is_mapped()
+    np.testing.assert_array_equal(spilled.query(u, v), idx.query(u, v))
+    # load → save migrates to v2 per-shard layout
+    p2 = CHLIndex.load(d).save(str(tmp_path / "v2"))
+    with open(os.path.join(p2, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 2
+    assert manifest["store"]["shards"] == 1
+    assert os.path.exists(os.path.join(p2, shard_filename(0)))
+    np.testing.assert_array_equal(CHLIndex.load(p2).query(u, v),
+                                  idx.query(u, v))
+
+
+@pytest.mark.parametrize("store_kind", ["sharded", "spill"])
+def test_v2_sharded_round_trip(tmp_path, store_kind):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    loaded = CHLIndex.load(path, rank=rank, store=store_kind)
+    assert loaded.store.kind == store_kind
+    assert loaded.store.num_shards == 2
+    assert loaded.total_labels == idx.total_labels
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(loaded.query(u, v), idx.query(u, v))
+    # round-trip again from the loaded store
+    p2 = loaded.save(str(tmp_path / "idx2"))
+    again = CHLIndex.load(p2, rank=rank)
+    np.testing.assert_array_equal(again.query(u, v), idx.query(u, v))
+
+
+def test_v2_rank_hash_rejection_per_shard_layout(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    wrong = rank.copy()
+    wrong[:2] = wrong[1::-1]
+    with pytest.raises(ValueError, match="rank-hash mismatch"):
+        CHLIndex.load(path, rank=wrong)
+    # tampered stored rank is also rejected
+    np.save(os.path.join(path, "rank.npy"), wrong)
+    with pytest.raises(ValueError, match="corrupt"):
+        CHLIndex.load(path)
+
+
+def test_missing_shard_file_clear_error(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    os.remove(os.path.join(path, shard_filename(1)))
+    with pytest.raises(ValueError, match="missing shard file"):
+        CHLIndex.load(path)
+
+
+def test_truncated_shard_file_clear_error(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    shard = os.path.join(path, shard_filename(0))
+    data = open(shard, "rb").read()
+    with open(shard, "wb") as f:
+        f.write(data[:len(data) // 3])
+    with pytest.raises(ValueError, match="truncated or corrupt"):
+        CHLIndex.load(path)
+
+
+def test_tampered_shard_labels_clear_error(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    shard = os.path.join(path, shard_filename(0))
+    with np.load(shard) as z:
+        arrs = {k: z[k] for k in z.files}
+    arrs["count"] = np.zeros_like(arrs["count"])
+    np.savez(shard, **arrs)
+    with pytest.raises(ValueError, match="manifest recorded"):
+        CHLIndex.load(path)
+
+
+def test_load_rehomes_between_kinds(tmp_path):
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    path = idx.save(str(tmp_path / "idx"))
+    u, v = query_batch(g.n)
+    ref = idx.query(u, v)
+    resharded = CHLIndex.load(path, store="sharded", shards=3)
+    assert resharded.store.num_shards == 3
+    np.testing.assert_array_equal(resharded.query(u, v), ref)
+    densified = CHLIndex.load(str(tmp_path / "idx"), store="dense")
+    assert isinstance(densified.store, DenseStore)
+    np.testing.assert_array_equal(densified.query(u, v), ref)
+
+
+# --------------------------------------------------------- plan knobs
+
+def test_plan_store_validation():
+    with pytest.raises(ValueError, match="spill"):
+        BuildPlan(store="spill")
+    with pytest.raises(ValueError):
+        BuildPlan(store="bogus")
+    with pytest.raises(ValueError):
+        BuildPlan(store="sharded", shards=0)
+    plan = BuildPlan(store="sharded", shards=4)
+    assert BuildPlan.from_dict(plan.to_dict()) == plan
+
+
+def test_directed_build_rejects_sharded_store():
+    from repro.graphs import random_connected
+    g = random_connected(16, extra_edges=12, seed=0, directed=True)
+    with pytest.raises(ValueError, match="dense"):
+        build(g, degree_ranking(g),
+              BuildPlan(algo="directed", store="sharded"))
+
+
+def test_memory_report_store_breakdown():
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    rep = idx.memory_report(q=8)
+    assert rep["store"] == "sharded" and rep["shards"] == 2
+    assert sum(rep["shard_bytes"]) == idx.store.label_bytes()
+    assert rep["qfdl_total"] < rep["qdol_total"] < rep["qlsn_total"]
+
+
+# --------------------------------------------- deprecation + hygiene
+
+def test_engine_shims_raise_deprecation_warning():
+    g, rank = small_graph()
+    import repro.core as core
+    with pytest.warns(DeprecationWarning, match="engine-layer shim"):
+        table, _ = core.plant_chl(g, rank, batch=8)
+    from repro.serve.query_server import QueryServer
+    with pytest.warns(DeprecationWarning, match="engine-layer shim"):
+        QueryServer.build(table, mode="qlsn", batch_size=32)
+
+
+SHIM_NAMES = ("plant_chl", "gll_chl", "lcc_chl", "parapll_chl",
+              "dgll_chl", "hybrid_chl", "plant_distributed_chl",
+              "plant_directed_chl")
+
+
+def test_no_engine_shim_call_sites_outside_index():
+    """Mirrors ``test_no_direct_unstable_imports``: the per-algo
+    ``*_chl`` constructors and ``QueryServer.build`` are the deprecated
+    engine layer — no in-repo call sites outside ``repro/index/`` and
+    tests."""
+    import pathlib
+    import re
+    root = pathlib.Path(__file__).resolve().parents[1]
+    import_pat = re.compile(
+        r"from\s+repro\.core(?:\.\w+)?\s+import\s+[^\n]*\b("
+        + "|".join(SHIM_NAMES) + r")\b")
+    offenders = []
+    for base in ("src", "examples", "benchmarks"):
+        for path in sorted((root / base).rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel.startswith(("src/repro/core/", "src/repro/index/")):
+                continue                 # the engine layer + its facade
+            text = path.read_text()
+            m = import_pat.search(text)
+            if m:
+                offenders.append(f"{rel}: imports engine shim "
+                                 f"{m.group(1)}")
+            if ("QueryServer.build" in text
+                    and rel != "src/repro/serve/query_server.py"):
+                offenders.append(f"{rel}: calls QueryServer.build")
+    assert not offenders, (
+        "deprecated engine-layer shims used outside repro/index and "
+        "tests:\n  " + "\n  ".join(offenders))
+
+
+def test_qfdl_shard_native_on_matching_mesh():
+    """When the mesh size equals the shard count, QFDL serves straight
+    from the store's own partitions (shard k on device k, shard_map +
+    pmin) — exercised on a real 2-device mesh in a subprocess (the
+    main session keeps the 1-device host platform)."""
+    import subprocess
+    import sys
+    child = r"""
+import numpy as np
+from repro.compat import set_host_device_count
+set_host_device_count(2)
+from repro.core.dgll import make_node_mesh
+from repro.graphs import scale_free
+from repro.graphs.ranking import degree_ranking
+from repro.index import BuildPlan, build
+from repro.serve import backends
+
+g = scale_free(48, attach=2, seed=3)
+rank = degree_ranking(g)
+idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                               store="sharded", shards=2))
+mesh = make_node_mesh(2)
+assert int(mesh.devices.size) == idx.store.num_shards == 2
+rng = np.random.default_rng(5)
+u = rng.integers(0, g.n, 96).astype(np.int32)
+v = rng.integers(0, g.n, 96).astype(np.int32)
+ref = idx.query(u, v)
+# the mesh-matched branch: store partitions placed shard-per-device
+part = idx.store.as_partitioned(mesh)
+assert part.hubs.shape[0] == 2
+fn = backends.make_answer_fn(idx.store, "qfdl", mesh=mesh,
+                             rank=idx.rank)
+np.testing.assert_array_equal(np.asarray(fn(u, v)), ref)
+srv = idx.serve(mode="qfdl", mesh=mesh, batch_size=32)
+srv.submit(u, v)
+np.testing.assert_array_equal(srv.flush(), ref)
+print("QFDL_SHARD_NATIVE_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", child], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "QFDL_SHARD_NATIVE_OK" in out.stdout
