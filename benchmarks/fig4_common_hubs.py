@@ -11,7 +11,8 @@ import numpy as np
 from benchmarks.common import Row, bench_graphs, row
 from repro.core import labels as lbl
 from repro.core.gll import construct_batch
-from repro.core.plant import plant_batch, _batches
+from repro.core.plant import plant_batch
+from repro.engine import root_batches
 
 
 def _labels_with_topx(g, rank, x: int) -> int:
@@ -28,7 +29,7 @@ def _labels_with_topx(g, rank, x: int) -> int:
         hc, _ = lbl.insert_batch(hc, roots, tb.emit, tb.dist)
     empty = lbl.empty(n, 1)
     total = 0
-    for roots, valid in _batches(order, 16):
+    for roots, valid in root_batches(order, 16):
         bl = construct_batch(jnp.asarray(g.ell_src),
                              jnp.asarray(g.ell_w),
                              jnp.asarray(rank.astype(np.int32)),

@@ -105,6 +105,16 @@ def _run_ell_relax(mode: str, note: str, rng) -> List[Row]:
     idx, t = timed(lambda: build(g, gr, plan), repeat=1)
     out.append(row("kernels/ell_relax/plant_chl_e2e", t,
                    f"{name} n={g.n} batch=16"))
+
+    # engine streaming build: same construction, emissions
+    # hub-partitioned straight into 2 shard arrays (the dense [n, cap]
+    # table is never materialized) — tracks the streaming-sink tax
+    # alongside the dense path above
+    splan = BuildPlan(algo="plant", batch=16, store="sharded", shards=2)
+    sidx, t = timed(lambda: build(g, gr, splan), repeat=1)
+    assert sidx.store.kind == "sharded"
+    out.append(row("engine/streaming_sharded_build_e2e", t,
+                   f"{name} n={g.n} batch=16 shards=2"))
     out += _run_label_store(idx, g, rng)
     return out
 

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.core import labels as lbl
 from repro.core import validate
 from repro.core.dgll import assign_roots
-from repro.core.plant import plant_batch, _batches
+from repro.core.plant import plant_batch
+from repro.engine import root_batches
 from repro.core.pll import pll_undirected
 from repro.ft import HeartbeatMonitor, lost_roots
 from repro.graphs import scale_free
@@ -39,7 +40,7 @@ def main() -> None:
 
     def plant_roots(roots: np.ndarray):
         nonlocal table
-        for rb, vb in _batches(roots.astype(np.int32), 16):
+        for rb, vb in root_batches(roots.astype(np.int32), 16):
             safe = np.where(rb >= 0, rb, 0)
             tb = plant_batch(ell_src, ell_w, rank_d, jnp.asarray(safe),
                              jnp.asarray(vb & (rb >= 0)))

@@ -109,6 +109,16 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def peek(self, step: Optional[int] = None) -> Dict:
+        """The ``data_state`` of a committed step without loading its
+        arrays — resume-compatibility checks (``repro.engine``) decide
+        from the manifest alone whether a restore is worth doing."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f).get("data_state", {})
+
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Optional[Any] = None
                 ) -> Tuple[Any, int, Dict]:

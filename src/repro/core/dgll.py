@@ -273,4 +273,4 @@ def dgll_chl(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
     return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
                            first_superstep=first_superstep, cap=cap,
                            eta=eta, hc_cap=hc_cap, psi_threshold=0.0,
-                           compact=compact, **kw)
+                           compact=compact, algo_name="dgll", **kw)

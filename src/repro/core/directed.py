@@ -14,37 +14,25 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import labels as lbl
 from repro.core.labels import LabelTable
-from repro.core.plant import plant_batch, _batches
 
 
 def plant_directed_chl(g, rank: np.ndarray, *, batch: int = 16,
-                       cap: Optional[int] = None
+                       cap: Optional[int] = None, ckpt=None,
+                       resume: bool = False
                        ) -> Tuple[LabelTable, LabelTable]:
-    """Returns ``(L_out, L_in)`` tables for a directed graph."""
+    """Returns ``(L_out, L_in)`` tables for a directed graph.
+
+    Thin wrapper over the superstep engine
+    (``repro.engine.DirectedPlantPolicy`` — two PLaNTed trees per root
+    batch, emitted into the sink's ``out``/``in`` channels), which also
+    gives directed builds checkpoint/resume via ``ckpt``.
+    """
     assert g.directed
-    n = g.n
-    cap = cap or lbl.default_cap(n)
-    gr = g.reverse()
-    order = np.argsort(-rank.astype(np.int64), kind="stable")
-    l_in = lbl.empty(n, cap)
-    l_out = lbl.empty(n, cap)
-    rank_d = jnp.asarray(rank.astype(np.int32))
-    fwd = (jnp.asarray(g.ell_src), jnp.asarray(g.ell_w))      # pull on G
-    bwd = (jnp.asarray(gr.ell_src), jnp.asarray(gr.ell_w))    # pull on Gᵀ
-    # overflow accumulates on device; one host check after the loop
-    overflow = jnp.zeros((), dtype=bool)
-    for roots, valid in _batches(order, batch):
-        r, v = jnp.asarray(roots), jnp.asarray(valid)
-        tb_f = plant_batch(fwd[0], fwd[1], rank_d, r, v)
-        l_in, o1 = lbl.insert_batch(l_in, r, tb_f.emit, tb_f.dist)
-        tb_b = plant_batch(bwd[0], bwd[1], rank_d, r, v)
-        l_out, o2 = lbl.insert_batch(l_out, r, tb_b.emit, tb_b.dist)
-        overflow = overflow | o1 | o2
-    if bool(overflow):
-        raise lbl.LabelOverflowError(cap)
-    return l_out, l_in
+    from repro.engine import run_build
+    res = run_build(g, rank, algo="directed", batch=batch, cap=cap,
+                    ckpt=ckpt, resume=resume)
+    return res.sink.table("out"), res.sink.table("in")
 
 
 def query_directed(l_out: LabelTable, l_in: LabelTable, u, v, *,

@@ -18,12 +18,18 @@ The construction/cleaning correctness argument under batching —
 including why optimistically emitted labels can carry inflated
 distances and why DQ_Clean provably removes exactly the non-canonical
 ones — is spelled out in DESIGN.md §2 A3.
+
+This module keeps only the jitted batch kernels
+(``construct_batch`` / ``clean_superstep``); the host superstep loop —
+batching, α-threshold flushes, stats, checkpoint/resume — lives in
+``repro.engine`` (``GLLPolicy``), and the ``*_chl`` functions are thin
+wrappers over it.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +37,6 @@ import numpy as np
 
 from repro.core import labels as lbl
 from repro.core.labels import LabelTable
-from repro.core.plant import plant_batch, _batches
 from repro.sssp import relax
 
 Array = jax.Array
@@ -102,88 +107,53 @@ def clean_superstep(glob: LabelTable, loc: LabelTable, rank: Array,
     return emit & (best > rank[roots][:, None])
 
 
+def _legacy_stats(res) -> dict:
+    """Engine records → the historical GLL counters dict."""
+    return {"supersteps": len(res.records),
+            "cleaned": res.counters.get("cleaned", 0),
+            "constructed": res.counters.get("constructed", 0),
+            "superstep_sizes": [r.trees for r in res.records]}
+
+
 def gll_chl(g, rank: np.ndarray, *, batch: int = 8,
             alpha: Optional[float] = 4.0, cap: Optional[int] = None,
             rank_queries: bool = True, clean: bool = True,
             plant_first_superstep: bool = False,
+            ckpt=None, resume: bool = False,
             ) -> Tuple[LabelTable, dict]:
     """GLL (α finite), LCC (``alpha=None`` → clean once at end), or the
     paraPLL baseline (``rank_queries=False, clean=False``).
 
-    Returns (global label table, stats).
+    Thin wrapper over the superstep engine: ``repro.engine`` owns the
+    batching, α-threshold flush commits, and (new) checkpoint/resume
+    at flush boundaries via ``ckpt``. Returns (global label table,
+    stats).
     """
-    n = g.n
-    cap = cap or lbl.default_cap(n)
-    order = np.argsort(-rank.astype(np.int64), kind="stable")
-    ell_src = jnp.asarray(g.ell_src)
-    ell_w = jnp.asarray(g.ell_w)
-    rank_d = jnp.asarray(rank.astype(np.int32))
-    glob = lbl.empty(n, cap)
-    loc = lbl.empty(n, cap)
-    pending: List[BatchLabels] = []
-    local_labels = 0
-    threshold = np.inf if alpha is None else alpha * n
-    stats = {"supersteps": 0, "cleaned": 0, "constructed": 0,
-             "superstep_sizes": []}
-    # overflow accumulates on device and is checked once after the
-    # loop. Note the construction loop still blocks once per batch on
-    # the emitted-label count — the α-threshold flush decision needs
-    # it on the host; only the redundant overflow sync is removed.
-    overflow = jnp.zeros((), dtype=bool)
-
-    def flush():
-        nonlocal glob, loc, pending, local_labels, overflow
-        if not pending:
-            return
-        roots = jnp.concatenate([b.roots for b in pending])
-        emit = jnp.concatenate([b.emit for b in pending])
-        dist = jnp.concatenate([b.dist for b in pending])
-        if clean:
-            red = clean_superstep(glob, loc, rank_d, roots, emit, dist)
-            stats["cleaned"] += int(jnp.sum(red))
-            emit = emit & ~red
-        glob, ovf = lbl.insert_batch(glob, roots, emit, dist)
-        overflow = overflow | ovf
-        stats["supersteps"] += 1
-        stats["superstep_sizes"].append(int(roots.shape[0]))
-        loc = lbl.empty(n, cap)
-        pending = []
-        local_labels = 0
-
-    first = True
-    for roots, valid in _batches(order, batch):
-        roots_d, valid_d = jnp.asarray(roots), jnp.asarray(valid)
-        if first and plant_first_superstep:
-            tb = plant_batch(ell_src, ell_w, rank_d, roots_d, valid_d)
-            bl = BatchLabels(roots=roots_d, emit=tb.emit, dist=tb.dist)
-        else:
-            bl = construct_batch(ell_src, ell_w, rank_d, roots_d, valid_d,
-                                 glob, loc, rank_queries=rank_queries)
-        first = False
-        loc, ovf = lbl.insert_batch(loc, roots_d, bl.emit, bl.dist)
-        overflow = overflow | ovf
-        pending.append(bl)
-        nl = int(jnp.sum(bl.emit))
-        local_labels += nl
-        stats["constructed"] += nl
-        if local_labels >= threshold:
-            flush()
-    flush()
-    if bool(overflow):
-        raise lbl.LabelOverflowError(cap)
-    return glob, stats
+    from repro.engine import run_build
+    res = run_build(g, rank, algo="gll", batch=batch, cap=cap,
+                    alpha=alpha, rank_queries=rank_queries, clean=clean,
+                    plant_first_superstep=plant_first_superstep,
+                    ckpt=ckpt, resume=resume)
+    return res.sink.table(), _legacy_stats(res)
 
 
 def lcc_chl(g, rank: np.ndarray, *, batch: int = 8,
-            cap: Optional[int] = None) -> Tuple[LabelTable, dict]:
+            cap: Optional[int] = None, ckpt=None,
+            resume: bool = False) -> Tuple[LabelTable, dict]:
     """LCC (§4.1): construct everything, one cleaning pass at the end."""
-    return gll_chl(g, rank, batch=batch, alpha=None, cap=cap)
+    from repro.engine import run_build
+    res = run_build(g, rank, algo="lcc", batch=batch, cap=cap,
+                    ckpt=ckpt, resume=resume)
+    return res.sink.table(), _legacy_stats(res)
 
 
 def parapll_chl(g, rank: np.ndarray, *, batch: int = 8,
-                cap: Optional[int] = None) -> Tuple[LabelTable, dict]:
+                cap: Optional[int] = None, ckpt=None,
+                resume: bool = False) -> Tuple[LabelTable, dict]:
     """SparaPLL-style baseline [19]: concurrent pruned trees with root-
     label hashing, **no rank queries, no cleaning** — satisfies cover
     but not minimality (redundant labels grow with ``batch``)."""
-    return gll_chl(g, rank, batch=batch, alpha=None, cap=cap,
-                   rank_queries=False, clean=False)
+    from repro.engine import run_build
+    res = run_build(g, rank, algo="parapll", batch=batch, cap=cap,
+                    ckpt=ckpt, resume=resume)
+    return res.sink.table(), _legacy_stats(res)

@@ -1,16 +1,19 @@
 """Hybrid PLaNT + DGLL (§5.2.1) — the paper's flagship algorithm.
 
-Host-level superstep driver shared by PLaNT / DGLL / Hybrid:
+The host superstep driver that used to live here (root queues,
+geometric growth, the Ψ-switch, packed stats fetches, checkpointing)
+is now the superstep engine: ``repro.engine.dist.DistributedPolicy``
+driven by ``repro.engine.run``. What remains is the legacy
+``run_distributed`` surface — a thin wrapper that assembles the policy
+and translates the typed engine records back into the historical stats
+dict:
 
 - phase 0 (η > 0): the top-η trees are PLaNTed and their labels form
-  the replicated **Common Label Table** (§5.3). Beyond-paper twist: we
-  *recompute* the η trees on every node instead of broadcasting their
-  labels — PLaNT trees depend on nothing, so replication costs zero
-  communication (η extra tree constructions amortized over the run).
-- phase 1: PLaNT supersteps (HC-pruned) while ``Ψ ≤ Ψ_th``; labels are
-  canonical on emission — no gather, no cleaning.
-- phase 2: once ``Ψ > Ψ_th`` (exploration per label too high), switch
-  to DGLL supersteps — heavy pruning, broadcast + distributed cleaning.
+  the replicated **Common Label Table** (§5.3), recomputed per node
+  instead of broadcast (PLaNT trees depend on nothing).
+- phase 1: PLaNT supersteps (HC-pruned) while ``Ψ ≤ Ψ_th``.
+- phase 2: once ``Ψ > Ψ_th``, DGLL supersteps — heavy pruning,
+  broadcast + distributed cleaning.
 - superstep sizes grow geometrically by ``β`` (§5.1).
 
 ``psi_threshold=inf`` → pure PLaNT; ``psi_threshold=0`` → pure DGLL.
@@ -20,48 +23,23 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import labels as lbl
-from repro.core.labels import LabelTable
 from repro.core import dgll as dist
-from repro.core.plant import plant_batch
+from repro.core.labels import LabelTable
 
 __all__ = ["run_distributed", "hybrid_chl", "plant_distributed_chl",
            "auto_psi_threshold"]
 
 
-def _build_common_table(g, rank: np.ndarray, eta_roots: np.ndarray,
-                        hc_cap: int) -> LabelTable:
-    """Replicated Common Label Table from the top-η PLaNTed trees."""
-    n = g.n
-    hc = lbl.empty(n, hc_cap)
-    roots = jnp.asarray(eta_roots.astype(np.int32))
-    valid = jnp.ones(len(eta_roots), dtype=bool)
-    tb = plant_batch(jnp.asarray(g.ell_src), jnp.asarray(g.ell_w),
-                     jnp.asarray(rank.astype(np.int32)), roots, valid)
-    hc, ovf = lbl.insert_batch(hc, roots, tb.emit, tb.dist)
-    if bool(ovf):
-        raise lbl.LabelOverflowError(hc_cap, "common label table")
-    return hc
-
-
 def auto_psi_threshold(q: int, gamma: float = 12.0) -> float:
-    """Ψ_th as a function of cluster size (the paper's §8 future work:
-    "make … the switching point from PLaNT to DGLL a function of both
-    q and Ψ").
-
-    Cost model: a PLaNTed tree costs Ψ explored-vertex relaxations per
-    label with zero communication; a DGLL tree costs ~O(1) pruned
-    relaxations per label plus a broadcast+cleaning share in which
-    *every* node answers every query — growing with q. Equating the
-    two gives a switch point linear in q: Ψ_th = γ·q (γ calibrated on
-    the Fig. 6 sweeps, where road/scale-free optima cross at
-    γ ≈ 10–15 for q ∈ {1..8})."""
-    return gamma * max(1, q)
+    """Ψ_th as a function of cluster size — legacy re-export of
+    ``repro.engine.dist.auto_psi_threshold`` (imported lazily:
+    ``repro.core`` must stay importable below the engine)."""
+    from repro.engine.dist import auto_psi_threshold as f
+    return f(q, gamma)
 
 
 def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
@@ -72,6 +50,7 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                     compact: int = 0,
                     ckpt=None, resume: bool = False,
                     verbose: bool = False,
+                    algo_name: str = "hybrid",
                     ) -> Tuple[LabelTable, dict]:
     """Distributed CHL construction. Returns (merged table, stats).
 
@@ -80,189 +59,34 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
     ``ckpt`` (a ``repro.checkpoint.CheckpointManager``) commits the
     partitioned table + superstep cursor after every superstep;
     ``resume=True`` continues from the last committed superstep. A
-    checkpoint written under a different ``cap`` is ignored (shape
-    mismatch — happens when ``repro.index.build`` regrows the cap)."""
+    checkpoint written under a *smaller* ``cap`` is padded and reused
+    (the regrow-resume path of ``repro.index.build``); one written
+    under a larger cap or a different algorithm/layout is cleared.
+    """
+    from repro.engine import MeshTableSink, run
+    from repro.engine.dist import DistributedPolicy
     mesh = mesh or dist.make_node_mesh()
-    q = int(mesh.devices.size)
-    if psi_threshold is None:
-        psi_threshold = auto_psi_threshold(q)
     n = g.n
     cap = cap or lbl.default_cap(n)
-    queues = dist.assign_roots(rank, q)          # [q, per]
-    per = queues.shape[1]
-    state = dist.init_dist_state(mesh, n, cap, hc_cap if eta else 1)
-    rank_d = jnp.asarray(rank.astype(np.int32))
-    ell_src = jnp.asarray(g.ell_src)
-    ell_w = jnp.asarray(g.ell_w)
-    rep = NamedSharding(mesh, P())
-    node_sh = NamedSharding(mesh, P("node"))
+    policy = DistributedPolicy(
+        g, rank, mesh=mesh, batch=batch, beta=beta,
+        first_superstep=first_superstep, cap=cap, eta=eta,
+        hc_cap=hc_cap, psi_threshold=psi_threshold, compact=compact,
+        mode_name=algo_name, verbose=verbose)
+    sink = MeshTableSink(mesh, n, cap)
+    res = run(policy, sink, ckpt=ckpt, resume=resume, verbose=verbose)
 
-    stats = {"supersteps": [], "mode": [], "labels": [], "explored": [],
-             "psi": [], "comm_label_slots": 0, "q": q,
-             "psi_threshold": psi_threshold}
-    table, hc = state.table, state.hc
-    pos = 0
-    size = first_superstep
-    plant_mode = psi_threshold > 0.0
-    resumed = False
-
-    if ckpt is not None and resume and ckpt.latest_step() is not None:
-        tmpl = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), table)
-        restored, pos, extra = ckpt.restore(tmpl)
-        if int(extra.get("cap", cap)) == cap:
-            table = LabelTable(*(jax.device_put(jnp.asarray(x), node_sh)
-                                 for x in restored))
-            size = int(extra.get("size", first_superstep))
-            plant_mode = bool(extra.get("plant_mode", plant_mode))
-            resumed = True
-            if verbose:
-                print(f"[resume] superstep cursor={pos} size={size}")
-        else:
-            # stale checkpoint from a different cap: start fresh AND
-            # drop it, or its higher step numbers would keep shadowing
-            # this run's resume points in latest_step()/retention GC
-            ckpt.clear()
-            pos = 0
-
-    # ---- phase 0: Common Label Table from top-η hubs -----------------
-    if eta > 0:
-        k0 = -(-eta // q)                        # trees per node
-        eta_eff = min(k0 * q, n)
-        order = np.argsort(-rank.astype(np.int64), kind="stable")
-        hc = _build_common_table(g, rank, order[:eta_eff], hc_cap)
-        hc = LabelTable(*(jax.device_put(x, rep) for x in hc))
-        if not resumed:
-            # those trees' labels also enter the owners' partitions
-            step_fn = dist.dgll_superstep_fn(mesh, n, batch=k0,
-                                             use_hc=False,
-                                             plant_trees=True)
-            roots = _pad_step(queues, pos, k0, batch=k0)
-            out = step_fn(table, hc, rank_d,
-                          jax.device_put(jnp.asarray(roots), node_sh),
-                          jax.device_put(jnp.asarray(roots >= 0), node_sh),
-                          ell_src, ell_w)
-            table = out.table
-            nl, exp, ovf, _ = _fetch_stats(out)
-            if ovf:
-                raise lbl.LabelOverflowError(cap)
-            _record(stats, "plant-hc", nl, exp)
-            pos += k0
-            if ckpt is not None:
-                ckpt.save(pos, table,
-                          data_state={"size": size,
-                                      "plant_mode": plant_mode,
-                                      "cap": cap},
-                          blocking=False)
-
-    plant_fn = dgll_fn = dense_fn = None
-    while pos < per:
-        T = min(size, per - pos)
-        T = -(-T // batch) * batch               # multiple of batch
-        roots = _pad_step(queues, pos, T, batch=batch)
-        roots_d = jax.device_put(jnp.asarray(roots), node_sh)
-        valid_d = jax.device_put(jnp.asarray(roots >= 0), node_sh)
-        if plant_mode:
-            if plant_fn is None or plant_fn[0] != T:
-                plant_fn = (T, dist.dgll_superstep_fn(
-                    mesh, n, batch=batch, use_hc=eta > 0,
-                    plant_trees=True))
-            out = plant_fn[1](table, hc, rank_d, roots_d, valid_d,
-                              ell_src, ell_w)
-            mode = "plant"
-            nl, exp, ovf, _ = _fetch_stats(out)
-        else:
-            if dgll_fn is None or dgll_fn[0] != T:
-                dgll_fn = (T, dist.dgll_superstep_fn(
-                    mesh, n, batch=batch, use_hc=eta > 0,
-                    plant_trees=False, compact=compact))
-            out = dgll_fn[1](table, hc, rank_d, roots_d, valid_d,
-                             ell_src, ell_w)
-            mode = "dgll"
-            slots = q * T * min(compact, n) if compact else q * T * n
-            nl, exp, ovf, compact_ovf = _fetch_stats(out)
-            if compact and compact_ovf:
-                # §Perf-2 fallback: budget too small for this
-                # superstep's label yield → redo densely (correctness
-                # over speed; rare once DGLL mode starts — Fig. 2)
-                if dense_fn is None or dense_fn[0] != T:
-                    dense_fn = (T, dist.dgll_superstep_fn(
-                        mesh, n, batch=batch, use_hc=eta > 0,
-                        plant_trees=False, compact=0))
-                out = dense_fn[1](table, hc, rank_d, roots_d, valid_d,
-                                  ell_src, ell_w)
-                mode = "dgll-dense-fallback"
-                slots = q * T * n
-                nl, exp, ovf, _ = _fetch_stats(out)
-            stats["comm_label_slots"] += slots
-        table = out.table
-        if ovf:
-            # raise BEFORE committing a checkpoint: insert_batch drops
-            # labels on overflow, and a saved corrupt table would be
-            # silently restored by --resume
-            if ckpt is not None:
-                ckpt.wait()
-            raise lbl.LabelOverflowError(cap)
-        psi = _record(stats, mode, nl, exp)
-        if verbose:
-            print(f"superstep pos={pos:6d} T={T:4d} mode={mode} "
-                  f"labels={stats['labels'][-1]} psi={psi:.1f}")
-        if plant_mode and psi > psi_threshold:
-            plant_mode = False               # Ψ too high → switch (§5.2.1)
-            if verbose:
-                print(f"  Ψ={psi:.1f} > Ψ_th={psi_threshold:.1f} → "
-                      f"switching to DGLL")
-        pos += T
-        size = int(size * beta)
-        if ckpt is not None:
-            ckpt.save(pos, table,
-                      data_state={"size": size, "plant_mode": plant_mode,
-                                  "cap": cap},
-                      blocking=False)
-    if ckpt is not None:
-        ckpt.wait()
-
-    merged = dist.merge_partitions(table)
-    stats["partitioned"] = table
-    stats["hc"] = hc
+    merged = dist.merge_partitions(sink.table)
+    stats = {"mode": [r.mode for r in res.records],
+             "labels": [r.labels for r in res.records],
+             "explored": [r.explored for r in res.records],
+             "psi": [r.psi for r in res.records],
+             "comm_label_slots": res.counters["comm_label_slots"],
+             "q": res.extras["q"],
+             "psi_threshold": res.extras["psi_threshold"],
+             "partitioned": res.extras["partitioned"],
+             "hc": res.extras["hc"]}
     return merged, stats
-
-
-def _pad_step(queues: np.ndarray, pos: int, T: int, batch: int
-              ) -> np.ndarray:
-    q, per = queues.shape
-    out = np.full((q, T), -1, dtype=np.int32)
-    take = min(T, per - pos)
-    out[:, :take] = queues[:, pos:pos + take]
-    return out
-
-
-def _fetch_stats(out) -> Tuple[int, int, bool, bool]:
-    """All of a superstep's scalar stats in ONE blocking device fetch.
-
-    The reductions run on device and are packed into a single [4]
-    array, so stats collection costs one host sync per superstep
-    instead of four — the dispatch pipeline is not serialized on
-    four separate ``int(jnp.sum(...))`` round trips.
-    """
-    packed = np.asarray(jnp.stack([
-        jnp.sum(out.new_labels, dtype=jnp.int32),
-        jnp.sum(out.explored, dtype=jnp.int32),
-        jnp.any(out.overflow).astype(jnp.int32),
-        jnp.any(out.compact_overflow).astype(jnp.int32),
-    ]))
-    return (int(packed[0]), int(packed[1]),
-            bool(packed[2]), bool(packed[3]))
-
-
-def _record(stats: dict, mode: str, nl: int, exp: int) -> float:
-    psi = exp / max(1, nl)
-    stats["supersteps"].append(mode)
-    stats["mode"].append(mode)
-    stats["labels"].append(nl)
-    stats["explored"].append(exp)
-    stats["psi"].append(psi)
-    return psi
 
 
 def hybrid_chl(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
@@ -274,7 +98,7 @@ def hybrid_chl(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
     return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
                            cap=cap, eta=eta, hc_cap=hc_cap,
                            psi_threshold=psi_threshold, compact=compact,
-                           **kw)
+                           algo_name="hybrid", **kw)
 
 
 def plant_distributed_chl(g, rank: np.ndarray, *,
@@ -284,4 +108,4 @@ def plant_distributed_chl(g, rank: np.ndarray, *,
     """Pure distributed PLaNT (§5.2): zero label communication."""
     return run_distributed(g, rank, mesh=mesh, batch=batch, beta=beta,
                            cap=cap, eta=0, psi_threshold=float("inf"),
-                           **kw)
+                           algo_name="plant-dist", **kw)

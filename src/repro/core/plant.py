@@ -70,61 +70,26 @@ def plant_batch(ell_src: Array, ell_w: Array, rank: Array, roots: Array,
                      sweeps=st.sweeps)
 
 
-def _batches(order: np.ndarray, batch: int):
-    """Yield (roots[B], valid[B]) fixed-size batches over a root order."""
-    n = len(order)
-    for s in range(0, n, batch):
-        chunk = order[s:s + batch]
-        pad = batch - len(chunk)
-        roots = np.concatenate([chunk, np.zeros(pad, chunk.dtype)])
-        valid = np.concatenate([np.ones(len(chunk), bool),
-                                np.zeros(pad, bool)])
-        yield roots.astype(np.int32), valid
-
-
 def plant_chl(g, rank: np.ndarray, *, batch: int = 16,
               cap: Optional[int] = None,
               hc: Optional[LabelTable] = None,
               roots_order: Optional[np.ndarray] = None,
+              ckpt=None, resume: bool = False,
               ) -> Tuple[LabelTable, dict]:
-    """Full CHL construction with pure PLaNT (host superstep loop).
+    """Full CHL construction with pure PLaNT.
 
-    Embarrassingly parallel over root batches; each batch's labels are
-    final (no cleaning — the paper's minimality-by-construction).
-    Returns the label table and a stats dict (Ψ per batch etc.).
+    Thin wrapper over the superstep engine (``repro.engine`` owns the
+    batching, the deferred one-fetch stats protocol, and — new with
+    the engine — checkpoint/resume via ``ckpt``). Embarrassingly
+    parallel over root batches; each batch's labels are final (no
+    cleaning — the paper's minimality-by-construction). Returns the
+    label table and a stats dict (Ψ per batch etc.).
     """
-    n = g.n
-    cap = cap or lbl.default_cap(n)
-    order = (roots_order if roots_order is not None
-             else np.argsort(-rank.astype(np.int64), kind="stable"))
-    table = lbl.empty(n, cap)
-    ell_src = jnp.asarray(g.ell_src)
-    ell_w = jnp.asarray(g.ell_w)
-    rank_d = jnp.asarray(rank.astype(np.int32))
-    # Stats are accumulated on device and fetched ONCE after the loop:
-    # per-batch ``int(jnp.sum(...))`` conversions would block the host
-    # on every superstep and serialize the dispatch pipeline.
-    per_batch = []
-    overflowed = jnp.zeros((), dtype=bool)
-    for roots, valid in _batches(order, batch):
-        tb = plant_batch(ell_src, ell_w, rank_d, jnp.asarray(roots),
-                         jnp.asarray(valid), hc=hc, use_hc=hc is not None)
-        table, ovf = lbl.insert_batch(table, jnp.asarray(roots),
-                                      tb.emit, tb.dist)
-        overflowed = overflowed | ovf
-        per_batch.append(jnp.stack([
-            jnp.sum(tb.explored * valid, dtype=jnp.int32),
-            jnp.sum(tb.emit, dtype=jnp.int32),
-            tb.sweeps.astype(jnp.int32)]))
-    if per_batch:
-        fetched = np.asarray(jnp.stack(per_batch))       # one transfer
-        exp, nl, sw = (fetched[:, 0], fetched[:, 1], fetched[:, 2])
-    else:
-        exp = nl = sw = np.zeros(0, dtype=np.int64)
-    stats = {"explored": exp.tolist(), "labels": nl.tolist(),
-             "sweeps": sw.tolist(),
-             "psi": [e / max(1, l) for e, l in zip(exp.tolist(),
-                                                   nl.tolist())]}
-    if bool(overflowed):
-        raise lbl.LabelOverflowError(cap)
-    return table, stats
+    from repro.engine import run_build
+    res = run_build(g, rank, algo="plant", batch=batch, cap=cap, hc=hc,
+                    roots_order=roots_order, ckpt=ckpt, resume=resume)
+    stats = {"explored": [r.explored for r in res.records],
+             "labels": [r.labels for r in res.records],
+             "sweeps": [r.sweeps for r in res.records],
+             "psi": [r.psi for r in res.records]}
+    return res.sink.table(), stats

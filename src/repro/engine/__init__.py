@@ -1,0 +1,38 @@
+"""repro.engine — the one superstep engine behind every constructor.
+
+The vertex-centric framing of *Pruned Landmark Labeling Meets Vertex
+Centric Computation* (Jin et al., PAPERS.md) made explicit what this
+repo had grown four hand-rolled copies of: CHL construction is a
+schedule of root batches, a per-batch device step, an emission filter,
+and a commit. The engine owns the schedule (`scheduler`), the typed
+per-superstep records + packed stats fetch (`records`), the label
+residency during construction (`sink` — dense, streaming-sharded, or
+mesh-partitioned), and checkpoint/resume (`runner`); each algorithm is
+a thin policy (`policies`, `dist`).
+
+Layering (see README): ``repro.index`` (artifact facade) → **engine**
+(this package) → ``repro.core`` batch kernels → ``repro.kernels``
+Pallas kernels; label residency behind the facade is
+``repro.index.store``, fed directly by the engine's streaming sink.
+"""
+
+from repro.engine.policies import (DirectedPlantPolicy, GLLPolicy,
+                                   PlantPolicy, PLLRefPolicy, Policy,
+                                   StepOutcome)
+from repro.engine.records import (SuperstepRecord, fetch_stat_rows,
+                                  make_record, pack_stats)
+from repro.engine.runner import (STREAMING_ALGOS, EngineResult, run,
+                                 run_build)
+from repro.engine.scheduler import (BatchSchedule, QueueSchedule, Step,
+                                    pad_step, rank_order, root_batches)
+from repro.engine.sink import (DenseSink, MeshTableSink,
+                               StreamingShardSink)
+
+__all__ = [
+    "BatchSchedule", "DenseSink", "DirectedPlantPolicy", "EngineResult",
+    "GLLPolicy", "MeshTableSink", "PLLRefPolicy", "PlantPolicy",
+    "Policy", "QueueSchedule", "STREAMING_ALGOS", "Step", "StepOutcome",
+    "StreamingShardSink", "SuperstepRecord", "fetch_stat_rows",
+    "make_record", "pack_stats", "pad_step", "rank_order",
+    "root_batches", "run", "run_build",
+]

@@ -1,0 +1,103 @@
+"""Typed per-superstep records + the packed one-fetch stats protocol.
+
+Every construction algorithm used to keep its own ad-hoc stats — lists
+of ints in ``plant_chl``, counter dicts in ``gll_chl``, parallel
+mode/label/psi lists in ``run_distributed`` (where the same mode string
+was appended to *two* keys). The engine replaces all of them with one
+typed row per committed superstep, and those rows feed
+``repro.index.report.BuildReport`` directly (``SuperstepStat`` is this
+record).
+
+Stats collection stays off the host hot path: a policy that can defer
+packs its per-superstep scalars into one small device array
+(:func:`pack_stats`), the engine stacks the rows, and
+:func:`fetch_stat_rows` moves them host-side in a single transfer after
+the loop — per-superstep ``int(jnp.sum(...))`` conversions would block
+the dispatch pipeline once per superstep (the protocol previously
+hand-rolled as ``hybrid._fetch_stats`` / the ``plant_chl`` accumulator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+#: slot layout of a packed per-superstep stats row (i32 device array)
+STAT_SLOTS = ("labels", "explored", "sweeps", "overflow",
+              "compact_overflow")
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepRecord:
+    """One committed superstep (or root batch) of construction.
+
+    This is the row type of ``BuildReport.supersteps`` — the engine
+    emits it, the report stores it, benchmarks read it.
+    """
+
+    mode: str                       # plant | plant-hc | dgll | gll | ...
+    labels: Optional[int] = None    # labels committed
+    explored: Optional[int] = None  # vertices touched (Ψ numerator)
+    sweeps: Optional[int] = None    # relaxation sweeps to fixpoint
+    psi: Optional[float] = None     # explored per label
+    trees: Optional[int] = None     # roots processed this superstep
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SuperstepRecord":
+        return cls(**d)
+
+
+def make_record(mode: str, labels: Optional[int] = None,
+                explored: Optional[int] = None,
+                sweeps: Optional[int] = None,
+                trees: Optional[int] = None) -> SuperstepRecord:
+    """Record with Ψ derived whenever both inputs are present."""
+    psi = None
+    if labels is not None and explored is not None:
+        psi = explored / max(1, labels)
+    return SuperstepRecord(mode=mode, labels=labels, explored=explored,
+                           sweeps=sweeps, psi=psi, trees=trees)
+
+
+def pack_stats(labels: Array, explored: Array,
+               sweeps: Optional[Array] = None,
+               overflow: Optional[Array] = None,
+               compact_overflow: Optional[Array] = None) -> Array:
+    """Pack one superstep's scalars into a single ``[5]`` i32 device
+    array (missing slots become -1 / 0), so fetching costs one transfer
+    whether it happens eagerly or batched at the end of the run."""
+    def slot(x, missing):
+        if x is None:
+            return jnp.int32(missing)
+        return jnp.asarray(x).astype(jnp.int32)
+
+    return jnp.stack([
+        slot(labels, -1), slot(explored, -1), slot(sweeps, -1),
+        slot(overflow, 0), slot(compact_overflow, 0)])
+
+
+def fetch_stat_rows(rows: List[Array]) -> np.ndarray:
+    """All deferred superstep rows in ONE blocking device fetch."""
+    if not rows:
+        return np.zeros((0, len(STAT_SLOTS)), dtype=np.int64)
+    return np.asarray(jnp.stack(rows)).astype(np.int64)
+
+
+def record_from_row(mode: str, row: np.ndarray,
+                    trees: Optional[int] = None) -> SuperstepRecord:
+    """Decode one packed stats row into a typed record."""
+    labels, explored, sweeps = (int(row[0]), int(row[1]), int(row[2]))
+    return make_record(mode,
+                       labels=None if labels < 0 else labels,
+                       explored=None if explored < 0 else explored,
+                       sweeps=None if sweeps < 0 else sweeps,
+                       trees=trees)

@@ -1,16 +1,25 @@
 """`build(graph, rank, plan) -> CHLIndex` — the one construction facade.
 
-Dispatches a validated :class:`BuildPlan` to the paper's constructors
-(PLL reference, LCC/GLL/paraPLL §4, PLaNT §5.2, DGLL §5.1, Hybrid
-§5.2.1, directed footnote-1 pairs), normalizes their ad-hoc stats into
-a :class:`BuildReport`, and packages the result as a
-:class:`CHLIndex`.
+Translates a validated :class:`BuildPlan` into a ``repro.engine`` run
+(every algorithm — PLL reference, LCC/GLL/paraPLL §4, PLaNT §5.2, DGLL
+§5.1, Hybrid §5.2.1, directed footnote-1 pairs — is an engine policy),
+takes the engine's typed per-superstep records straight into a
+:class:`BuildReport`, and packages the result as a :class:`CHLIndex`.
+
+Label residency during construction follows the plan: a
+``store="sharded"`` build of a streaming-capable algorithm (PLaNT,
+pll-ref — emissions final on arrival) hub-partitions each superstep's
+labels straight into per-shard arrays and never materializes the dense
+``[n, cap]`` table; other algorithms build dense (they consult the
+global table while constructing) and re-home afterwards.
 
 Overflow is no longer terminal: a ``LabelOverflowError`` triggers a
 retry with the cap grown geometrically (``plan.cap_growth``, clamped
 to n, at most ``plan.max_cap_retries`` times), and every regrow is
-recorded in ``report.overflow_events`` — previously a whole run was
-burned just to learn the cap was too small.
+recorded in ``report.overflow_events``. With a checkpoint manager
+attached, the retry *resumes from the last committed superstep* — the
+engine pads the restored smaller-cap tables to the grown cap — instead
+of restarting the whole build.
 """
 
 from __future__ import annotations
@@ -21,54 +30,38 @@ from typing import Optional
 import numpy as np
 
 from repro.core import labels as lbl
-from repro.core.directed import plant_directed_chl
-from repro.core.gll import gll_chl, lcc_chl, parapll_chl
 from repro.core.labels import LabelOverflowError
-from repro.core.plant import plant_chl
-from repro.core.pll import pll_undirected
+from repro.engine import STREAMING_ALGOS, EngineResult, run_build
 from repro.index.artifact import CHLIndex
 from repro.index.plan import BuildPlan
-from repro.index.report import (BuildReport, OverflowEvent,
-                                normalize_stats)
+from repro.index.report import BuildReport, OverflowEvent
 from repro.index.store import DenseStore, ShardedStore
 
 
-def _dispatch(g, rank: np.ndarray, plan: BuildPlan, cap: int, mesh,
-              ckpt, resume: bool, verbose: bool):
-    """Run one construction attempt; returns (table | (l_out, l_in),
-    stats | None)."""
-    a = plan.algo
-    if a == "plant":
-        return plant_chl(g, rank, batch=plan.batch, cap=cap)
-    if a == "gll":
-        return gll_chl(g, rank, batch=plan.batch, alpha=plan.alpha,
-                       cap=cap)
-    if a == "lcc":
-        return lcc_chl(g, rank, batch=plan.batch, cap=cap)
-    if a == "parapll":
-        return parapll_chl(g, rank, batch=plan.batch, cap=cap)
-    if a == "directed":
-        return plant_directed_chl(g, rank, batch=plan.batch, cap=cap), \
-            None
-    if a == "pll-ref":
-        sets = pll_undirected(g, rank)
-        return lbl.from_numpy_sets(sets, cap=cap), None
-    # distributed driver family — import lazily: pulls in shard_map
-    from repro.core.dgll import dgll_chl, make_node_mesh
-    from repro.core.hybrid import hybrid_chl, plant_distributed_chl
-    mesh = mesh or make_node_mesh(plan.mesh_devices)
-    kw = dict(mesh=mesh, batch=plan.batch, beta=plan.beta, cap=cap,
-              ckpt=ckpt, resume=resume, verbose=verbose)
-    if a == "dgll":
-        return dgll_chl(g, rank, eta=plan.eta, hc_cap=plan.hc_cap,
-                        compact=plan.compact, **kw)
-    if a == "hybrid":
-        return hybrid_chl(g, rank, eta=plan.eta, hc_cap=plan.hc_cap,
-                          psi_threshold=plan.psi_th,
-                          compact=plan.compact, **kw)
-    if a == "plant-dist":
-        return plant_distributed_chl(g, rank, **kw)
-    raise ValueError(f"unhandled algo {a!r}")     # pragma: no cover
+def _resolve_shards(plan: BuildPlan, extras: Optional[dict] = None
+                    ) -> int:
+    """The one shard-count rule: the plan's ``shards`` if set, else the
+    build mesh size (distributed algos), else all local devices."""
+    if plan.shards:
+        return plan.shards
+    K = int((extras or {}).get("q") or 1)
+    if K == 1:
+        import jax
+        K = max(1, jax.local_device_count())
+    return K
+
+
+def _run(g, rank: np.ndarray, plan: BuildPlan, cap: int, mesh,
+         ckpt, resume: bool, verbose: bool,
+         streaming_shards: Optional[int]) -> EngineResult:
+    """One engine attempt for the plan at the given cap."""
+    return run_build(
+        g, rank, algo=plan.algo, batch=plan.batch, cap=cap,
+        alpha=plan.alpha, mesh=mesh, beta=plan.beta,
+        first_superstep=plan.first_superstep, eta=plan.eta,
+        hc_cap=plan.hc_cap, psi_threshold=plan.psi_th,
+        compact=plan.compact, streaming_shards=streaming_shards,
+        ckpt=ckpt, resume=resume, verbose=verbose)
 
 
 def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
@@ -78,7 +71,7 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
 
     ``mesh`` overrides the plan's mesh spec for distributed algos.
     ``ckpt`` (a ``CheckpointManager``) enables mid-run superstep
-    checkpointing for the distributed algos; ``resume`` continues from
+    checkpointing for **every** algorithm; ``resume`` continues from
     the last committed superstep.
     """
     plan = plan or BuildPlan()
@@ -93,6 +86,9 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
     n = g.n
     cap = plan.cap or lbl.default_cap(n)
     cap = min(cap, n)
+    streaming_shards = None
+    if plan.store == "sharded" and plan.algo in STREAMING_ALGOS:
+        streaming_shards = _resolve_shards(plan)
     notes = []
     if plan.algo != "pll-ref":           # the host oracle runs no sweeps
         from repro.kernels.ell_relax import (kernel_fits,
@@ -107,9 +103,13 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
     attempt = 0
     while True:
         try:
-            result, stats = _dispatch(g, rank, plan, cap, mesh,
-                                      ckpt, resume and attempt == 0,
-                                      verbose)
+            # the first attempt resumes only on request; regrow
+            # retries resume whenever checkpoints exist — the engine
+            # pads the last committed (smaller-cap) state to the
+            # grown cap and continues mid-schedule
+            res = _run(g, rank, plan, cap, mesh, ckpt,
+                       resume if attempt == 0 else ckpt is not None,
+                       verbose, streaming_shards)
             break
         except LabelOverflowError as e:
             if e.what != "label table":
@@ -124,10 +124,6 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
                 raise
             overflow_events.append(
                 OverflowEvent(attempt=attempt, cap=cap, regrown_to=grown))
-            if ckpt is not None:
-                # stale small-cap checkpoints would outrank the retry's
-                # lower step numbers in retention GC and shadow resume
-                ckpt.clear()
             if verbose:
                 print(f"[build] label table overflow at cap={cap}; "
                       f"regrowing to {grown} "
@@ -136,38 +132,41 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
             attempt += 1
     wall = time.perf_counter() - t0
 
-    partitioned = None
-    if isinstance(result, tuple) and not isinstance(result, lbl.LabelTable):
-        l_out, l_in = result
+    report_kw = dict(
+        algo=plan.algo, wall_s=wall, cap=cap,
+        supersteps=list(res.records), overflow_events=overflow_events,
+        notes=notes,
+        comm_label_slots=int(res.counters.get("comm_label_slots", 0)),
+        psi_threshold=res.extras.get("psi_threshold"),
+        q=int(res.extras.get("q", 1)),
+        cleaned=int(res.counters.get("cleaned", 0)),
+        constructed=int(res.counters.get("constructed", 0)))
+
+    if plan.algo == "directed":
+        l_out = res.sink.table("out")
+        l_in = res.sink.table("in")
         total = lbl.total_labels(l_out) + lbl.total_labels(l_in)
-        als = total / max(1, 2 * n)
-        kw = normalize_stats(plan.algo, stats)
-        report = BuildReport(algo=plan.algo, wall_s=wall,
-                             total_labels=total, als=als, cap=cap,
-                             overflow_events=overflow_events,
-                             notes=notes, **kw)
+        report = BuildReport(total_labels=total,
+                             als=total / max(1, 2 * n), **report_kw)
         return CHLIndex(l_out=l_out, l_in=l_in, plan=plan, report=report,
                         rank=rank)
 
-    table = result
-    if stats is not None:
-        partitioned = stats.pop("partitioned", None)
-        stats.pop("hc", None)
-    total = lbl.total_labels(table)
-    kw = normalize_stats(plan.algo, stats)
-    report = BuildReport(algo=plan.algo, wall_s=wall, total_labels=total,
-                         als=total / max(1, n), cap=cap,
-                         overflow_events=overflow_events, notes=notes,
-                         **kw)
-    if plan.store == "sharded":
-        K = plan.shards
-        if K is None:                    # default: build mesh, else all
-            K = int(kw.get("q") or 1)    # local devices
-            if K == 1:
-                import jax
-                K = max(1, jax.local_device_count())
-        store = ShardedStore.from_table(table, rank, K)
+    partitioned = res.extras.get("partitioned")
+    if res.sink.kind == "sharded":       # streamed: shards are the build
+        store = ShardedStore.from_accumulator(res.sink.acc)
     else:
-        store = DenseStore(table)
+        if res.sink.kind == "mesh":
+            from repro.core.dgll import merge_partitions
+            table = merge_partitions(res.sink.table)
+        else:
+            table = res.sink.table()
+        if plan.store == "sharded":
+            store = ShardedStore.from_table(
+                table, rank, _resolve_shards(plan, res.extras))
+        else:
+            store = DenseStore(table)
+    total = store.total_labels
+    report = BuildReport(total_labels=total, als=total / max(1, n),
+                         **report_kw)
     return CHLIndex(store=store, plan=plan, report=report, rank=rank,
                     partitioned=partitioned)

@@ -38,6 +38,7 @@ class BuildPlan:
     batch: int = 8
     cap: Optional[int] = None
     beta: float = 8.0                 # superstep growth (§5.1)
+    first_superstep: int = 1          # initial superstep size (roots)
     eta: int = 16                     # common-label-table hubs (§5.3)
     hc_cap: int = 64
     psi_th: Optional[float] = None    # PLaNT→DGLL switch (§5.2.1)
@@ -58,6 +59,9 @@ class BuildPlan:
             raise ValueError(f"cap must be >= 1, got {self.cap}")
         if self.beta <= 1.0:
             raise ValueError(f"beta must be > 1, got {self.beta}")
+        if self.first_superstep < 1:
+            raise ValueError(f"first_superstep must be >= 1, got "
+                             f"{self.first_superstep}")
         if self.eta < 0 or self.hc_cap < 1:
             raise ValueError("eta must be >= 0 and hc_cap >= 1")
         if self.psi_th is not None and self.psi_th < 0:

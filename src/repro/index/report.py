@@ -2,9 +2,12 @@
 
 Each constructor historically returned its own ad-hoc ``stats`` dict
 (per-batch lists from PLaNT, counter dicts from GLL, superstep traces
-from the distributed driver). The report normalizes all of them into
-per-superstep rows plus build-level totals, so benchmarks and the
-on-disk manifest read one schema.
+from the distributed driver). The superstep engine now emits one typed
+record per committed superstep (``repro.engine.records
+.SuperstepRecord``) and those rows feed ``BuildReport.supersteps``
+directly — ``SuperstepStat`` *is* the engine record.
+:func:`normalize_stats` remains only for the legacy ``*_chl`` stats
+dicts.
 """
 
 from __future__ import annotations
@@ -12,18 +15,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
+from repro.engine.records import SuperstepRecord
 
-@dataclasses.dataclass(frozen=True)
-class SuperstepStat:
-    """One superstep (or root batch) of construction."""
-    mode: str                       # plant | plant-hc | dgll | gll | ...
-    labels: Optional[int] = None    # labels committed
-    explored: Optional[int] = None  # vertices touched (Ψ numerator)
-    sweeps: Optional[int] = None    # relaxation sweeps to fixpoint
-    psi: Optional[float] = None     # explored per label
-
-    def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+#: one committed superstep (or root batch) of construction — the
+#: engine's typed record, stored in reports and manifests as-is
+SuperstepStat = SuperstepRecord
 
 
 @dataclasses.dataclass(frozen=True)

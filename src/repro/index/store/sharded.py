@@ -131,6 +131,15 @@ class ShardedStore:
         return cls(h, d, c)
 
     @classmethod
+    def from_accumulator(cls, acc) -> "ShardedStore":
+        """Adopt an incrementally built hub partition (the engine's
+        streaming emission sink — ``repro.parallel.sharding
+        .ShardAccumulator``) without ever materializing the dense
+        ``[n, cap]`` table; per-shard caps stay tight."""
+        return cls.from_shard_arrays(
+            arrs for _, arrs in acc.shard_arrays())
+
+    @classmethod
     def from_shard_arrays(cls, shards) -> "ShardedStore":
         """Stack per-shard ``{hubs, dist, count}`` dicts (ragged
         per-shard caps are padded to the widest)."""

@@ -4,16 +4,19 @@
         --ckpt-dir /tmp/chl_run --queries 1000
 
 Thin CLI over ``repro.index.build``: parses a ``BuildPlan``, runs the
-facade (which owns the superstep driver, checkpointing, and overflow
-auto-regrow), finalizes the run into a versioned ``CHLIndex`` artifact
-(``--save-index``, default ``<ckpt-dir>/index``), and optionally
-smoke-serves queries through ``CHLIndex.serve``.
+facade (which dispatches every algorithm through the ``repro.engine``
+superstep engine), finalizes the run into a versioned ``CHLIndex``
+artifact (``--save-index``, default ``<ckpt-dir>/index``), and
+optionally smoke-serves queries through ``CHLIndex.serve``.
 
-Fault tolerance: the distributed driver checkpoints the partitioned
-label table + superstep cursor after every superstep; ``--resume``
-continues from the last committed superstep. Combined with PLaNT's
-statelessness, a failed run never loses more than one superstep of
-work.
+Fault tolerance: with ``--ckpt-dir``, the engine checkpoints the label
+state + superstep cursor after every committed superstep — for
+**every** algorithm, not just the distributed family — and
+``--resume`` continues from the last committed superstep. A
+``--store sharded`` PLaNT build additionally streams each superstep's
+labels straight into hub-partitioned shard arrays (the dense
+``[n, cap]`` table is never materialized), and its checkpoints hold
+the per-shard arrays.
 """
 
 from __future__ import annotations
@@ -24,23 +27,26 @@ import os
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import dgll as dist
 from repro.graphs import grid_road, scale_free
 from repro.graphs.io import read_dimacs
 from repro.graphs.ranking import betweenness_ranking, degree_ranking
-from repro.index import BuildPlan, build
+from repro.index import ALGOS, BuildPlan, build
 
 
-def build_graph(args):
+def build_graph(args, directed: bool = False):
     if args.graph == "road":
+        if directed:
+            raise SystemExit("--algo directed needs --graph scalefree "
+                             "or a directed .gr file")
         side = int(np.sqrt(args.n))
         g = grid_road(side, side, seed=args.seed)
         rank = betweenness_ranking(g, samples=16)
     elif args.graph == "scalefree":
-        g = scale_free(args.n, attach=2, seed=args.seed)
+        g = scale_free(args.n, attach=2, seed=args.seed,
+                       directed=directed)
         rank = degree_ranking(g)
     else:
-        g = read_dimacs(args.graph)
+        g = read_dimacs(args.graph, directed=directed)
         rank = degree_ranking(g)
     return g, rank
 
@@ -51,24 +57,35 @@ def main(argv=None) -> dict:
                     help="road | scalefree | <path.gr>")
     ap.add_argument("--n", type=int, default=1600)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--algo", default="hybrid",
-                    choices=("plant", "dgll", "hybrid", "plant-dist"))
+    ap.add_argument("--algo", default="hybrid", choices=ALGOS,
+                    help="any BuildPlan algorithm (note: 'plant' is "
+                         "single-host PLaNT; the distributed driver "
+                         "is 'plant-dist')")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--beta", type=float, default=8.0)
+    ap.add_argument("--first-superstep", type=int, default=None,
+                    dest="first_superstep",
+                    help="initial superstep size (roots; grows by beta)")
     ap.add_argument("--eta", type=int, default=16)
     ap.add_argument("--psi-th", type=float, default=None,
                     help="default: auto = gamma*q")
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="GLL cleaning threshold (labels per vertex)")
     ap.add_argument("--compact", type=int, default=0)
     ap.add_argument("--cap", type=int, default=None)
     ap.add_argument("--store", default="dense",
                     choices=("dense", "sharded"),
                     help="label residency of the built index "
-                         "(repro.index.store)")
+                         "(repro.index.store); sharded PLaNT builds "
+                         "stream emissions straight into shards")
     ap.add_argument("--shards", type=int, default=None,
                     help="hub partitions for --store sharded "
-                         "(default: mesh size)")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--resume", action="store_true")
+                         "(default: mesh size / local devices)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint after every committed superstep "
+                         "(every algorithm)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the last committed superstep")
     ap.add_argument("--save-index", default=None,
                     help="finalize into a CHLIndex artifact dir "
                          "(default: <ckpt-dir>/index)")
@@ -77,15 +94,18 @@ def main(argv=None) -> dict:
                     choices=("qlsn", "qfdl", "qdol"))
     args = ap.parse_args(argv)
 
-    g, rank = build_graph(args)
-    mesh = dist.make_node_mesh()
-    q = int(mesh.devices.size)
-    print(f"graph n={g.n} m={g.m // (1 if g.directed else 2)}; "
-          f"q={q} nodes; algo={args.algo}")
+    plan = BuildPlan.from_args(args)
+    g, rank = build_graph(args, directed=plan.algo == "directed")
 
-    # historical spelling: launcher "plant" = distributed PLaNT
-    algo = {"plant": "plant-dist"}.get(args.algo, args.algo)
-    plan = BuildPlan.from_args(args, algo=algo)
+    mesh = None
+    q = 1
+    if plan.distributed:
+        from repro.core import dgll as dist
+        mesh = dist.make_node_mesh()
+        q = int(mesh.devices.size)
+    print(f"graph n={g.n} m={g.m // (1 if g.directed else 2)}; "
+          f"q={q} nodes; algo={plan.algo}")
+
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
     idx = build(g, rank, plan, mesh=mesh, ckpt=mgr,
@@ -98,7 +118,7 @@ def main(argv=None) -> dict:
         idx.save(out_dir)
         print(f"index artifact saved to {out_dir}")
 
-    if args.queries:
+    if args.queries and not idx.directed:
         rng = np.random.default_rng(1)
         srv = idx.serve(mode=args.query_mode, mesh=mesh, batch_size=512)
         srv.warmup()
@@ -106,6 +126,12 @@ def main(argv=None) -> dict:
                    rng.integers(0, g.n, args.queries))
         srv.flush()
         print("serving:", srv.stats())
+    elif args.queries:
+        rng = np.random.default_rng(1)
+        d = idx.query(rng.integers(0, g.n, args.queries),
+                      rng.integers(0, g.n, args.queries))
+        print(f"directed queries: {len(d)} answered, "
+              f"{int(np.isfinite(d).sum())} reachable")
     # no "table" key: materializing a dense copy here would defeat a
     # --store sharded build; callers reach labels via index.store (or
     # index.table when they accept the materialization cost)

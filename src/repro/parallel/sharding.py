@@ -17,11 +17,13 @@ Two preset rule sets:
 is owned by shard ``order_index(h) mod K`` (rank-descending
 round-robin), so every label ``(h, δ)`` of every vertex lives in
 exactly one shard and PPSD intersection decomposes exactly into
-per-shard partial mins. ``hub_owner`` / ``hub_partition_arrays`` are
-the one implementation of that layout, shared by
-``repro.index.store.ShardedStore`` (first-class sharded artifacts) and
+per-shard partial mins. ``hub_owner`` / ``hub_partition_arrays`` /
+``ShardAccumulator`` are the one implementation of that layout, shared
+by ``repro.index.store.ShardedStore`` (first-class sharded artifacts),
 ``repro.serve.backends.partition_by_hub`` (the QFDL view synthesized
-from a dense table).
+from a dense table), and ``repro.engine``'s streaming emission sink
+(labels hub-partitioned superstep by superstep, never materializing a
+dense ``[n, cap]`` table).
 """
 
 from __future__ import annotations
@@ -152,3 +154,103 @@ def hub_partition_arrays(hubs: np.ndarray, dist: np.ndarray,
         out_h[k, rows, dest[rows, cols]] = hubs[rows, cols]
         out_d[k, rows, dest[rows, cols]] = dist[rows, cols]
     return out_h, out_d, count.astype(np.int32)
+
+
+class ShardAccumulator:
+    """Incremental host-side builder of the hub-partitioned layout.
+
+    Holds K per-shard ``[n, cap_k]`` label arrays whose capacities
+    regrow geometrically *and independently* — the streaming
+    counterpart of :func:`hub_partition_arrays`, for construction
+    flows that emit labels superstep by superstep and must never
+    materialize the dense ``[n, cap]`` table (``repro.engine``'s
+    sharded emission sink). Insertion order within a shard row equals
+    emission order, which is exactly the slot order a dense build +
+    :func:`hub_partition_arrays` re-home would produce, so the two
+    paths stay bit-identical.
+    """
+
+    def __init__(self, n: int, rank: np.ndarray, num_shards: int,
+                 init_cap: int = 8):
+        self.n = int(n)
+        self.num_shards = max(1, int(num_shards))
+        self.owner = hub_owner(rank, self.num_shards)
+        cap0 = max(1, int(init_cap))
+        self.hubs = [np.full((self.n, cap0), -1, dtype=np.int32)
+                     for _ in range(self.num_shards)]
+        self.dist = [np.full((self.n, cap0), np.inf, dtype=np.float32)
+                     for _ in range(self.num_shards)]
+        self.count = np.zeros((self.num_shards, self.n), dtype=np.int32)
+
+    def _grow(self, k: int, need: int) -> None:
+        cap = self.hubs[k].shape[1]
+        new = cap
+        while new < need:
+            new *= 2
+        if new == cap:
+            return
+        self.hubs[k] = np.pad(self.hubs[k], ((0, 0), (0, new - cap)),
+                              constant_values=-1)
+        self.dist[k] = np.pad(self.dist[k], ((0, 0), (0, new - cap)),
+                              constant_values=np.inf)
+
+    def insert(self, roots: np.ndarray, valid: np.ndarray,
+               emit: np.ndarray, dist: np.ndarray) -> int:
+        """Append labels ``(roots[b], dist[b, v])`` for every
+        ``emit[b, v]`` into the owning shard; returns labels added.
+
+        All of a root's labels share its hub, so each batch row lands
+        wholesale in ``owner[root]`` — one shard touch per tree.
+        """
+        roots = np.asarray(roots)
+        valid = np.asarray(valid)
+        emit = np.asarray(emit)
+        dist = np.asarray(dist)
+        added = 0
+        for b in range(len(roots)):
+            if not valid[b]:
+                continue
+            r = int(roots[b])
+            vs = np.nonzero(emit[b])[0]
+            if not len(vs):
+                continue
+            k = int(self.owner[r])
+            pos = self.count[k, vs]
+            self._grow(k, int(pos.max()) + 1)
+            self.hubs[k][vs, pos] = r
+            self.dist[k][vs, pos] = dist[b, vs]
+            self.count[k, vs] += 1
+            added += len(vs)
+        return added
+
+    @property
+    def total_labels(self) -> int:
+        return int(self.count.sum())
+
+    def shard_arrays(self):
+        """Per-shard ``{hubs, dist, count}`` trimmed to the tight
+        per-shard cap (matches ``ShardedStore.shard_arrays``)."""
+        for k in range(self.num_shards):
+            cap = int(max(1, self.count[k].max()))
+            yield k, {"hubs": self.hubs[k][:, :cap],
+                      "dist": self.dist[k][:, :cap],
+                      "count": self.count[k]}
+
+    # --------------------------------------------- checkpoint payload
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        # copies, not views: inserts mutate the live buffers in place,
+        # and an async checkpoint writer must snapshot this superstep,
+        # not whatever the next superstep has scribbled by write time
+        out: Dict[str, np.ndarray] = {"count": self.count.copy()}
+        for k in range(self.num_shards):
+            out[f"shard{k}_hubs"] = self.hubs[k].copy()
+            out[f"shard{k}_dist"] = self.dist[k].copy()
+        return out
+
+    def load_state(self, arrays: Dict[str, np.ndarray]) -> None:
+        self.count = np.asarray(arrays["count"]).astype(np.int32).copy()
+        self.hubs = [np.asarray(arrays[f"shard{k}_hubs"]).copy()
+                     for k in range(self.num_shards)]
+        self.dist = [np.asarray(arrays[f"shard{k}_dist"]).copy()
+                     for k in range(self.num_shards)]

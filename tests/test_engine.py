@@ -1,0 +1,391 @@
+"""The `repro.engine` superstep engine: scheduler parity, per-algo
+bit-identity through the engine, checkpoint/resume equality for every
+algorithm family (new capability), streaming-sharded builds, and
+regrow-resume."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import labels as lbl
+from repro.core import validate
+from repro.core.labels import LabelOverflowError
+from repro.core.pll import pll_undirected
+from repro.engine import (BatchSchedule, QueueSchedule, rank_order,
+                          root_batches, run_build)
+from repro.graphs import grid_road, random_connected, scale_free
+from repro.graphs.ranking import degree_ranking
+from repro.index import BuildPlan, build
+from repro.index.report import SuperstepStat
+from repro.engine.records import SuperstepRecord
+
+
+def small():
+    g = scale_free(40, attach=2, seed=1)
+    return g, degree_ranking(g)
+
+
+def tables_equal(a, b) -> bool:
+    """Raw bit-identity, not just set equality: slot order included."""
+    return (np.array_equal(np.asarray(a.hubs), np.asarray(b.hubs))
+            and np.array_equal(np.asarray(a.dist), np.asarray(b.dist))
+            and np.array_equal(np.asarray(a.count), np.asarray(b.count)))
+
+
+def drop_steps_after(tmp, mgr, keep: int):
+    """Simulate an interrupt: delete all but the first ``keep``
+    committed checkpoints."""
+    steps = mgr.all_steps()
+    assert len(steps) > keep, "scenario needs a later checkpoint to drop"
+    for s in steps[keep:]:
+        shutil.rmtree(os.path.join(str(tmp), f"step_{s:010d}"))
+    return steps[keep - 1]
+
+
+# ----------------------------------------------------------- scheduler
+
+def test_root_batches_pad_and_order():
+    order = np.arange(10)
+    batches = list(root_batches(order, 4))
+    assert len(batches) == 3
+    roots, valid = batches[-1]
+    np.testing.assert_array_equal(roots, [8, 9, 0, 0])
+    np.testing.assert_array_equal(valid, [True, True, False, False])
+
+
+def test_batch_schedule_resume_boundaries():
+    sched = BatchSchedule(np.arange(10), 4)
+    full = [(s.pos, s.end) for s in sched.steps()]
+    assert full == [(0, 4), (4, 8), (8, 10)]
+    resumed = [(s.pos, s.end) for s in sched.steps(start=4)]
+    assert resumed == full[1:]          # same boundaries, mid-entry
+
+
+def test_queue_schedule_geometric_growth_and_resume():
+    queues = np.arange(32).reshape(2, 16)
+    sched = QueueSchedule(queues, batch=2, beta=2.0, first_superstep=2)
+    steps = list(sched.steps())
+    sizes = [s.end - s.pos for s in steps]
+    assert sizes == [2, 4, 8, 2]        # grows by beta, clipped at end
+    # resuming with the stored growth cursor reproduces the tail
+    tail = list(sched.steps(start=steps[1].end,
+                            size=steps[1].next_size))
+    assert [(s.pos, s.end) for s in tail] == \
+        [(s.pos, s.end) for s in steps[2:]]
+    # padded columns are invalid
+    assert (steps[-1].roots >= 0).all()
+
+
+def test_rank_order_matches_legacy_spelling():
+    rank = np.array([3, 0, 2, 1, 4], dtype=np.int32)
+    np.testing.assert_array_equal(
+        rank_order(rank),
+        np.argsort(-rank.astype(np.int64), kind="stable"))
+
+
+# ------------------------------------------------- per-algo bit parity
+
+ALGO_CASES = [
+    ("plant", {}),
+    ("gll", {"alpha": 2.0}),
+    ("lcc", {}),
+    ("dgll", {}),
+    ("hybrid", {"eta": 4, "psi_threshold": 2.0}),
+    ("plant-dist", {}),
+    ("pll-ref", {}),
+]
+
+
+@pytest.mark.parametrize("algo,kw", ALGO_CASES)
+def test_engine_build_is_exact_chl(algo, kw):
+    g, rank = small()
+    ref = pll_undirected(g, rank)
+    mesh = None
+    if algo in ("dgll", "hybrid", "plant-dist"):
+        from repro.core.dgll import make_node_mesh
+        mesh = make_node_mesh(1)
+    res = run_build(g, rank, algo=algo, batch=4, mesh=mesh, **kw)
+    if res.sink.kind == "mesh":
+        from repro.core.dgll import merge_partitions
+        table = merge_partitions(res.sink.table)
+    else:
+        table = res.sink.table()
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    assert len(res.records) >= 1
+    assert all(isinstance(r, SuperstepRecord) for r in res.records)
+
+
+def test_report_rows_are_engine_records():
+    # satellite: one typed per-superstep row, shared end to end — the
+    # BuildReport row type IS the engine record
+    assert SuperstepStat is SuperstepRecord
+    g, rank = small()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    rows = idx.report.supersteps
+    assert rows and all(isinstance(r, SuperstepRecord) for r in rows)
+    assert all(r.trees is not None and r.trees >= 1 for r in rows)
+    assert sum(r.labels for r in rows) == idx.total_labels
+
+
+def test_distributed_stats_mode_not_duplicated():
+    # satellite: hybrid._record used to append the same mode string to
+    # stats["supersteps"] AND stats["mode"]; the legacy dict now
+    # carries the mode list once
+    from repro.core.dgll import make_node_mesh
+    from repro.core.hybrid import hybrid_chl
+    g, rank = small()
+    _, stats = hybrid_chl(g, rank, mesh=make_node_mesh(1), batch=4,
+                          eta=4, psi_threshold=2.0)
+    assert "supersteps" not in stats
+    assert {"plant-hc", "plant", "dgll"} >= set(stats["mode"])
+
+
+# ---------------------------------------------- checkpoint/resume (new)
+
+def test_plant_resume_equality_bit_identical(tmp_path):
+    g, rank = small()
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    full = run_build(g, rank, algo="plant", batch=8,
+                     ckpt=mgr).sink.table()
+    cursor = drop_steps_after(tmp_path, mgr, keep=2)
+    res = run_build(g, rank, algo="plant", batch=8,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from == cursor
+    assert tables_equal(res.sink.table(), full)
+
+
+def test_gll_resume_equality_bit_identical(tmp_path):
+    g, rank = small()
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    full_res = run_build(g, rank, algo="gll", batch=4, alpha=1.0,
+                         ckpt=mgr)
+    full = full_res.sink.table()
+    assert len(mgr.all_steps()) >= 2    # several flush commits
+    cursor = drop_steps_after(tmp_path, mgr, keep=1)
+    res = run_build(g, rank, algo="gll", batch=4, alpha=1.0,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from == cursor
+    assert tables_equal(res.sink.table(), full)
+    # counters resumed, not double-counted
+    assert res.counters == full_res.counters
+
+
+def test_directed_resume_equality(tmp_path):
+    g = random_connected(24, extra_edges=40, seed=0, directed=True)
+    rank = degree_ranking(g)
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    full = run_build(g, rank, algo="directed", batch=4, ckpt=mgr)
+    drop_steps_after(tmp_path, mgr, keep=2)
+    res = run_build(g, rank, algo="directed", batch=4,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert tables_equal(res.sink.table("out"), full.sink.table("out"))
+    assert tables_equal(res.sink.table("in"), full.sink.table("in"))
+
+
+def test_resume_rejects_other_graph_checkpoints(tmp_path):
+    """A reused checkpoint directory must never donate label state to
+    a different build input: same n, same algo, different graph —
+    the fingerprint check clears the foreign checkpoints."""
+    g1 = scale_free(40, attach=2, seed=1)
+    g2 = scale_free(40, attach=2, seed=2)        # same n, other edges
+    rank1, rank2 = degree_ranking(g1), degree_ranking(g2)
+    run_build(g1, rank1, algo="plant", batch=8,
+              ckpt=CheckpointManager(str(tmp_path), keep=100))
+    res = run_build(g2, rank2, algo="plant", batch=8,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from is None              # refused, built fresh
+    validate.check_equal(lbl.to_numpy_sets(res.sink.table()),
+                         pll_undirected(g2, rank2))
+
+
+def test_resume_rejects_other_batch_config(tmp_path):
+    """Checkpoints committed under a different batch grouping are not
+    resumable (boundaries — and for optimistic algos the labels —
+    would differ)."""
+    g, rank = small()
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    run_build(g, rank, algo="gll", batch=4, alpha=1.0, ckpt=mgr)
+    drop_steps_after(tmp_path, mgr, keep=1)
+    res = run_build(g, rank, algo="gll", batch=8, alpha=1.0,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from is None
+    validate.check_equal(lbl.to_numpy_sets(res.sink.table()),
+                         pll_undirected(g, rank))
+
+
+def test_resume_rejects_other_algo_checkpoints(tmp_path):
+    g, rank = small()
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    run_build(g, rank, algo="plant", batch=8, ckpt=mgr)
+    assert mgr.all_steps()
+    # a gll resume finds plant checkpoints: cleared, fresh run
+    res = run_build(g, rank, algo="gll", batch=4, alpha=1.0,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from is None
+    validate.check_equal(lbl.to_numpy_sets(res.sink.table()),
+                         pll_undirected(g, rank))
+
+
+def test_regrow_resume_continues_from_committed_superstep(tmp_path):
+    """The tentpole claim: LabelOverflowError regrow resumes mid-build
+    via the engine checkpoint (restored smaller-cap state padded to
+    the grown cap) instead of restarting."""
+    g, rank = small()
+    ref = pll_undirected(g, rank)
+    need = int(np.asarray(
+        run_build(g, rank, algo="plant", batch=4)
+        .sink.table().count).max())
+    # find a cap that overflows only after at least one commit
+    cap = None
+    for c in range(3, need):
+        shutil.rmtree(tmp_path, ignore_errors=True)
+        os.makedirs(tmp_path)
+        mgr = CheckpointManager(str(tmp_path), keep=100)
+        try:
+            run_build(g, rank, algo="plant", batch=4, cap=c, ckpt=mgr)
+        except LabelOverflowError:
+            if mgr.all_steps():
+                cap = c
+                break
+    assert cap is not None, "no mid-run overflow cap found"
+    committed = mgr.all_steps()[-1]
+    res = run_build(g, rank, algo="plant", batch=4, cap=need,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from == committed      # continued, not restarted
+    validate.check_equal(lbl.to_numpy_sets(res.sink.table()), ref)
+
+
+def test_build_facade_regrow_resumes_with_checkpoints(tmp_path):
+    """Same, through `repro.index.build`: the retry after a regrow
+    resumes from the checkpoints the overflowing attempt committed."""
+    g, rank = small()
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    idx = build(g, rank, BuildPlan(algo="plant", batch=4, cap=4),
+                ckpt=mgr)
+    assert idx.report.cap_retries >= 1
+    assert idx.validate_against(pll_undirected(g, rank))
+    assert mgr.peek()["sink"]["cap"] == idx.report.cap
+
+
+# ------------------------------------------------- streaming sharding
+
+def test_streaming_sharded_equals_dense_then_rehome():
+    from repro.index.store import ShardedStore
+    g, rank = small()
+    dense = run_build(g, rank, algo="plant", batch=8).sink.table()
+    rehomed = ShardedStore.from_table(dense, rank, 3)
+    res = run_build(g, rank, algo="plant", batch=8, streaming_shards=3)
+    streamed = ShardedStore.from_accumulator(res.sink.acc)
+    assert streamed.num_shards == rehomed.num_shards
+    for (k1, a), (k2, b) in zip(streamed.shard_arrays(),
+                                rehomed.shard_arrays()):
+        assert k1 == k2
+        np.testing.assert_array_equal(a["hubs"], b["hubs"])
+        np.testing.assert_array_equal(a["dist"], b["dist"])
+        np.testing.assert_array_equal(a["count"], b["count"])
+
+
+def test_streaming_build_never_materializes_dense_table(monkeypatch):
+    """`build(store="sharded")` for a streaming algo must not allocate
+    the dense [n, cap] table — not via the sink, not via re-homing."""
+    g, rank = small()
+
+    def boom(*a, **k):                         # pragma: no cover
+        raise AssertionError("dense-table path used in streaming build")
+
+    monkeypatch.setattr(lbl, "insert_batch", boom)
+    monkeypatch.setattr(lbl, "empty", boom)
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    assert idx.store.kind == "sharded"
+    assert idx.store.num_shards == 2
+    monkeypatch.undo()
+    # answers still exact
+    assert idx.validate_against(g)
+
+
+def test_streaming_build_facade_matches_rehomed_queries():
+    g, rank = small()
+    streamed = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                        store="sharded", shards=3))
+    rehomed = build(g, rank, BuildPlan(algo="gll", batch=8,
+                                       store="sharded", shards=3))
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, g.n, 128).astype(np.int32)
+    v = rng.integers(0, g.n, 128).astype(np.int32)
+    np.testing.assert_array_equal(streamed.query(u, v),
+                                  rehomed.query(u, v))
+
+
+def test_streaming_sharded_resume(tmp_path):
+    """Interrupted streaming build resumes from the committed shard
+    arrays (the CI chain's in-process twin)."""
+    g, rank = small()
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    full = run_build(g, rank, algo="plant", batch=8,
+                     streaming_shards=2, ckpt=mgr)
+    drop_steps_after(tmp_path, mgr, keep=2)
+    res = run_build(g, rank, algo="plant", batch=8, streaming_shards=2,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from is not None
+    for (_, a), (_, b) in zip(res.sink.shard_arrays(),
+                              full.sink.shard_arrays()):
+        np.testing.assert_array_equal(a["hubs"], b["hubs"])
+        np.testing.assert_array_equal(a["count"], b["count"])
+
+
+def test_streaming_rejects_table_dependent_algos():
+    g, rank = small()
+    with pytest.raises(ValueError, match="streaming"):
+        run_build(g, rank, algo="gll", batch=4, streaming_shards=2)
+
+
+def test_pll_ref_streams_too():
+    from repro.index.store import ShardedStore
+    g, rank = small()
+    res = run_build(g, rank, algo="pll-ref", batch=8,
+                    streaming_shards=2)
+    store = ShardedStore.from_accumulator(res.sink.acc)
+    ref = pll_undirected(g, rank)
+    validate.check_equal(lbl.to_numpy_sets(store.to_table()), ref)
+
+
+# ------------------------------------------------------------- hybrid
+
+def test_hybrid_resume_mid_run_keeps_phase(tmp_path):
+    """A hybrid interrupted after the Ψ switch resumes in DGLL mode
+    (the phase flag travels with the checkpoint)."""
+    from repro.core.dgll import make_node_mesh, merge_partitions
+    g = grid_road(6, 6, seed=2)
+    rank = degree_ranking(g)
+    mesh = make_node_mesh(1)
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    full = run_build(g, rank, algo="hybrid", batch=4, beta=2.0,
+                     eta=4, psi_threshold=2.0, mesh=mesh, ckpt=mgr)
+    modes = [r.mode for r in full.records]
+    assert "dgll" in modes and any("plant" in m for m in modes)
+    # drop everything after the first post-switch commit
+    switch_i = modes.index("dgll")
+    drop_steps_after(tmp_path, mgr, keep=switch_i + 1)
+    res = run_build(g, rank, algo="hybrid", batch=4, beta=2.0,
+                    eta=4, psi_threshold=2.0, mesh=mesh,
+                    ckpt=CheckpointManager(str(tmp_path), keep=100),
+                    resume=True)
+    assert res.resumed_from is not None
+    assert [r.mode for r in res.records] == modes
+    assert tables_equal(merge_partitions(res.sink.table),
+                        merge_partitions(full.sink.table))
+    validate.check_equal(
+        lbl.to_numpy_sets(merge_partitions(res.sink.table)),
+        pll_undirected(g, rank))

@@ -329,10 +329,11 @@ def test_build_checkpoint_resume_same_table(tmp_path):
     assert CHLIndex.load(path).total_labels == idx.total_labels
 
 
-def test_distributed_regrow_clears_stale_checkpoints(tmp_path):
+def test_distributed_regrow_resumes_from_checkpoint(tmp_path):
     """An overflowing distributed attempt must raise before committing
-    a corrupt table, and the regrown retry must not leave stale
-    small-cap checkpoints behind to shadow future resumes."""
+    a corrupt table, and the regrown retry resumes from the last
+    committed superstep (smaller-cap state padded to the grown cap)
+    instead of restarting the whole build."""
     from repro.checkpoint import CheckpointManager
     from repro.core.dgll import make_node_mesh
     g = scale_free(40, attach=2, seed=5)
@@ -343,12 +344,17 @@ def test_distributed_regrow_clears_stale_checkpoints(tmp_path):
                 mesh=mesh, ckpt=mgr)
     assert idx.report.cap_retries >= 1
     assert idx.validate_against(pll_undirected(g, rank))
-    # every surviving checkpoint was written under the final cap
-    import json, os
-    for s in mgr.all_steps():
-        path = tmp_path / f"step_{s:010d}" / "manifest.json"
-        manifest = json.loads(path.read_text())
-        assert manifest["data_state"]["cap"] == idx.report.cap
+    # the newest surviving checkpoint was committed under the final cap
+    assert mgr.peek()["sink"]["cap"] == idx.report.cap
+    # and the overflowing attempt never committed a corrupt table: a
+    # fresh resume from these checkpoints reproduces the same labels
+    idx2 = build(g, rank,
+                 BuildPlan(algo="plant-dist", batch=4,
+                           cap=idx.report.cap),
+                 mesh=mesh, ckpt=CheckpointManager(str(tmp_path)),
+                 resume=True)
+    assert (lbl.to_numpy_sets(idx2.table)
+            == lbl.to_numpy_sets(idx.table))
 
 
 def test_resume_with_changed_cap_clears_stale_checkpoints(tmp_path):
@@ -361,8 +367,9 @@ def test_resume_with_changed_cap_clears_stale_checkpoints(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     plan = BuildPlan(algo="plant-dist", batch=4, cap=40)
     idx = build(g, rank, plan, mesh=mesh, ckpt=mgr)
-    # resume under a different cap: stale checkpoints must be dropped,
-    # not left shadowing the fresh run's lower step numbers
+    # resume under a *smaller* cap: the saved larger-cap checkpoints
+    # cannot be truncated — they must be dropped, not left shadowing
+    # the fresh run's lower step numbers
     mgr2 = CheckpointManager(str(tmp_path))
     idx2 = build(g, rank, plan.replace(cap=30), mesh=mesh, ckpt=mgr2,
                  resume=True)
@@ -371,7 +378,7 @@ def test_resume_with_changed_cap_clears_stale_checkpoints(tmp_path):
     for s in mgr2.all_steps():
         manifest = json.loads(
             (tmp_path / f"step_{s:010d}" / "manifest.json").read_text())
-        assert manifest["data_state"]["cap"] == 30
+        assert manifest["data_state"]["sink"]["cap"] == 30
 
 
 def test_report_dict_round_trip():
