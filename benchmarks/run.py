@@ -17,6 +17,7 @@ MODULES = [
     "fig9_als_vs_q",
     "table4_query_modes",
     "kernels_bench",
+    "serving_bench",
     "roofline_report",
 ]
 

@@ -6,7 +6,7 @@ The single entry point for the paper's pipeline:
 
     idx = build(g, rank, BuildPlan(algo="hybrid", eta=16))
     idx.query(u, v)                  # exact PPSD distances
-    idx.serve(mode="qdol")           # batched QueryServer, any §6.3 mode
+    idx.serve(mode="qdol")           # batched QueryService, any §6.3 mode
     idx.save("run/index")            # versioned artifact on disk
     idx = CHLIndex.load("run/index")
 

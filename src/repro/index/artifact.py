@@ -9,7 +9,7 @@ it:
 
     idx = build(g, rank, BuildPlan(algo="hybrid", store="sharded"))
     idx.query(u, v)                      # batched PPSD distances
-    srv = idx.serve(mode="qdol")         # QueryServer, any §6.3 mode
+    srv = idx.serve(mode="qdol")         # QueryService, any §6.3 mode
     idx.validate_against(oracle)         # exact-CHL / distance check
     idx.save("run/index")                # versioned sharded artifact
     idx2 = CHLIndex.load("run/index", store="spill")
@@ -63,7 +63,7 @@ from repro.index.store import (LOAD_STORE_KINDS, DenseStore, LabelStore,
                                ShardedStore, SpillStore, open_shard,
                                shard_filename)
 from repro.serve import backends
-from repro.serve.query_server import QueryServer
+from repro.serve.service import QueryService
 
 FORMAT = "repro.index/chl"
 VERSION = 2
@@ -166,22 +166,34 @@ class CHLIndex:
     # --------------------------------------------------------- serve
 
     def serve(self, mode: str = "qlsn", *, mesh=None,
-              batch_size: int = 1024, drop_first: bool = True
-              ) -> QueryServer:
-        """Query server in any §6.3 storage mode — no mesh/layout/store
-        ceremony at the call site (undirected only; directed serving
-        is an open ROADMAP item). Routes through the label store:
-        dense stores serve all three modes as before, sharded stores
-        answer from their own hub partitions, spill stores serve QLSN
-        from the memory-mapped shards."""
+              batch_size: int = 1024, drop_first: bool = True,
+              deadline_ms: float = 2.0, cache: int = 0,
+              max_queue: Optional[int] = None,
+              routed: Optional[bool] = None) -> QueryService:
+        """The serving tier (:class:`repro.serve.QueryService`) in any
+        §6.3 storage mode — no mesh/layout/store ceremony at the call
+        site (undirected only; directed serving is an open ROADMAP
+        item). Routes through the label store: dense stores serve all
+        three modes as before, sharded stores answer from their own
+        hub partitions (per-shard routed by default for QLSN), spill
+        stores serve QLSN from the memory-mapped shards.
+
+        Service knobs: ``deadline_ms`` bounds how long an arrival
+        waits before :meth:`~repro.serve.QueryService.pump` forces a
+        partial batch out; ``cache`` sizes the hot-pair LRU (0 = off);
+        ``max_queue`` bounds the admission queue (``None`` = no gate);
+        ``routed`` overrides per-shard query routing (``None`` =
+        auto)."""
         if self.directed:
             raise NotImplementedError(
                 "serve() currently supports undirected indices")
         fn = backends.make_answer_fn(self.store, mode, mesh=mesh,
                                      partitioned=self.partitioned,
-                                     rank=self.rank)
-        return QueryServer(fn, batch_size=batch_size,
-                           drop_first=drop_first)
+                                     rank=self.rank, routed=routed)
+        return QueryService(fn, batch_size=batch_size,
+                            drop_first=drop_first,
+                            deadline_s=deadline_ms * 1e-3,
+                            cache_size=cache, max_queue=max_queue)
 
     # ------------------------------------------------------ validate
 

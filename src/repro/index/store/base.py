@@ -73,6 +73,19 @@ class LabelStore(Protocol):
         +inf / -1 when the label sets are disjoint)."""
         ...
 
+    def shard_counts(self) -> np.ndarray:
+        """Host ``[num_shards, n]`` per-shard label counts — the
+        routing table the serving tier uses to touch only the shards
+        owning a query's endpoints (``repro.serve.routing``)."""
+        ...
+
+    def query_shard(self, k: int, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        """Partial PPSD mins over shard ``k`` only (+inf / -1 where
+        that shard holds no common hub). Exact under per-shard
+        routing: skipping a shard in which either endpoint holds zero
+        labels drops only +inf terms from the cross-shard min."""
+        ...
+
     def to_table(self):
         """Materialize one dense :class:`~repro.core.labels.LabelTable`
         (host-side analysis, QDOL layout, directed queries). May cost

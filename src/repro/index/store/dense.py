@@ -42,6 +42,15 @@ class DenseStore:
         d, h = lbl.query_pairs(self._table, u, v)
         return np.asarray(d), np.asarray(h)
 
+    def shard_counts(self) -> np.ndarray:
+        """``[1, n]`` label counts (routing degenerates for one shard)."""
+        return np.asarray(self._table.count)[None]
+
+    def query_shard(self, k: int, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        if k != 0:
+            raise IndexError(f"dense store has one shard, not {k + 1}")
+        return self.query(u, v)
+
     def to_table(self) -> LabelTable:
         return self._table
 

@@ -44,6 +44,13 @@ def _stacked_query(hubs, dist, count, u, v):
     return best, jnp.where(jnp.isfinite(best), hub, -1)
 
 
+@jax.jit
+def _one_shard_query(hubs, dist, count, u, v):
+    """Partial PPSD mins over a single shard's [n, Ls] arrays —
+    the per-shard routed serving path."""
+    return lbl.query_pairs(LabelTable(hubs, dist, count), u, v)
+
+
 class ShardedStore:
     kind = "sharded"
 
@@ -56,6 +63,10 @@ class ShardedStore:
         if self.hubs.ndim != 3 or self.count.ndim != 2:
             raise ValueError("ShardedStore wants [K, n, Ls] labels and "
                              "[K, n] counts")
+        # per-shard [n, Ls] slices, materialized lazily for the routed
+        # serving path (slicing the stacked arrays per query would pay
+        # an O(n·Ls) device copy on every launch)
+        self._shard_views: Dict[int, Tuple] = {}
 
     # ---------------------------------------------------- protocol
 
@@ -76,9 +87,35 @@ class ShardedStore:
         return int(np.asarray(jnp.sum(self.count)))
 
     def query(self, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        d, h = self.query_device(u, v)
+        return np.asarray(d), np.asarray(h)
+
+    def query_device(self, u, v) -> Tuple[jax.Array, jax.Array]:
+        """Full K-shard reduction, staying on device (jitted) — the
+        serving-path variant of :meth:`query` (no host round trip per
+        batch)."""
         u = jnp.atleast_1d(jnp.asarray(u, jnp.int32))
         v = jnp.atleast_1d(jnp.asarray(v, jnp.int32))
-        d, h = _stacked_query(self.hubs, self.dist, self.count, u, v)
+        return _stacked_query(self.hubs, self.dist, self.count, u, v)
+
+    def shard_counts(self) -> np.ndarray:
+        """Host ``[K, n]`` per-shard label counts — the routing table
+        for per-shard query dispatch (shard k can contribute to
+        ``(u, v)`` only when both endpoints hold labels in k)."""
+        return np.asarray(self.count)
+
+    def query_shard(self, k: int, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        """Partial PPSD mins over shard ``k`` only (jitted; +inf/-1
+        where shard k holds no common hub). Exact per-shard routing:
+        skipping shards where either endpoint has zero labels drops
+        only +inf contributions from the cross-shard min."""
+        views = self._shard_views.get(k)
+        if views is None:
+            views = (self.hubs[k], self.dist[k], self.count[k])
+            self._shard_views[k] = views
+        u = jnp.atleast_1d(jnp.asarray(u, jnp.int32))
+        v = jnp.atleast_1d(jnp.asarray(v, jnp.int32))
+        d, h = _one_shard_query(*views, u, v)
         return np.asarray(d), np.asarray(h)
 
     def to_table(self) -> LabelTable:

@@ -175,6 +175,20 @@ class SpillStore:
             best = np.where(take, d, best)
         return best, hub
 
+    def shard_counts(self) -> np.ndarray:
+        """Host ``[K, n]`` per-shard label counts (already resident —
+        counts are the only arrays a spill store materializes)."""
+        return np.stack(self._counts)
+
+    def query_shard(self, k: int, u, v) -> Tuple[np.ndarray, np.ndarray]:
+        """Partial PPSD mins over shard ``k`` only, in host numpy over
+        the mapped segments — per-shard routing means a query pages in
+        only the shards owning its endpoints' hubs."""
+        s = self._shards[k]
+        return _partial_query_np(s["hubs"], s["dist"],
+                                 np.atleast_1d(np.asarray(u, np.int64)),
+                                 np.atleast_1d(np.asarray(v, np.int64)))
+
     def to_table(self) -> LabelTable:
         """Materializes everything — O(total label slots) host memory;
         use only for offline analysis, never on the serving path."""

@@ -121,7 +121,7 @@ def main(argv=None) -> dict:
     if args.queries and not idx.directed:
         rng = np.random.default_rng(1)
         srv = idx.serve(mode=args.query_mode, mesh=mesh, batch_size=512)
-        srv.warmup()
+        srv.warmup(buckets=args.queries % 512 != 0)
         srv.submit(rng.integers(0, g.n, args.queries),
                    rng.integers(0, g.n, args.queries))
         srv.flush()

@@ -23,11 +23,21 @@ Per store backend:
   the shard count, shard k lives on device k and ``qfdl_fn`` runs the
   partial-min + ``pmin`` as a ``shard_map``; otherwise the identical
   computation runs time-multiplexed on one device (vmapped partial
-  mins + one reduction). *qdol* materializes the dense table once
-  (the ζ-overlap layout needs full label rows).
+  mins + one reduction), jitted end to end — the batch never bounces
+  through host numpy.
+  *qdol* materializes the dense table once (the ζ-overlap layout
+  needs full label rows).
 - **SpillStore**: QLSN from the memory-mapped shard segments (host
   numpy — capacity over latency). The distributed modes need labels
   in device memory; asking for them raises with guidance.
+
+**Per-shard routing** (``routed=``): for multi-shard sharded/spill
+QLSN, the answer fn from ``repro.serve.routing`` touches only the
+shards in which *both* endpoints hold labels, instead of reducing
+over all K — bit-identical (skipped shards contribute only +inf) and
+the serving tier's default. ``routed=None`` picks automatically;
+``True``/``False`` force it (``False`` = the full-reduction paths
+above, which parity tests compare against).
 """
 
 from __future__ import annotations
@@ -107,8 +117,8 @@ def _sharded_answer_fn(store: ShardedStore, mode: str, *, mesh,
         return lambda u, v: f(part, u, v)
     if mode in ("qlsn", "qfdl"):
         # same partial-min + cross-shard reduction, time-multiplexed
-        # on the local device(s)
-        return lambda u, v: jnp.asarray(store.query(u, v)[0])
+        # on the local device(s) — jitted end to end, no host bounce
+        return lambda u, v: store.query_device(u, v)[0]
     # qdol needs full label rows per vertex — materialize once
     return _dense_answer_fn(store.to_table(), mode, mesh=mesh,
                             partitioned=partitioned, rank=rank)
@@ -117,16 +127,29 @@ def _sharded_answer_fn(store: ShardedStore, mode: str, *, mesh,
 def make_answer_fn(store: Union[LabelStore, LabelTable],
                    mode: str = "qlsn", *,
                    mesh=None, partitioned: Optional[LabelTable] = None,
-                   rank: Optional[np.ndarray] = None) -> AnswerFn:
+                   rank: Optional[np.ndarray] = None,
+                   routed: Optional[bool] = None) -> AnswerFn:
     """Answer callable for a storage mode; absorbs mesh/layout/store
     ceremony. Accepts any ``repro.index.store`` backend (bare
     ``LabelTable``s are wrapped dense). ``mesh`` defaults to all local
     devices for the distributed modes; ``partitioned``
     (construction-time layout) is synthesized from ``rank`` when
-    absent."""
+    absent. ``routed`` turns on per-shard query routing (see module
+    docstring); ``None`` = auto (on for multi-shard sharded/spill
+    QLSN, off elsewhere)."""
     if mode not in MODES:
         raise ValueError(f"unknown query mode {mode!r}; one of {MODES}")
     store = _as_store(store)
+    routable = (isinstance(store, (ShardedStore, SpillStore))
+                and store.num_shards > 1 and mode == "qlsn")
+    if routed is None:
+        routed = routable
+    elif routed and not routable:
+        routed = False        # routing degenerates: fall through to
+        # the plain paths (single shard / dense / distributed modes)
+    if routed:
+        from repro.serve.routing import make_routed_answer_fn
+        return make_routed_answer_fn(store)
     if isinstance(store, SpillStore):
         if mode != "qlsn":
             raise NotImplementedError(

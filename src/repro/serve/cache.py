@@ -1,0 +1,58 @@
+"""Hot-pair LRU answer cache for the serving tier.
+
+Real PPSD traffic is heavily skewed — a handful of popular endpoint
+pairs dominate "millions of users" — so a small exact cache in front
+of the kernel absorbs most of the load. The cache stores the *served*
+f32 distance verbatim, so a hit is bit-identical to recomputing it;
+it is a pure memoization layer, toggleable per service.
+
+Undirected PPSD distances are symmetric (the intersection
+``min over common hubs of d(u,x)+d(v,x)`` is the same f32 value either
+way — addition is commutative and the candidate set is identical), so
+by default ``(u, v)`` and ``(v, u)`` share one entry. Serving a
+directed index through a raw answer fn should construct the cache with
+``symmetric=False``.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+
+class AnswerCache:
+    """Bounded LRU of ``(u, v) -> f32 distance``."""
+
+    def __init__(self, capacity: int, symmetric: bool = True):
+        if capacity < 1:
+            raise ValueError("AnswerCache needs capacity >= 1")
+        self.capacity = int(capacity)
+        self.symmetric = bool(symmetric)
+        self._d: "OrderedDict[tuple, np.float32]" = OrderedDict()
+
+    def _key(self, u: int, v: int) -> tuple:
+        if self.symmetric and v < u:
+            return (v, u)
+        return (u, v)
+
+    def get(self, u: int, v: int) -> Optional[np.float32]:
+        key = self._key(u, v)
+        val = self._d.get(key)
+        if val is not None:
+            self._d.move_to_end(key)
+        return val
+
+    def put(self, u: int, v: int, value) -> None:
+        key = self._key(u, v)
+        self._d[key] = np.float32(value)
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()

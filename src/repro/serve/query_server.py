@@ -1,83 +1,49 @@
-"""Batched PPSD query server — the production serving loop over a CHL.
+"""Deprecated shim — the serving loop now lives in
+``repro.serve.service.QueryService``.
 
-The paper's Table 4 measures latency (one query at a time) and
-throughput (batches of queries). A real deployment sits in between: a
-server aggregates arriving queries into fixed-size batches (padding
-the tail), dispatches them to one of the three storage modes, and
-tracks latency percentiles. This module implements that loop with a
-pluggable backend:
+The monolithic ``QueryServer`` (fixed-size batches, pad-the-tail per
+flush, unbounded result retention) was re-architected into the layered
+service tier: admission queue → hot-pair cache → micro-batcher →
+``make_answer_fn``. This module keeps the old names importable with
+the full legacy surface (``submit``/``flush``/``warmup``/``stats``/
+``stats_``) so downstream callers keep working while they migrate —
+constructing one warns, exactly like the PR-4 engine-layer shims.
 
-    srv = index.serve(mode="qdol", mesh=mesh)   # repro.index.CHLIndex
-    srv.warmup()                    # jit compile outside the percentiles
-    out = srv.submit(u, v)          # enqueues
-    srv.flush()                     # drains queues in batches
-    srv.stats()                     # latency/throughput accounting
+Differences from the historical class are bug fixes, not behavior
+drift:
 
-Mode wiring (QLSN / QFDL / QDOL) lives in `repro.serve.backends`;
-``QueryServer.build`` is kept as a thin deprecated shim over it —
-prefer ``CHLIndex.serve``.
+- ``flush`` no longer retains every result array forever (the old
+  ``self._results`` list grew without bound on a long-lived server);
+- empty-percentile summaries report ``nan`` instead of a fabricated
+  ``0.0`` (``ServerStats`` is now :class:`repro.serve.ServiceStats`).
 
-Latency accounting: the first batch through a fresh jitted backend
-pays XLA compile time, which used to poison p50/p99. Unless the
-server was explicitly ``warmup()``-ed, the first flushed batch is
-treated as the warmup sample: recorded in ``ServerStats.warmup_s``
-and excluded from the latency percentiles and busy time.
+Prefer ``CHLIndex.serve`` (returns a :class:`QueryService`).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
 import warnings
-from typing import Callable, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Optional
 
 from repro.core.labels import LabelTable
 from repro.serve import backends
+from repro.serve.service import QueryService
+from repro.serve.stats import ServiceStats
+
+#: legacy name — the accounting surface is the service tier's
+ServerStats = ServiceStats
 
 
-@dataclasses.dataclass
-class ServerStats:
-    queries: int = 0
-    batches: int = 0
-    busy_s: float = 0.0
-    warmup_s: float = 0.0          # compile/first-batch time, kept apart
-    measured_queries: int = 0      # queries behind busy_s/lat_samples
-    lat_samples: List[float] = dataclasses.field(default_factory=list)
+class QueryServer(QueryService):
+    """Deprecated alias of :class:`repro.serve.QueryService`."""
 
-    def summary(self) -> dict:
-        lat = np.asarray(self.lat_samples) if self.lat_samples else \
-            np.zeros(1)
-        # throughput over the *measured* queries only — a warmup batch
-        # contributes neither time nor count, so a single-batch caller
-        # reports 0 rather than N/epsilon
-        return {
-            "queries": self.queries,
-            "batches": self.batches,
-            "throughput_qps": (self.measured_queries
-                               / max(self.busy_s, 1e-9)),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "warmup_ms": self.warmup_s * 1e3,
-        }
-
-
-class QueryServer:
-    def __init__(self, answer: Callable[[jax.Array, jax.Array],
-                                        jax.Array],
-                 batch_size: int = 1024, drop_first: bool = True):
-        self._answer = answer
-        self.batch_size = batch_size
-        self._qu: List[np.ndarray] = []
-        self._qv: List[np.ndarray] = []
-        self._results: List[np.ndarray] = []
-        self._warm = not drop_first
-        self.stats_ = ServerStats()
-
-    # ------------------------------------------------------------ api
+    def __init__(self, answer, batch_size: int = 1024,
+                 drop_first: bool = True, **kw):
+        warnings.warn(
+            "QueryServer is deprecated; use CHLIndex.serve (a "
+            "QueryService) instead", DeprecationWarning, stacklevel=2)
+        super().__init__(answer, batch_size=batch_size,
+                         drop_first=drop_first, **kw)
 
     @staticmethod
     def build(table: LabelTable, mode: str = "qlsn",
@@ -90,55 +56,6 @@ class QueryServer:
             DeprecationWarning, stacklevel=2)
         fn = backends.make_answer_fn(table, mode, mesh=mesh,
                                      partitioned=partitioned, rank=rank)
-        return QueryServer(fn, batch_size=batch_size)
-
-    def warmup(self) -> float:
-        """Run one dummy batch through the backend so jit compile time
-        never lands in a real query's latency. Returns seconds spent
-        (also recorded in ``ServerStats.warmup_s``)."""
-        z = jnp.zeros(self.batch_size, jnp.int32)
-        t0 = time.perf_counter()
-        jax.block_until_ready(self._answer(z, z))
-        dt = time.perf_counter() - t0
-        self.stats_.warmup_s += dt
-        self._warm = True
-        return dt
-
-    def submit(self, u: np.ndarray, v: np.ndarray) -> None:
-        self._qu.append(np.asarray(u, np.int32))
-        self._qv.append(np.asarray(v, np.int32))
-
-    def flush(self) -> np.ndarray:
-        """Answer everything queued; returns distances in order."""
-        if not self._qu:
-            return np.zeros(0, np.float32)
-        u = np.concatenate(self._qu)
-        v = np.concatenate(self._qv)
-        self._qu, self._qv = [], []
-        out = np.empty(len(u), np.float32)
-        B = self.batch_size
-        for s in range(0, len(u), B):
-            ub, vb = u[s:s + B], v[s:s + B]
-            pad = B - len(ub)
-            if pad:
-                ub = np.pad(ub, (0, pad))
-                vb = np.pad(vb, (0, pad))
-            t0 = time.perf_counter()
-            res = np.asarray(self._answer(jnp.asarray(ub),
-                                          jnp.asarray(vb)))
-            dt = time.perf_counter() - t0
-            out[s:s + B - pad] = res[:B - pad]
-            self.stats_.queries += B - pad
-            self.stats_.batches += 1
-            if self._warm:
-                self.stats_.busy_s += dt
-                self.stats_.measured_queries += B - pad
-                self.stats_.lat_samples.append(dt)
-            else:                      # first batch = compile sample
-                self.stats_.warmup_s += dt
-                self._warm = True
-        self._results.append(out)
-        return out
-
-    def stats(self) -> dict:
-        return self.stats_.summary()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return QueryServer(fn, batch_size=batch_size)

@@ -1,0 +1,290 @@
+"""The continuous-batching serving tier: micro-batcher semantics
+(tail carry, deadline flush, eager full batches), admission control,
+answer-cache bit-identity, per-shard query routing exactness, service
+stats (nan-safe percentiles, occupancy, hit rate), and the deprecated
+``QueryServer`` shim."""
+
+import numpy as np
+import pytest
+
+from repro.graphs import scale_free
+from repro.graphs.ranking import degree_ranking
+from repro.index import BuildPlan, CHLIndex, build
+from repro.serve import (AnswerCache, QueryServer, QueryService,
+                         ServerStats, ServiceOverloadError,
+                         ServiceStats, make_answer_fn,
+                         make_routed_answer_fn)
+
+
+def small_graph():
+    g = scale_free(48, attach=2, seed=3)
+    return g, degree_ranking(g)
+
+
+def query_batch(n, count=96, seed=5):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, n, count).astype(np.int32),
+            rng.integers(0, n, count).astype(np.int32))
+
+
+@pytest.fixture(scope="module")
+def built():
+    g, rank = small_graph()
+    dense = build(g, rank, BuildPlan(algo="plant", batch=8))
+    sharded = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                       store="sharded", shards=3))
+    return g, dense, sharded
+
+
+# ------------------------------------------------------- micro-batcher
+
+def test_flush_matches_query_with_tail(built):
+    """90 queries @ B=32: two eager full batches + one bucketed tail
+    launch; answers in submission order, bit-identical to query()."""
+    g, dense, _ = built
+    u, v = query_batch(g.n, 90)
+    svc = dense.serve(batch_size=32)
+    svc.submit(u, v)
+    assert svc.queue_depth == 90 - 64      # tail carried, not launched
+    out = svc.flush()
+    np.testing.assert_array_equal(out, dense.query(u, v))
+    st = svc.stats_
+    assert st.batches == 3
+    assert st.real_slots == 90
+    assert st.launched_slots == 64 + 32    # tail bucketed to 32
+    assert svc.queue_depth == 0
+
+
+def test_tail_carry_across_submissions(built):
+    """A tail left by one submit is coalesced with the next — carried,
+    not padded away per flush."""
+    g, dense, _ = built
+    u, v = query_batch(g.n, 48)
+    svc = dense.serve(batch_size=32)
+    svc.submit(u[:20], v[:20])
+    assert svc.stats_.batches == 0         # under a batch: nothing fired
+    svc.submit(u[20:], v[20:])             # 20+28: one eager full batch
+    assert svc.stats_.batches == 1
+    out = svc.flush()                      # 16 left -> one bucket launch
+    np.testing.assert_array_equal(out, dense.query(u, v))
+    assert svc.stats_.batches == 2
+    assert svc.stats_.launched_slots == 32 + 16
+
+
+def test_deadline_pump_with_fake_clock(built):
+    g, dense, _ = built
+    clk = [0.0]
+    svc = dense.serve(batch_size=32, deadline_ms=5.0)
+    svc._clock = lambda: clk[0]
+    tk = svc.try_submit(1, 2)
+    assert svc.pump() == 0                 # not due yet
+    assert not tk.done
+    clk[0] = 0.0049
+    assert svc.pump() == 0
+    clk[0] = 0.0051                        # past the oldest's deadline
+    assert svc.pump() == 1
+    assert tk.done
+    np.testing.assert_array_equal(
+        np.asarray([tk.value]), dense.query([1], [2]))
+
+
+def test_admission_rejects_then_recovers(built):
+    g, dense, _ = built
+    svc = dense.serve(batch_size=32, max_queue=4)
+    tks = [svc.try_submit(i % g.n, (i + 1) % g.n) for i in range(9)]
+    assert sum(t is None for t in tks) == 5
+    assert svc.stats_.rejected == 5 and svc.stats_.admitted == 4
+    with pytest.raises(ServiceOverloadError):
+        svc.submit(np.zeros(1, np.int32), np.ones(1, np.int32))
+    svc.drain()                            # frees the queue
+    assert svc.try_submit(0, 1) is not None
+    assert all(t.done for t in tks if t is not None)
+
+
+def test_flush_does_not_retain_results(built):
+    """The old server appended every flushed array to an internal list
+    forever; the service's epoch buffer must empty on flush."""
+    g, dense, _ = built
+    svc = dense.serve(batch_size=32)
+    for _ in range(3):
+        u, v = query_batch(g.n, 40)
+        svc.submit(u, v)
+        out = svc.flush()
+        assert len(out) == 40
+        assert svc._epoch == [] and svc.queue_depth == 0
+    assert not hasattr(svc, "_results")
+
+
+# ------------------------------------------------------------- cache
+
+def test_cache_bit_identity_and_hits(built):
+    g, dense, sharded = built
+    u, v = query_batch(g.n, 200)
+    ref = dense.query(u, v)
+    svc = sharded.serve(batch_size=64, cache=4096)
+    svc.submit(u, v)
+    np.testing.assert_array_equal(svc.flush(), ref)
+    svc.submit(u, v)                       # identical workload again
+    np.testing.assert_array_equal(svc.flush(), ref)   # bit-identical
+    st = svc.stats_
+    assert st.cache_hits >= 200            # second pass is all hits
+    assert 0.0 < st.cache_hit_rate <= 1.0
+    # cache off: same answers, no hit accounting
+    off = sharded.serve(batch_size=64, cache=0)
+    off.submit(u, v)
+    np.testing.assert_array_equal(off.flush(), ref)
+    assert off.stats_.cache_hits == 0
+    assert np.isnan(off.stats_.cache_hit_rate)
+
+
+def test_cache_symmetric_key_normalization():
+    c = AnswerCache(8, symmetric=True)
+    c.put(3, 7, np.float32(2.5))
+    assert c.get(7, 3) == np.float32(2.5)
+    asym = AnswerCache(8, symmetric=False)
+    asym.put(3, 7, np.float32(2.5))
+    assert asym.get(7, 3) is None
+    # LRU eviction: capacity bounds entries
+    for i in range(20):
+        c.put(i, i + 1, np.float32(i))
+    assert len(c) == 8
+
+
+# ------------------------------------------------------------- stats
+
+def test_service_stats_nan_when_empty():
+    st = ServiceStats()
+    s = st.summary()
+    assert np.isnan(s["p50_ms"]) and np.isnan(s["p99_ms"])
+    assert np.isnan(s["total_p99_ms"]) and np.isnan(s["queue_p50_ms"])
+    assert np.isnan(s["batch_occupancy"])
+    assert s["throughput_qps"] == 0.0
+    # the legacy alias carries the fix too (it used to fabricate 0.0)
+    assert ServerStats is ServiceStats
+    assert np.isnan(ServerStats().summary()["p99_ms"])
+
+
+def test_stats_occupancy_and_capacity(built):
+    g, dense, _ = built
+    u, v = query_batch(g.n, 64)
+    svc = dense.serve(batch_size=64, cache=1024)
+    svc.warmup()
+    svc.submit(u, v)
+    svc.flush()
+    st = svc.stats_
+    assert st.batch_occupancy == 1.0       # one exactly-full launch
+    assert st.capacity_qps >= st.throughput_qps > 0
+    keys = set(svc.stats())
+    assert {"queries", "batches", "throughput_qps", "p50_ms", "p99_ms",
+            "warmup_ms", "capacity_qps", "admitted", "rejected",
+            "queue_depth", "queue_depth_max", "batch_occupancy",
+            "cache_hit_rate", "queue_p50_ms", "queue_p99_ms",
+            "total_p50_ms", "total_p99_ms"} <= keys
+
+
+def test_warmup_buckets_compiles_partial_shapes(built):
+    g, dense, _ = built
+    svc = dense.serve(batch_size=64)
+    dt = svc.warmup(buckets=True)
+    assert dt > 0 and svc.stats_.warmup_s >= dt
+    svc.submit(*query_batch(g.n, 10))      # partial flush: bucket of 16
+    svc.flush()
+    assert len(svc.stats_.lat_samples) == 1    # measured, not warmup
+
+
+# ------------------------------------------------------------ routing
+
+def test_routed_sharded_parity_and_shard_skipping(built):
+    g, dense, sharded = built
+    u, v = query_batch(g.n, 128)
+    ref = np.asarray(sharded.store.query(u, v)[0])
+    routed = make_routed_answer_fn(sharded.store)
+    np.testing.assert_array_equal(routed(u, v), ref)
+    np.testing.assert_array_equal(ref, dense.query(u, v))
+    # the routing table skips (query, shard) pairs with an absent
+    # endpoint: some shard must be skippable for *some* query, else
+    # this graph exercises nothing (3 shards on 48 vertices: the
+    # low-rank shards are sparse)
+    has = sharded.store.shard_counts() > 0
+    active = has[:, u] & has[:, v]         # [K, Q]
+    assert not active.all()
+
+
+def test_routed_spill_parity(built, tmp_path):
+    g, dense, sharded = built
+    path = sharded.save(str(tmp_path / "idx"))
+    spill = CHLIndex.load(path, store="spill")
+    u, v = query_batch(g.n, 128)
+    routed = make_routed_answer_fn(spill.store)
+    np.testing.assert_array_equal(routed(u, v), dense.query(u, v))
+    # serve() wires routing automatically for multi-shard spill qlsn
+    svc = spill.serve(mode="qlsn", batch_size=32)
+    svc.submit(u, v)
+    np.testing.assert_array_equal(svc.flush(), dense.query(u, v))
+
+
+def test_make_answer_fn_routed_flag(built):
+    g, dense, sharded = built
+    u, v = query_batch(g.n, 64)
+    ref = dense.query(u, v)
+    auto = make_answer_fn(sharded.store, "qlsn")           # auto: on
+    forced_off = make_answer_fn(sharded.store, "qlsn", routed=False)
+    np.testing.assert_array_equal(np.asarray(auto(u, v)), ref)
+    np.testing.assert_array_equal(np.asarray(forced_off(u, v)), ref)
+    # dense stores never route, even when asked
+    fn = make_answer_fn(dense.store, "qlsn", routed=True)
+    np.testing.assert_array_equal(np.asarray(fn(u, v)), ref)
+
+
+def test_sharded_query_device_stays_jitted(built):
+    """The time-multiplexed sharded answer path returns device arrays
+    (no host bounce per batch)."""
+    import jax
+    g, dense, sharded = built
+    u, v = query_batch(g.n, 64)
+    d, h = sharded.store.query_device(u, v)
+    assert isinstance(d, jax.Array) and isinstance(h, jax.Array)
+    np.testing.assert_array_equal(np.asarray(d), dense.query(u, v))
+    fn = make_answer_fn(sharded.store, "qlsn", routed=False)
+    assert isinstance(fn(u, v), jax.Array)
+
+
+# ---------------------------------------------------------- open loop
+
+def test_poisson_open_loop_accounts_offered_load(built):
+    from repro.serve import poisson_open_loop, zipf_pairs
+    g, dense, _ = built
+    u, v = zipf_pairs(g.n, 150, np.random.default_rng(2))
+    svc = dense.serve(batch_size=32, cache=512, deadline_ms=1.0,
+                      max_queue=1024)
+    res = poisson_open_loop(svc, u, v, arrival_qps=5000.0)
+    assert res["offered_queries"] == 150
+    assert res["queries"] + res["rejected"] == 150
+    assert res["wall_s"] > 0
+    assert res["queries"] == 150           # queue ample: nothing dropped
+    out = svc.flush()                      # epoch survives for flush()
+    np.testing.assert_array_equal(out, dense.query(u, v))
+
+
+# ------------------------------------------------------------- shim
+
+def test_query_server_shim_warns_and_serves(built):
+    g, dense, _ = built
+    u, v = query_batch(g.n, 40)
+    with pytest.warns(DeprecationWarning, match="QueryServer"):
+        srv = QueryServer(make_answer_fn(dense.store, "qlsn"),
+                          batch_size=32)
+    assert isinstance(srv, QueryService)
+    srv.submit(u, v)
+    np.testing.assert_array_equal(srv.flush(), dense.query(u, v))
+
+
+def test_serve_returns_service_with_knobs(built):
+    g, dense, _ = built
+    svc = dense.serve(batch_size=16, deadline_ms=7.0, cache=64,
+                      max_queue=99)
+    assert isinstance(svc, QueryService)
+    assert not isinstance(svc, QueryServer)    # no deprecation tripwire
+    assert svc.deadline_s == pytest.approx(0.007)
+    assert svc.max_queue == 99
+    assert svc._cache is not None and svc._cache.capacity == 64

@@ -310,6 +310,10 @@ def test_no_engine_shim_call_sites_outside_index():
             if ("QueryServer.build" in text
                     and rel != "src/repro/serve/query_server.py"):
                 offenders.append(f"{rel}: calls QueryServer.build")
+            if ("QueryServer(" in text
+                    and not rel.startswith("src/repro/serve/")):
+                offenders.append(f"{rel}: constructs deprecated "
+                                 "QueryServer")
     assert not offenders, (
         "deprecated engine-layer shims used outside repro/index and "
         "tests:\n  " + "\n  ".join(offenders))
