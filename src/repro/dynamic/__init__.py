@@ -1,0 +1,22 @@
+"""`repro.dynamic` — incremental CHL repair for mutating graphs.
+
+Typed edge mutations (:class:`EdgeInsert` / :class:`EdgeDelete` /
+:class:`EdgeReweight` in a :class:`MutationBatch`), affected-tree
+frontier seeding (:func:`affected_hubs`), and the engine-driven
+:class:`RepairPolicy` that re-plants only invalidated trees —
+surfaced as ``CHLIndex.apply(mutations, graph=g) -> RepairReport``,
+bit-identical to a from-scratch rebuild on the mutated graph.
+"""
+
+from repro.dynamic.frontier import affected_hubs, endpoint_planes
+from repro.dynamic.mutations import (EdgeDelete, EdgeInsert,
+                                     EdgeReweight, MutationBatch,
+                                     ResolvedBatch, random_mutations)
+from repro.dynamic.repair import (RepairPolicy, RepairReport,
+                                  repair_index)
+
+__all__ = [
+    "EdgeInsert", "EdgeDelete", "EdgeReweight", "MutationBatch",
+    "ResolvedBatch", "random_mutations", "affected_hubs",
+    "endpoint_planes", "RepairPolicy", "RepairReport", "repair_index",
+]

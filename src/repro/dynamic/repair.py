@@ -1,0 +1,310 @@
+"""Rank-respecting incremental repair — re-plant only affected trees.
+
+The repair pass is "just another engine policy": a
+:class:`RepairPolicy` is a :class:`~repro.engine.policies.PlantPolicy`
+whose root schedule is the *affected* hub set (rank order preserved),
+run on the **mutated** graph through the unmodified
+``engine.run`` loop — so it inherits batching, typed
+``SuperstepRecord`` rows, checkpoint/resume and both sink residencies
+for free. The repaired store is then assembled host-side:
+
+1. drop every old label whose hub is affected (those trees' emissions
+   are stale — :mod:`repro.dynamic.frontier` proves the rest are not);
+2. append the re-planted emissions from the repair sink;
+3. restore each row's canonical ascending-rank order with one stable
+   argsort on ``order_index(hub)``.
+
+Step 3 is what makes the result **bit-identical** to a from-scratch
+rebuild: the engine schedule emits roots in ascending order-index, so
+a rebuilt row is exactly its label set sorted by ``order_index`` —
+hubs are unique per row, so the sort has no ties and the interleaving
+of kept + repaired labels is forced. Distances agree bitwise because
+unaffected trees see identical shortest-path multisets in both graphs
+and the repo's integral-weight convention keeps f32 path sums exact.
+
+Checkpoint safety: ``RepairPolicy.kind == "repair"`` — the engine
+stamps the kind into every checkpoint's data_state and refuses to
+restore across kinds, so a repair resume can never adopt a plain
+build's label state (or vice versa) even when the fingerprints
+collide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.labels import LabelOverflowError, LabelTable
+from repro.engine.policies import PlantPolicy
+from repro.engine.records import SuperstepRecord
+from repro.engine.runner import run
+from repro.engine.scheduler import rank_order
+from repro.engine.sink import DenseSink, StreamingShardSink
+from repro.index.store import DenseStore, ShardedStore
+
+from .frontier import affected_hubs
+from .mutations import MutationBatch
+
+
+class RepairPolicy(PlantPolicy):
+    """PLaNT over the affected roots only, on the mutated graph.
+
+    Inherits the plant step verbatim (unpruned max-rank-ancestor
+    trees — emissions canonical on arrival); only the schedule (the
+    affected subset, rank order kept by the caller) and the checkpoint
+    identity change. The inherited fingerprint already covers
+    (mutated graph, hierarchy, affected order) — exactly the inputs
+    the repair emissions depend on.
+    """
+
+    name = "repair"
+    kind = "repair"
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairReport:
+    """Typed outcome of one ``CHLIndex.apply`` wave (the repair-side
+    sibling of :class:`repro.index.report.BuildReport`)."""
+
+    wall_s: float
+    mutations: Dict[str, int]        # insert/delete/reweight counts
+    touched: int                     # mutated-edge endpoints
+    affected: int                    # trees re-planted
+    invalidated: int                 # old labels dropped
+    repaired: int                    # labels re-emitted
+    total_labels: int                # post-repair index size
+    als: float
+    cap: Optional[int]               # dense cap after repair (sharded: None)
+    store: str                       # "dense" | "sharded"
+    supersteps: List[SuperstepRecord] = dataclasses.field(
+        default_factory=list)
+    resumed_from: Optional[int] = None
+
+    @property
+    def waves(self) -> int:
+        return len(self.supersteps)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RepairReport":
+        d = dict(d)
+        d["supersteps"] = [SuperstepRecord(**s)
+                           for s in d.get("supersteps", [])]
+        return cls(**d)
+
+    def summary(self) -> str:
+        m = self.mutations
+        return (f"mutations={m.get('insert', 0)}i/{m.get('delete', 0)}d/"
+                f"{m.get('reweight', 0)}r affected={self.affected} "
+                f"invalidated={self.invalidated} "
+                f"repaired={self.repaired} labels={self.total_labels} "
+                f"ALS={self.als:.1f} waves={self.waves} "
+                f"wall={self.wall_s:.2f}s")
+
+
+def _order_index(rank: np.ndarray) -> np.ndarray:
+    """i64 [n] position of each vertex in the engine's root schedule —
+    the canonical per-row label sort key."""
+    order = rank_order(rank)
+    oi = np.empty(len(order), dtype=np.int64)
+    oi[order] = np.arange(len(order), dtype=np.int64)
+    return oi
+
+
+def _canonical_rows(hubs: np.ndarray, dist: np.ndarray,
+                    oi: np.ndarray, cap: Optional[int] = None):
+    """Sort each row's valid labels into ascending order-index (the
+    order a from-scratch engine schedule inserts them), compact the
+    invalid slots to the tail, and trim/pad to ``cap`` (default: the
+    tight cap). Hubs are unique per row, so the stable argsort is
+    deterministic with no ties."""
+    hubs = np.asarray(hubs)
+    dist = np.asarray(dist)
+    valid = hubs >= 0
+    key = np.where(valid, oi[np.where(valid, hubs, 0)],
+                   np.iinfo(np.int64).max)
+    order = np.argsort(key, axis=1, kind="stable")
+    hubs = np.take_along_axis(hubs, order, axis=1)
+    dist = np.take_along_axis(dist, order, axis=1)
+    count = valid.sum(axis=1).astype(np.int32)
+    tight = int(max(1, count.max())) if count.size else 1
+    cap = tight if cap is None else int(cap)
+    if cap < tight:
+        raise ValueError(f"cap {cap} below tight row max {tight}")
+    pad = cap - hubs.shape[1]
+    if pad > 0:
+        hubs = np.pad(hubs, ((0, 0), (0, pad)), constant_values=-1)
+        dist = np.pad(dist, ((0, 0), (0, pad)),
+                      constant_values=np.inf)
+    else:
+        hubs = hubs[:, :cap]
+        dist = dist[:, :cap]
+    # dropped labels were blanked pre-sort, so the tail is already
+    # -1/inf; enforce it anyway so padding is canonical bit-for-bit
+    tail = np.arange(cap)[None, :] >= count[:, None]
+    hubs = np.where(tail, np.int32(-1), hubs).astype(np.int32)
+    dist = np.where(tail, np.float32(np.inf),
+                    dist).astype(np.float32)
+    return hubs, dist, count
+
+
+def _drop_affected(hubs: np.ndarray, dist: np.ndarray,
+                   affected_mask: np.ndarray):
+    """Blank (-1/inf) every label slot owned by an affected hub;
+    returns (hubs, dist, dropped count)."""
+    hubs = np.asarray(hubs).copy()
+    dist = np.asarray(dist).astype(np.float32, copy=True)
+    stale = (hubs >= 0) & affected_mask[np.where(hubs >= 0, hubs, 0)]
+    dropped = int(stale.sum())
+    hubs[stale] = -1
+    dist[stale] = np.inf
+    return hubs, dist, dropped
+
+
+def repair_index(idx, batch: MutationBatch, g, *, ckpt=None,
+                 resume: bool = False,
+                 verbose: bool = False) -> RepairReport:
+    """Repair ``idx`` (built on pre-mutation graph ``g``) in place so
+    it indexes ``batch.apply(g)``, bit-identically to a from-scratch
+    rebuild; returns the :class:`RepairReport`.
+
+    ``ckpt``/``resume`` thread straight into ``engine.run`` — a repair
+    wave checkpoints after every committed superstep like any build,
+    under ``kind="repair"`` so the states never cross-adopt.
+    """
+    if idx.directed:
+        raise NotImplementedError(
+            "apply() currently supports undirected indices")
+    if idx.store.kind not in ("dense", "sharded"):
+        raise NotImplementedError(
+            f"apply() needs a writable dense or sharded store "
+            f"(got {idx.store.kind!r}); reload without store='spill'")
+    if g.n != idx.n:
+        raise ValueError(f"graph has n={g.n} but the index has "
+                         f"n={idx.n}")
+
+    t0 = time.perf_counter()
+    rb = batch.resolve(g)
+    g_new = batch.apply(g)
+    affected = affected_hubs(g, g_new, rb)
+    oi = _order_index(idx.rank)
+    affected_mask = np.zeros(idx.n, dtype=bool)
+    affected_mask[affected] = True
+    # rank order within the affected subset == ascending order index
+    roots = affected[np.argsort(oi[affected], kind="stable")]
+    if verbose:
+        print(f"[repair] {len(batch)} mutations touch "
+              f"{len(batch.touched())} vertices; {len(roots)} trees "
+              f"affected")
+
+    records: List[SuperstepRecord] = []
+    resumed_from: Optional[int] = None
+    repaired = 0
+    if len(roots) == 0:
+        rep_table = None
+    elif idx.store.kind == "sharded":
+        policy = RepairPolicy(g_new, idx.rank, batch=idx.plan.batch,
+                              roots_order=roots)
+        sink = StreamingShardSink(idx.n, idx.rank,
+                                  idx.store.num_shards)
+        res = run(policy, sink, ckpt=ckpt, resume=resume,
+                  verbose=verbose)
+        records, resumed_from = res.records, res.resumed_from
+        repaired = sink.total_labels
+        rep_table = dict(sink.shard_arrays())
+    else:
+        cap_r = idx.store.to_table().cap
+        attempt = 0
+        while True:
+            policy = RepairPolicy(g_new, idx.rank,
+                                  batch=idx.plan.batch,
+                                  roots_order=roots)
+            sink = DenseSink(idx.n, cap_r)
+            try:
+                res = run(policy, sink, ckpt=ckpt,
+                          resume=resume if attempt == 0
+                          else ckpt is not None,
+                          verbose=verbose)
+                break
+            except LabelOverflowError:
+                grown = min(max(cap_r + 1,
+                                int(cap_r * idx.plan.cap_growth)),
+                            idx.n)
+                if attempt >= idx.plan.max_cap_retries \
+                        or grown == cap_r:
+                    raise
+                if verbose:
+                    print(f"[repair] emission overflow at cap={cap_r};"
+                          f" regrowing to {grown}")
+                cap_r = grown
+                attempt += 1
+        records, resumed_from = res.records, res.resumed_from
+        t = res.sink.table()
+        repaired = int(np.asarray(t.count).sum())
+        rep_table = t
+
+    invalidated = 0
+    if idx.store.kind == "sharded":
+        merged = []
+        for k, arrs in idx.store.shard_arrays():
+            hubs, dist, dropped = _drop_affected(
+                arrs["hubs"], arrs["dist"], affected_mask)
+            invalidated += dropped
+            if rep_table is not None:
+                rep = rep_table[k]
+                hubs = np.concatenate(
+                    [hubs, np.asarray(rep["hubs"])], axis=1)
+                dist = np.concatenate(
+                    [dist, np.asarray(rep["dist"], np.float32)],
+                    axis=1)
+            h, d, c = _canonical_rows(hubs, dist, oi)
+            merged.append({"hubs": h, "dist": d, "count": c})
+        idx.store = ShardedStore.from_shard_arrays(merged)
+        new_cap = None
+    else:
+        old = idx.store.to_table()
+        hubs, dist, invalidated = _drop_affected(
+            np.asarray(old.hubs), np.asarray(old.dist), affected_mask)
+        if rep_table is not None:
+            hubs = np.concatenate(
+                [hubs, np.asarray(rep_table.hubs)], axis=1)
+            dist = np.concatenate(
+                [dist, np.asarray(rep_table.dist, np.float32)],
+                axis=1)
+        counts = (hubs >= 0).sum(axis=1)
+        tight = int(max(1, counts.max())) if counts.size else 1
+        # keep the old cap when the repaired rows still fit (the
+        # common case — bit-identical padding included to a rebuild at
+        # the same cap); grow geometrically like `build` otherwise
+        new_cap = old.cap
+        while new_cap < tight:
+            new_cap = min(max(new_cap + 1,
+                              int(new_cap * idx.plan.cap_growth)),
+                          idx.n)
+        h, d, c = _canonical_rows(hubs, dist, oi, cap=new_cap)
+        idx.store = DenseStore(LabelTable(jnp.asarray(h),
+                                          jnp.asarray(d),
+                                          jnp.asarray(c)))
+    # any construction-time partitioned view predates the mutation
+    idx.partitioned = None
+
+    total = idx.store.total_labels
+    return RepairReport(
+        wall_s=time.perf_counter() - t0,
+        mutations=batch.counts,
+        touched=int(len(batch.touched())),
+        affected=int(len(roots)),
+        invalidated=invalidated,
+        repaired=int(repaired),
+        total_labels=int(total),
+        als=total / max(1, idx.n),
+        cap=new_cap,
+        store=idx.store.kind,
+        supersteps=records,
+        resumed_from=resumed_from)

@@ -63,6 +63,11 @@ class Policy:
     """Interface the engine drives. Subclasses override what they use."""
 
     name: str = "?"
+    #: checkpoint-compatibility class: construction policies are
+    #: "build", incremental repair is "repair" — a checkpoint written
+    #: under one kind is never adoptable by the other even when name /
+    #: fingerprint / config happen to collide
+    kind: str = "build"
     #: True → the engine fetches stats (and checks overflow) at every
     #: commit; False → one batched fetch after the loop.
     eager_stats: bool = False
@@ -170,7 +175,7 @@ class PlantPolicy(Policy):
                            jnp.sum(tb.explored * valid_d,
                                    dtype=jnp.int32),
                            tb.sweeps)
-        return StepOutcome(mode="plant", stats=stats,
+        return StepOutcome(mode=self.name, stats=stats,
                            trees=int(st.valid.sum()))
 
 

@@ -113,6 +113,7 @@ def _try_restore(ckpt, policy: Policy, sink):
     meta = ckpt.peek(step)
     if (meta.get("engine") != CKPT_FORMAT
             or meta.get("algo") != policy.name
+            or meta.get("kind", "build") != policy.kind
             or meta.get("fingerprint") != policy.fingerprint
             or meta.get("config") != policy.config()
             or not _meta_compatible(meta.get("sink"), sink.meta())):
@@ -179,6 +180,7 @@ def run(policy: Policy, sink, *, ckpt=None, resume: bool = False,
                           data_state={
                               "engine": CKPT_FORMAT,
                               "algo": policy.name,
+                              "kind": policy.kind,
                               "fingerprint": policy.fingerprint,
                               "config": policy.config(),
                               "sink": sink.meta(),

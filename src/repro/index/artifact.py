@@ -49,8 +49,10 @@ import hashlib
 import json
 import os
 import shutil
-from typing import Optional, Tuple
+import weakref
+from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -109,6 +111,9 @@ class CHLIndex:
         self.report = report
         self.rank = np.asarray(rank)
         self.partitioned = partitioned
+        # live QueryServices handed out by serve(), kept weakly with
+        # the knobs needed to rebuild their answer fns after apply()
+        self._services: List[Tuple[weakref.ref, dict]] = []
 
     # ---------------------------------------------------- properties
 
@@ -172,28 +177,85 @@ class CHLIndex:
               routed: Optional[bool] = None) -> QueryService:
         """The serving tier (:class:`repro.serve.QueryService`) in any
         §6.3 storage mode — no mesh/layout/store ceremony at the call
-        site (undirected only; directed serving is an open ROADMAP
-        item). Routes through the label store: dense stores serve all
+        site. Routes through the label store: dense stores serve all
         three modes as before, sharded stores answer from their own
         hub partitions (per-shard routed by default for QLSN), spill
-        stores serve QLSN from the memory-mapped shards.
+        stores serve QLSN from the memory-mapped shards. Directed
+        indices serve QLSN from the dense L_out/L_in pair (the other
+        modes remain a ROADMAP item), with the answer cache built
+        ``symmetric=False`` — d(u→v) and d(v→u) must never share an
+        entry.
 
         Service knobs: ``deadline_ms`` bounds how long an arrival
         waits before :meth:`~repro.serve.QueryService.pump` forces a
         partial batch out; ``cache`` sizes the hot-pair LRU (0 = off);
         ``max_queue`` bounds the admission queue (``None`` = no gate);
         ``routed`` overrides per-shard query routing (``None`` =
-        auto)."""
+        auto).
+
+        The returned service stays registered (weakly) with this
+        index: :meth:`apply` refreshes every live service's answer fn
+        and bumps its cache epoch, so a mutated index can never serve
+        a stale answer."""
+        fn = self._answer_fn(mode, mesh=mesh, routed=routed)
+        svc = QueryService(fn, batch_size=batch_size,
+                           drop_first=drop_first,
+                           deadline_s=deadline_ms * 1e-3,
+                           cache_size=cache, max_queue=max_queue,
+                           cache_symmetric=not self.directed)
+        self._services.append(
+            (weakref.ref(svc), {"mode": mode, "mesh": mesh,
+                                "routed": routed}))
+        return svc
+
+    def _answer_fn(self, mode: str, *, mesh=None, routed=None):
+        """The serving answer callable for this index's current
+        labels (what serve() installs and apply() re-installs)."""
         if self.directed:
-            raise NotImplementedError(
-                "serve() currently supports undirected indices")
-        fn = backends.make_answer_fn(self.store, mode, mesh=mesh,
-                                     partitioned=self.partitioned,
-                                     rank=self.rank, routed=routed)
-        return QueryService(fn, batch_size=batch_size,
-                            drop_first=drop_first,
-                            deadline_s=deadline_ms * 1e-3,
-                            cache_size=cache, max_queue=max_queue)
+            if mode != "qlsn":
+                raise NotImplementedError(
+                    "directed serving currently supports mode='qlsn'")
+            from repro.core.directed import query_directed
+            l_out, l_in = self.l_out, self.l_in
+            return jax.jit(
+                lambda u, v: query_directed(l_out, l_in, u, v))
+        return backends.make_answer_fn(self.store, mode, mesh=mesh,
+                                       partitioned=self.partitioned,
+                                       rank=self.rank, routed=routed)
+
+    # --------------------------------------------------------- mutate
+
+    def apply(self, mutations, *, graph, ckpt=None,
+              resume: bool = False, verbose: bool = False):
+        """Apply a :class:`repro.dynamic.MutationBatch` to this index
+        in place — re-planting only the affected trees — and
+        invalidate every live service handed out by :meth:`serve`.
+
+        ``graph`` is the **pre-mutation** graph the index was built
+        on (the artifact stores labels, not edges). The repaired
+        labels are bit-identical to a from-scratch rebuild on
+        ``mutations.apply(graph)``; returns the
+        :class:`repro.dynamic.RepairReport`.
+        """
+        from repro.dynamic.repair import repair_index
+        report = repair_index(self, mutations, graph, ckpt=ckpt,
+                              resume=resume, verbose=verbose)
+        self._invalidate_services()
+        return report
+
+    def _invalidate_services(self) -> None:
+        """Rebuild each live service's answer fn against the mutated
+        store and bump its cache epoch; dead services are pruned."""
+        alive = []
+        for ref, knobs in self._services:
+            svc = ref()
+            if svc is None:
+                continue
+            svc.invalidate(self._answer_fn(knobs["mode"],
+                                           mesh=knobs["mesh"],
+                                           routed=knobs["routed"]))
+            alive.append((ref, knobs))
+        self._services = alive
 
     # ------------------------------------------------------ validate
 

@@ -12,6 +12,12 @@ way — addition is commutative and the candidate set is identical), so
 by default ``(u, v)`` and ``(v, u)`` share one entry. Serving a
 directed index through a raw answer fn should construct the cache with
 ``symmetric=False``.
+
+Mutating the index invalidates every cached answer at once: each
+entry carries the **epoch** it was written under, ``get`` refuses (and
+evicts) entries from an older epoch, and :meth:`invalidate` bumps the
+epoch in O(1) — stale entries age out lazily instead of paying an
+O(capacity) sweep on the mutation path.
 """
 
 from __future__ import annotations
@@ -30,7 +36,8 @@ class AnswerCache:
             raise ValueError("AnswerCache needs capacity >= 1")
         self.capacity = int(capacity)
         self.symmetric = bool(symmetric)
-        self._d: "OrderedDict[tuple, np.float32]" = OrderedDict()
+        self.epoch = 0
+        self._d: "OrderedDict[tuple, tuple]" = OrderedDict()
 
     def _key(self, u: int, v: int) -> tuple:
         if self.symmetric and v < u:
@@ -39,14 +46,19 @@ class AnswerCache:
 
     def get(self, u: int, v: int) -> Optional[np.float32]:
         key = self._key(u, v)
-        val = self._d.get(key)
-        if val is not None:
-            self._d.move_to_end(key)
+        entry = self._d.get(key)
+        if entry is None:
+            return None
+        epoch, val = entry
+        if epoch != self.epoch:          # written pre-mutation: stale
+            del self._d[key]
+            return None
+        self._d.move_to_end(key)
         return val
 
     def put(self, u: int, v: int, value) -> None:
         key = self._key(u, v)
-        self._d[key] = np.float32(value)
+        self._d[key] = (self.epoch, np.float32(value))
         self._d.move_to_end(key)
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
@@ -56,3 +68,8 @@ class AnswerCache:
 
     def clear(self) -> None:
         self._d.clear()
+
+    def invalidate(self) -> None:
+        """Mark every current entry stale (O(1)); a mutated index can
+        never serve a pre-mutation hit."""
+        self.epoch += 1

@@ -282,6 +282,27 @@ class QueryService:
             launched += k
         return launched
 
+    # ------------------------------------------------- invalidation
+
+    def invalidate(self, answer: Optional[AnswerFn] = None) -> None:
+        """Point the service at a mutated index: drain, then drop
+        every cached answer (epoch bump — see
+        :meth:`AnswerCache.invalidate`) and optionally swap in the
+        rebuilt answer fn.
+
+        Pending queries are launched *before* the swap: they were
+        admitted pre-mutation, so they are answered under the labels
+        they were admitted against (the batch linearizes before the
+        mutation). Everything submitted after this call sees only
+        post-mutation answers — a stale cache hit is impossible.
+        """
+        self.drain()
+        if self._cache is not None:
+            self._cache.invalidate()
+        if answer is not None:
+            self._answer = answer
+        self.stats_.invalidations += 1
+
     # ---------------------------------------------------- batch api
 
     def flush(self) -> np.ndarray:

@@ -67,6 +67,7 @@ class ServiceStats:
     # cache
     cache_hits: int = 0
     cache_misses: int = 0
+    invalidations: int = 0         # index-mutation epoch bumps served
 
     # per-stage latency windows (seconds)
     lat_samples: Deque[float] = dataclasses.field(
@@ -120,6 +121,7 @@ class ServiceStats:
             "queue_depth_max": self.queue_depth_max,
             "batch_occupancy": self.batch_occupancy,
             "cache_hit_rate": self.cache_hit_rate,
+            "invalidations": self.invalidations,
             "queue_p50_ms": percentile_ms(self.queue_wait_samples, 50),
             "queue_p99_ms": percentile_ms(self.queue_wait_samples, 99),
             "total_p50_ms": percentile_ms(self.total_lat_samples, 50),

@@ -1,0 +1,412 @@
+"""The `repro.dynamic` subsystem: typed mutation batches, the
+affected-frontier soundness guarantee, rank-respecting repair that is
+bit-identical to a from-scratch rebuild (dense and sharded), repair
+checkpoint kind-isolation, and the serving-tier invalidation chain
+(`CHLIndex.apply` → answer-fn swap → cache epoch bump)."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.pll import pll_undirected
+from repro.dynamic import (EdgeDelete, EdgeInsert, EdgeReweight,
+                           MutationBatch, RepairPolicy, RepairReport,
+                           affected_hubs, endpoint_planes,
+                           random_mutations)
+from repro.engine.runner import run
+from repro.engine.sink import DenseSink
+from repro.graphs import grid_road, random_connected, scale_free
+from repro.graphs.ranking import degree_ranking
+from repro.index import BuildPlan, CHLIndex, build
+from repro.serve import AnswerCache
+
+
+def road():
+    g = grid_road(8, 8, seed=2)          # many tied shortest paths
+    return g, degree_ranking(g)
+
+
+def sf():
+    g = scale_free(96, attach=2, seed=1)
+    return g, degree_ranking(g)
+
+
+def fresh_view(idx: CHLIndex) -> CHLIndex:
+    """Pre-mutation view sharing the immutable label arrays — apply()
+    swaps the store object, never writes into the arrays."""
+    return CHLIndex(store=idx.store, plan=idx.plan, report=idx.report,
+                    rank=idx.rank)
+
+
+def stores_equal(a, b) -> bool:
+    """Raw bit-identity shard by shard: slot order and padding
+    included, not just label-set equality."""
+    sa, sb = list(a.shard_arrays()), list(b.shard_arrays())
+    if [k for k, _ in sa] != [k for k, _ in sb]:
+        return False
+    return all(np.array_equal(np.asarray(x[key]), np.asarray(y[key]))
+               for (_, x), (_, y) in zip(sa, sb)
+               for key in ("hubs", "dist", "count"))
+
+
+def assert_repair_matches_rebuild(g, rank, batch, *, store="dense",
+                                  shards=None, algo="plant"):
+    """The subsystem's core contract: apply() on an index built with
+    ``algo`` leaves exactly the arrays a from-scratch PLaNT build on
+    the mutated graph would produce (at the repaired layout)."""
+    plan = BuildPlan(algo=algo, batch=8, store=store, shards=shards)
+    idx = build(g, rank, plan)
+    rep = idx.apply(batch, graph=g)
+    g_new = batch.apply(g)
+    ref = build(g_new, rank, BuildPlan(algo="plant", batch=8,
+                                       store=store, shards=shards,
+                                       cap=rep.cap))
+    assert stores_equal(idx.store, ref.store), \
+        "repaired store diverges from from-scratch rebuild"
+    idx.validate_against(g_new)          # cover property on new graph
+    return idx, rep, g_new
+
+
+# ----------------------------------------------------- mutation batch
+
+def test_batch_structural_validation():
+    with pytest.raises(ValueError, match="self-loop"):
+        MutationBatch([EdgeDelete(3, 3)])
+    with pytest.raises(ValueError, match="negative"):
+        MutationBatch([EdgeInsert(-1, 2, 1.0)])
+    with pytest.raises(ValueError, match="edge-disjoint"):
+        MutationBatch([EdgeDelete(1, 2), EdgeReweight(2, 1, 5.0)])
+    with pytest.raises(ValueError, match="finite and positive"):
+        MutationBatch([EdgeInsert(0, 1, 0.0)])
+    with pytest.raises(ValueError, match="finite and positive"):
+        MutationBatch([EdgeReweight(0, 1, float("inf"))])
+    with pytest.raises(TypeError):
+        MutationBatch([(0, 1, 2.0)])
+
+
+def test_resolve_validates_against_graph():
+    g, _ = road()
+    with pytest.raises(ValueError, match="out of range"):
+        MutationBatch([EdgeDelete(0, g.n)]).resolve(g)
+    with pytest.raises(ValueError, match="use EdgeReweight"):
+        MutationBatch([EdgeInsert(0, 1, 2.0)]).resolve(g)  # grid edge
+    with pytest.raises(ValueError, match="missing edge"):
+        MutationBatch([EdgeDelete(0, g.n - 1)]).resolve(g)
+    with pytest.raises(ValueError, match="missing edge"):
+        MutationBatch([EdgeReweight(0, g.n - 1, 2.0)]).resolve(g)
+    gd = random_connected(16, extra_edges=10, seed=0, directed=True)
+    with pytest.raises(NotImplementedError, match="undirected"):
+        MutationBatch([EdgeDelete(0, 1)]).resolve(gd)
+
+
+def test_apply_edits_edges_and_resolve_captures_weights():
+    g, _ = road()
+    batch = MutationBatch([EdgeDelete(0, 1), EdgeReweight(0, 8, 7.0),
+                           EdgeInsert(0, 63, 3.0)])
+    rb = batch.resolve(g)
+    assert len(rb) == 3
+    assert np.isnan(rb.w_new[0]) and rb.w_old[1] > 0
+    assert rb.w_new[2] == np.float32(3.0)
+    g2 = batch.apply(g)
+    assert g2.n == g.n
+    d0 = endpoint_planes(g2, [0])[0]
+    assert d0[63] == np.float32(3.0)          # inserted shortcut
+    assert d0[1] > np.float32(1.0)            # 0-1 edge gone (≥2 hops)
+    # the reweight landed: re-resolving the edge on g2 sees w_old == 7
+    rb2 = MutationBatch([EdgeReweight(0, 8, 5.0)]).resolve(g2)
+    assert rb2.w_old[0] == np.float32(7.0)
+    assert batch.counts == {"insert": 1, "delete": 1, "reweight": 1}
+    np.testing.assert_array_equal(batch.touched(), [0, 1, 8, 63])
+    assert batch.fingerprint() == MutationBatch(
+        list(batch)).fingerprint()
+
+
+def test_random_mutations_are_applicable():
+    g, _ = sf()
+    rng = np.random.default_rng(0)
+    batch = random_mutations(g, rng, inserts=3, deletes=3, reweights=3)
+    assert batch.counts == {"insert": 3, "delete": 3, "reweight": 3}
+    batch.resolve(g)                     # validates existence
+    assert batch.apply(g).n == g.n
+
+
+# ------------------------------------------------- affected frontier
+
+def test_endpoint_planes_match_oracle():
+    from repro.sssp.oracle import dijkstra
+    g, _ = road()
+    planes = endpoint_planes(g, [0, 17, 63], chunk=2)   # multi-chunk
+    for r, row in planes.items():
+        np.testing.assert_array_equal(row,
+                                      dijkstra(g, r).astype(np.float32))
+
+
+def test_affected_hubs_sound_vs_label_diff():
+    """Soundness oracle: every hub whose emitted labels differ between
+    a build on g and a build on the mutated graph must be flagged
+    affected. (The converse need not hold — the test is allowed to
+    overapproximate — but it must never miss a changed tree.)"""
+    g, rank = road()
+    batch = random_mutations(g, np.random.default_rng(3),
+                             inserts=1, deletes=1, reweights=1)
+    g2 = batch.apply(g)
+    affected = set(affected_hubs(g, g2, batch.resolve(g)).tolist())
+    old = pll_undirected(g, rank)
+    new = pll_undirected(g2, rank)
+    # rows are per-vertex (hub, dist) sets; a hub whose dist changed
+    # shows up in the symmetric difference like an added/removed one
+    changed = set()
+    for row_o, row_n in zip(old, new):
+        for item in set(row_o) ^ set(row_n):
+            changed.add(item[0] if isinstance(item, tuple) else item)
+    assert changed <= affected, \
+        f"missed affected trees: {sorted(changed - affected)[:5]}"
+    assert 0 < len(affected) < g.n       # and it is a strict subset
+
+
+def test_empty_batch_is_noop():
+    g, rank = sf()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    before = idx.store
+    rep = idx.apply(MutationBatch([]), graph=g)
+    assert rep.affected == rep.invalidated == rep.repaired == 0
+    assert stores_equal(idx.store, before)
+
+
+# ------------------------------------- bit-identical repair (dense)
+
+def test_repair_delete_bit_identical_dense():
+    g, rank = road()
+    assert_repair_matches_rebuild(g, rank,
+                                  MutationBatch([EdgeDelete(27, 28)]))
+
+
+def test_repair_insert_bit_identical_dense():
+    g, rank = road()
+    assert_repair_matches_rebuild(
+        g, rank, MutationBatch([EdgeInsert(0, 63, 2.0)]))
+
+
+def test_repair_reweight_ties_bit_identical_dense():
+    """Reweight to a value that re-ties paths on the grid — the
+    tied-path (`<=`) side of the affected test is what keeps max-rank
+    tie-breaking, hence the canonical label set, intact."""
+    g, rank = road()
+    assert_repair_matches_rebuild(
+        g, rank, MutationBatch([EdgeReweight(27, 28, 2.0)]))
+
+
+def test_repair_mixed_batch_bit_identical_dense():
+    g, rank = sf()
+    batch = random_mutations(g, np.random.default_rng(7),
+                             inserts=2, deletes=2, reweights=2)
+    idx, rep, g_new = assert_repair_matches_rebuild(g, rank, batch)
+    assert rep.store == "dense" and rep.cap == idx.table.cap
+    assert rep.total_labels == idx.total_labels
+    assert rep.affected >= rep.mutations["delete"]
+    # and the repaired index is the exact canonical CHL of g_new
+    idx.validate_against(pll_undirected(g_new, rank))
+
+
+def test_repair_gll_built_index_bit_identical():
+    """apply() on a GLL-built index still lands on the canonical
+    arrays: CHL is algorithm-independent and the merge re-sorts every
+    row into schedule order."""
+    g, rank = sf()
+    batch = MutationBatch([EdgeDelete(*next(
+        (int(u), int(v)) for u, v in zip(
+            np.repeat(np.arange(g.n), np.diff(g.indptr)), g.indices)
+        if u < v))])
+    assert_repair_matches_rebuild(g, rank, batch, algo="gll")
+
+
+# ----------------------------------- bit-identical repair (sharded)
+
+def test_repair_mixed_batch_bit_identical_sharded():
+    g, rank = road()
+    batch = random_mutations(g, np.random.default_rng(5),
+                             inserts=1, deletes=1, reweights=2)
+    idx, rep, _ = assert_repair_matches_rebuild(
+        g, rank, batch, store="sharded", shards=2)
+    assert rep.store == "sharded" and rep.cap is None
+    assert idx.store.num_shards == 2
+
+
+# ------------------------------------------------ report & rejection
+
+def test_repair_report_round_trip():
+    g, rank = sf()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    # a weight-1 insert between non-adjacent vertices must shorten
+    # d(u, v) (integral weights make any 2-hop path >= 2), so the
+    # repair always re-plants at least those two trees
+    rep = idx.apply(MutationBatch([EdgeInsert(*_a_non_edge(g), 1.0)]),
+                    graph=g)
+    assert rep.waves == len(rep.supersteps) > 0
+    assert rep.wall_s > 0 and rep.als > 0
+    d = rep.to_dict()
+    assert RepairReport.from_dict(d).to_dict() == d
+    s = rep.summary()
+    assert "affected=" in s and "invalidated=" in s
+
+
+def test_apply_rejects_directed_and_spill(tmp_path):
+    gd = random_connected(24, extra_edges=40, seed=0, directed=True)
+    idxd = build(gd, degree_ranking(gd), BuildPlan(algo="directed",
+                                                   batch=8))
+    with pytest.raises(NotImplementedError, match="undirected"):
+        idxd.apply(MutationBatch([EdgeDelete(0, 1)]), graph=gd)
+
+    g, rank = sf()
+    build(g, rank, BuildPlan(algo="plant", batch=8)).save(
+        str(tmp_path / "idx"))
+    spilled = CHLIndex.load(str(tmp_path / "idx"), store="spill",
+                            rank=rank)
+    with pytest.raises(NotImplementedError, match="spill"):
+        spilled.apply(MutationBatch([EdgeDelete(*_an_edge(g))]),
+                      graph=g)
+
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    g_other = scale_free(97, attach=2, seed=1)
+    with pytest.raises(ValueError, match="n="):
+        idx.apply(MutationBatch([]), graph=g_other)
+
+
+def _an_edge(g):
+    src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    for u, v in zip(src, g.indices):
+        if u < v:
+            return int(u), int(v)
+    raise AssertionError("no edge")
+
+
+def _a_non_edge(g):
+    nbrs = set(int(x) for x in
+               g.indices[g.indptr[0]:g.indptr[1]])
+    for b in range(g.n - 1, 0, -1):
+        if b not in nbrs:
+            return 0, b
+    raise AssertionError("vertex 0 is adjacent to everything")
+
+
+# ------------------------------------------- checkpoint kind safety
+
+def _repair_fixture():
+    g, rank = road()
+    batch = MutationBatch([EdgeDelete(27, 28)])
+    g2 = batch.apply(g)
+    roots = affected_hubs(g, g2, batch.resolve(g))
+    return g2, rank, np.sort(roots)
+
+
+def test_repair_checkpoints_refused_by_build_kind(tmp_path):
+    """kind isolation, exercised directly: a lookalike policy with the
+    SAME name/config/fingerprint but kind='build' must not adopt
+    committed repair states (and a true repair resume must)."""
+    g2, rank, roots = _repair_fixture()
+
+    def make(cls):
+        return cls(g2, rank, batch=8, roots_order=roots)
+
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    full = run(make(RepairPolicy), DenseSink(g2.n, 64), ckpt=mgr)
+    assert len(mgr.all_steps()) > 0
+
+    res2 = run(make(RepairPolicy), DenseSink(g2.n, 64),
+               ckpt=CheckpointManager(str(tmp_path), keep=100),
+               resume=True)
+    assert res2.resumed_from is not None  # same kind restores
+    t, f = res2.sink.table(), full.sink.table()
+    assert np.array_equal(np.asarray(t.hubs), np.asarray(f.hubs))
+    assert np.array_equal(np.asarray(t.dist), np.asarray(f.dist))
+
+    class BuildKindLookalike(RepairPolicy):
+        kind = "build"                   # name/fingerprint unchanged
+
+    res = run(make(BuildKindLookalike), DenseSink(g2.n, 64),
+              ckpt=CheckpointManager(str(tmp_path), keep=100),
+              resume=True)
+    assert res.resumed_from is None      # refused: cross-kind
+
+
+def test_repair_resume_equality(tmp_path):
+    """An interrupted repair resumed mid-wave lands on the same
+    arrays as an uninterrupted one."""
+    g, rank = road()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    batch = random_mutations(g, np.random.default_rng(11),
+                             deletes=1, reweights=1)
+
+    a = fresh_view(idx)
+    a.apply(batch, graph=g)              # uninterrupted reference
+
+    b = fresh_view(idx)
+    mgr = CheckpointManager(str(tmp_path), keep=100)
+    b.apply(batch, graph=g, ckpt=mgr)
+    steps = mgr.all_steps()
+    assert len(steps) > 1
+    for s in steps[1:]:                  # simulate an interrupt
+        shutil.rmtree(os.path.join(str(tmp_path), f"step_{s:010d}"))
+
+    c = fresh_view(idx)
+    rep = c.apply(batch, graph=g,
+                  ckpt=CheckpointManager(str(tmp_path), keep=100),
+                  resume=True)
+    assert rep.resumed_from == steps[0]
+    assert stores_equal(c.store, a.store)
+
+
+# --------------------------------------------- serving invalidation
+
+def test_answer_cache_epoch_invalidation():
+    c = AnswerCache(8, symmetric=True)
+    c.put(1, 2, 3.0)
+    assert c.get(2, 1) == np.float32(3.0)
+    c.invalidate()
+    assert c.get(1, 2) is None           # stale entry rejected
+    c.put(1, 2, 4.0)
+    assert c.get(1, 2) == np.float32(4.0)  # new epoch serves again
+
+
+def test_apply_invalidates_live_services():
+    """The full chain: serve → mutate → the already-handed-out service
+    answers from the repaired labels with a cold cache."""
+    g, rank = sf()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    svc = idx.serve(mode="qlsn", batch_size=32, cache=64)
+    rng = np.random.default_rng(2)
+    u, v = rng.integers(0, g.n, 48), rng.integers(0, g.n, 48)
+    svc.submit(u, v)
+    stale = svc.flush()
+
+    batch = random_mutations(g, np.random.default_rng(13),
+                             deletes=1, reweights=1)
+    idx.apply(batch, graph=g)
+    assert svc.stats_.invalidations == 1
+
+    svc.submit(u, v)
+    fresh = svc.flush()
+    np.testing.assert_array_equal(fresh, idx.query(u, v))
+    assert not np.array_equal(stale, fresh)  # the answers moved
+
+
+def test_serve_cache_symmetry_follows_directedness():
+    g, rank = sf()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8))
+    svc = idx.serve(cache=8)
+    assert svc._cache.symmetric is True
+
+    gd = random_connected(24, extra_edges=40, seed=0, directed=True)
+    idxd = build(gd, degree_ranking(gd), BuildPlan(algo="directed",
+                                                   batch=8))
+    svcd = idxd.serve(mode="qlsn", batch_size=16, cache=8)
+    assert svcd._cache.symmetric is False
+    rng = np.random.default_rng(4)
+    u, v = rng.integers(0, gd.n, 32), rng.integers(0, gd.n, 32)
+    svcd.submit(u, v)
+    np.testing.assert_array_equal(svcd.flush(), idxd.query(u, v))
+    with pytest.raises(NotImplementedError, match="qlsn"):
+        idxd.serve(mode="qfdl")
