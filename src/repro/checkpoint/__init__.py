@@ -1,1 +1,4 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (CheckpointManager,
+                                      CorruptCheckpointError)
+
+__all__ = ["CheckpointManager", "CorruptCheckpointError"]

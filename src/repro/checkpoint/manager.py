@@ -1,5 +1,5 @@
 """Fault-tolerant checkpointing: atomic, step-tagged, async-capable,
-retention-managed, reshard-on-restore.
+retention-managed, reshard-on-restore, torn-write-detecting.
 
 Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}
 Atomicity: written to ``<dir>/.tmp_<N>`` then ``os.replace``d — a
@@ -9,6 +9,24 @@ with the model state so restarts are exactly-once over the data
 stream. On restore, arrays are ``device_put`` against *caller-supplied
 shardings*, which is also the elastic-rescale path (`repro.ft`): the
 same checkpoint restores onto a different mesh.
+
+Durability hardening (see ``repro.ft``):
+
+- a **torn or corrupt step** (truncated/bit-flipped ``arrays.npz``,
+  unparseable manifest — e.g. a crash that beat the rename, or media
+  corruption after it) is *detected*, not tripped over: restores and
+  peeks with ``step=None`` fall back to the newest **intact** step
+  (each skip warns), and an explicitly requested corrupt step raises
+  a typed :class:`CorruptCheckpointError` instead of an opaque
+  ``zipfile``/JSON traceback;
+- retention GC cannot delete a step out from under a concurrent
+  ``restore``/``peek`` (the async writer thread runs ``_gc`` after
+  every save): steps being read are pinned;
+- the write path is wrapped in bounded retry-with-backoff
+  (``repro.ft.inject.with_retries``) so a transient ``OSError``
+  doesn't kill a run, and passes the ``checkpoint.write`` /
+  ``checkpoint.commit`` fault sites so crash/torn-write behavior is
+  pinned by tests instead of assumed.
 """
 
 from __future__ import annotations
@@ -17,10 +35,26 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.ft.inject import fault_site, with_retries
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint step exists on disk but cannot be trusted (torn
+    write, truncated archive, bit rot, unparseable manifest)."""
+
+    def __init__(self, step: Optional[int], path: str, reason: str):
+        super().__init__(
+            f"checkpoint step {step} at {path} is corrupt: {reason}")
+        self.step = step
+        self.path = path
+        self.reason = reason
 
 
 def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -34,7 +68,13 @@ class CheckpointManager:
         self.dir = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._reading: set = set()       # steps pinned against GC
+        self._verified: Dict[int, Optional[str]] = {}   # step → reason
         os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
 
     # ------------------------------------------------------------ save
 
@@ -58,7 +98,7 @@ class CheckpointManager:
 
     def _write(self, step: int, host, data_state) -> None:
         tmp = os.path.join(self.dir, f".tmp_{step}")
-        final = os.path.join(self.dir, f"step_{step:010d}")
+        final = self._step_dir(step)
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         # bf16/fp8 are not native numpy dtypes: store via exact f32
@@ -68,16 +108,25 @@ class CheckpointManager:
                                 "float8_e5m2", "float16"):
                 return v.astype(np.float32)
             return v
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k: enc(v) for k, v in host})
-        manifest = {
-            "step": step,
-            "keys": [k for k, _ in host],
-            "data_state": data_state or {},
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+
+        arrays_path = os.path.join(tmp, "arrays.npz")
+
+        def write_payload() -> None:
+            np.savez(arrays_path, **{k: enc(v) for k, v in host})
+            fault_site("checkpoint.write", path=arrays_path)
+            manifest = {
+                "step": step,
+                "keys": [k for k, _ in host],
+                "data_state": data_state or {},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+
+        with_retries(write_payload, describe=f"checkpoint step {step}")
+        fault_site("checkpoint.commit", path=arrays_path)
         shutil.rmtree(final, ignore_errors=True)
+        with self._lock:
+            self._verified.pop(step, None)
         os.replace(tmp, final)
         self._gc()
 
@@ -87,14 +136,75 @@ class CheckpointManager:
         lower step numbers in retention GC)."""
         self.wait()
         for s in self.all_steps():
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
-                          ignore_errors=True)
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        with self._lock:
+            self._verified.clear()
 
     def _gc(self) -> None:
         steps = self.all_steps()
-        for s in steps[:-self.keep] if self.keep else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
-                          ignore_errors=True)
+        doomed = steps[:-self.keep] if self.keep else []
+        with self._lock:
+            # never delete a step a concurrent restore/peek is reading
+            doomed = [s for s in doomed if s not in self._reading]
+            for s in doomed:
+                self._verified.pop(s, None)
+        for s in doomed:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # --------------------------------------------------------- verify
+
+    def verify_step(self, step: int) -> Optional[str]:
+        """``None`` when step looks intact; else a human-readable
+        reason. Verification reads the whole archive (zip CRCs catch
+        both truncation and bit flips); results are cached — committed
+        steps are immutable."""
+        with self._lock:
+            if step in self._verified:
+                return self._verified[step]
+        path = self._step_dir(step)
+        reason = None
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            if manifest.get("step") != step:
+                reason = (f"manifest names step {manifest.get('step')}"
+                          f", directory names {step}")
+            else:
+                with zipfile.ZipFile(
+                        os.path.join(path, "arrays.npz")) as zf:
+                    bad = zf.testzip()
+                    if bad is not None:
+                        reason = f"arrays.npz member {bad!r} fails CRC"
+        except (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile, json.JSONDecodeError) as e:
+            reason = f"{type(e).__name__}: {e}"
+        with self._lock:
+            self._verified[step] = reason
+        return reason
+
+    def _resolve_step(self, step: Optional[int]) -> int:
+        """An explicit ``step`` verified (corrupt → typed raise);
+        ``None`` → the newest intact step, warning per skipped corrupt
+        one."""
+        if step is not None:
+            reason = self.verify_step(step)
+            if reason is not None:
+                raise CorruptCheckpointError(step, self._step_dir(step),
+                                             reason)
+            return step
+        steps = self.all_steps()
+        assert steps, "no checkpoint found"
+        for s in reversed(steps):
+            reason = self.verify_step(s)
+            if reason is None:
+                return s
+            warnings.warn(
+                f"skipping corrupt checkpoint step {s} "
+                f"({reason}); falling back to the previous step",
+                stacklevel=3)
+        raise CorruptCheckpointError(
+            steps[-1], self.dir,
+            "no intact step remains (all candidates fail verification)")
 
     # --------------------------------------------------------- restore
 
@@ -109,39 +219,70 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def latest_intact_step(self) -> Optional[int]:
+        """The newest step that passes verification (None when the
+        directory holds no step at all); torn/corrupt steps are
+        skipped with a warning, not deleted — forensics may want
+        them."""
+        if not self.all_steps():
+            return None
+        return self._resolve_step(None)
+
     def peek(self, step: Optional[int] = None) -> Dict:
         """The ``data_state`` of a committed step without loading its
         arrays — resume-compatibility checks (``repro.engine``) decide
-        from the manifest alone whether a restore is worth doing."""
-        step = self.latest_step() if step is None else step
-        assert step is not None, "no checkpoint found"
-        path = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            return json.load(f).get("data_state", {})
+        from the manifest alone whether a restore is worth doing.
+        ``step=None`` resolves to the newest *intact* step."""
+        step = self._resolve_step(step)
+        path = self._step_dir(step)
+        with self._lock:
+            self._reading.add(step)
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                return json.load(f).get("data_state", {})
+        finally:
+            with self._lock:
+                self._reading.discard(step)
 
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Optional[Any] = None
                 ) -> Tuple[Any, int, Dict]:
         """Restore into the structure of ``template``; place leaves per
-        ``shardings`` (same treedef) when given — the re-mesh path."""
-        step = self.latest_step() if step is None else step
-        assert step is not None, "no checkpoint found"
-        path = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        arrs = np.load(os.path.join(path, "arrays.npz"))
-        items, treedef = _flatten(template)
-        sh_leaves = (jax.tree_util.tree_leaves(
-            shardings, is_leaf=lambda x: x is None)
-            if shardings is not None else [None] * len(items))
-        leaves = []
-        for (key, tmpl), sh in zip(items, sh_leaves):
-            a = jax.numpy.asarray(arrs[key])
-            if hasattr(tmpl, "dtype") and a.dtype != tmpl.dtype:
-                a = a.astype(tmpl.dtype)
-            if sh is not None:
-                leaves.append(jax.device_put(a, sh))
-            else:
-                leaves.append(a)
-        state = jax.tree_util.tree_unflatten(treedef, leaves)
-        return state, manifest["step"], manifest.get("data_state", {})
+        ``shardings`` (same treedef) when given — the re-mesh path.
+        ``step=None`` restores the newest intact step (torn newest
+        steps fall back); a corrupt explicit ``step`` raises
+        :class:`CorruptCheckpointError`."""
+        step = self._resolve_step(step)
+        path = self._step_dir(step)
+        with self._lock:
+            self._reading.add(step)
+        try:
+            try:
+                with open(os.path.join(path, "manifest.json")) as f:
+                    manifest = json.load(f)
+                arrs = np.load(os.path.join(path, "arrays.npz"))
+                items, treedef = _flatten(template)
+                sh_leaves = (jax.tree_util.tree_leaves(
+                    shardings, is_leaf=lambda x: x is None)
+                    if shardings is not None else [None] * len(items))
+                leaves = []
+                for (key, tmpl), sh in zip(items, sh_leaves):
+                    a = jax.numpy.asarray(arrs[key])
+                    if hasattr(tmpl, "dtype") and a.dtype != tmpl.dtype:
+                        a = a.astype(tmpl.dtype)
+                    if sh is not None:
+                        leaves.append(jax.device_put(a, sh))
+                    else:
+                        leaves.append(a)
+            except (OSError, ValueError, KeyError, EOFError,
+                    zipfile.BadZipFile, json.JSONDecodeError) as e:
+                # verification passed but the read failed anyway
+                # (e.g. a template key the archive never held)
+                raise CorruptCheckpointError(
+                    step, path, f"{type(e).__name__}: {e}") from e
+            state = jax.tree_util.tree_unflatten(treedef, leaves)
+            return state, manifest["step"], manifest.get(
+                "data_state", {})
+        finally:
+            with self._lock:
+                self._reading.discard(step)

@@ -51,6 +51,7 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
                     ckpt=None, resume: bool = False,
                     verbose: bool = False,
                     algo_name: str = "hybrid",
+                    monitor=None, silent_after=None,
                     ) -> Tuple[LabelTable, dict]:
     """Distributed CHL construction. Returns (merged table, stats).
 
@@ -62,6 +63,12 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
     checkpoint written under a *smaller* ``cap`` is padded and reused
     (the regrow-resume path of ``repro.index.build``); one written
     under a larger cap or a different algorithm/layout is cleared.
+
+    ``monitor`` (a ``repro.ft.HeartbeatMonitor``) turns on node-loss
+    detection: a node silent past the monitor's patience is declared
+    dead and its unfinished root queue is re-PLaNTed on the survivors
+    (§5.2 — trees depend on nothing). ``silent_after`` (node → last
+    completed superstep) is the fault-simulation hook.
     """
     from repro.engine import MeshTableSink, run
     from repro.engine.dist import DistributedPolicy
@@ -72,7 +79,8 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
         g, rank, mesh=mesh, batch=batch, beta=beta,
         first_superstep=first_superstep, cap=cap, eta=eta,
         hc_cap=hc_cap, psi_threshold=psi_threshold, compact=compact,
-        mode_name=algo_name, verbose=verbose)
+        mode_name=algo_name, verbose=verbose, monitor=monitor,
+        silent_after=silent_after)
     sink = MeshTableSink(mesh, n, cap)
     res = run(policy, sink, ckpt=ckpt, resume=resume, verbose=verbose)
 
@@ -82,6 +90,10 @@ def run_distributed(g, rank: np.ndarray, *, mesh: Optional[Mesh] = None,
              "explored": [r.explored for r in res.records],
              "psi": [r.psi for r in res.records],
              "comm_label_slots": res.counters["comm_label_slots"],
+             "replanted_trees": res.counters.get("replanted_trees", 0),
+             "replanted_labels": res.counters.get(
+                 "replanted_labels", 0),
+             "dead_nodes": list(policy.dead_nodes),
              "q": res.extras["q"],
              "psi_threshold": res.extras["psi_threshold"],
              "partitioned": res.extras["partitioned"],

@@ -9,6 +9,7 @@ bit-identical to a from-scratch rebuild on the mutated graph.
 """
 
 from repro.dynamic.frontier import affected_hubs, endpoint_planes
+from repro.dynamic.journal import (RepairJournal, store_fingerprint)
 from repro.dynamic.mutations import (EdgeDelete, EdgeInsert,
                                      EdgeReweight, MutationBatch,
                                      ResolvedBatch, random_mutations)
@@ -19,4 +20,5 @@ __all__ = [
     "EdgeInsert", "EdgeDelete", "EdgeReweight", "MutationBatch",
     "ResolvedBatch", "random_mutations", "affected_hubs",
     "endpoint_planes", "RepairPolicy", "RepairReport", "repair_index",
+    "RepairJournal", "store_fingerprint",
 ]

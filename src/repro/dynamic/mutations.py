@@ -142,6 +142,34 @@ class MutationBatch:
         ids = [x for m in self.mutations for x in (int(m.u), int(m.v))]
         return np.unique(np.asarray(ids, dtype=np.int64))
 
+    def to_dict(self) -> dict:
+        """JSON-safe form (the repair journal's durable intent
+        record); round-trips exactly through :meth:`from_dict`."""
+        rows = []
+        for m in self.mutations:
+            row = {"kind": _KIND_NAMES[m.kind],
+                   "u": int(m.u), "v": int(m.v)}
+            w = getattr(m, "w", None)
+            if w is not None:
+                row["w"] = float(w)
+            rows.append(row)
+        return {"mutations": rows}
+
+    @classmethod
+    def from_dict(cls, spec: dict) -> "MutationBatch":
+        muts: List[Mutation] = []
+        for row in spec["mutations"]:
+            kind = row["kind"]
+            if kind == "insert":
+                muts.append(EdgeInsert(row["u"], row["v"], row["w"]))
+            elif kind == "delete":
+                muts.append(EdgeDelete(row["u"], row["v"]))
+            elif kind == "reweight":
+                muts.append(EdgeReweight(row["u"], row["v"], row["w"]))
+            else:
+                raise ValueError(f"unknown mutation kind {kind!r}")
+        return cls(muts)
+
     def fingerprint(self) -> str:
         """Stable content hash; joins the repair policy's checkpoint
         fingerprint so a resume can never adopt label state committed

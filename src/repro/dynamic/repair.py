@@ -44,6 +44,7 @@ from repro.engine.records import SuperstepRecord
 from repro.engine.runner import run
 from repro.engine.scheduler import rank_order
 from repro.engine.sink import DenseSink, StreamingShardSink
+from repro.ft.inject import fault_site
 from repro.index.store import DenseStore, ShardedStore
 
 from .frontier import affected_hubs
@@ -249,6 +250,11 @@ def repair_index(idx, batch: MutationBatch, g, *, ckpt=None,
         repaired = int(np.asarray(t.count).sum())
         rep_table = t
 
+    # the point of no return for the in-memory store: past here the
+    # merge swaps idx.store; before here a crash leaves the index
+    # untouched (the on-disk artifact is untouched either way — only
+    # an explicit save() publishes the merge)
+    fault_site("repair.merge")
     invalidated = 0
     if idx.store.kind == "sharded":
         merged = []

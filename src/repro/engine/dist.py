@@ -28,6 +28,7 @@ from repro.engine.policies import Policy, StepOutcome, build_fingerprint
 from repro.engine.records import make_record, pack_stats
 from repro.engine.scheduler import QueueSchedule, Step, pad_step, \
     rank_order
+from repro.ft.elastic import HeartbeatMonitor, lost_roots
 
 Array = jax.Array
 
@@ -93,7 +94,9 @@ class DistributedPolicy(Policy):
                  cap: int, eta: int = 0, hc_cap: int = 64,
                  psi_threshold: Optional[float] = 100.0,
                  compact: int = 0, mode_name: str = "dgll",
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 silent_after: Optional[Dict[int, int]] = None):
         from repro.core import dgll as dist
         self.name = mode_name
         self._dist = dist
@@ -124,6 +127,19 @@ class DistributedPolicy(Policy):
         self._fns: Dict[tuple, object] = {}    # (T, mode-key) → jitted
         self._comm_label_slots = 0
         self.fingerprint = build_fingerprint(g, rank)
+        # fault tolerance (repro.ft): ``monitor`` detects nodes gone
+        # silent; ``silent_after`` is the simulation hook — node → last
+        # superstep it completes before going dark (the masked columns
+        # honestly never run). Detected-dead nodes' unfinished roots
+        # are re-PLaNTed on the survivors (§5.2: trees depend on
+        # nothing, so recovery is just more planting).
+        self.monitor = monitor
+        self.silent_after = dict(silent_after or {})
+        self.dead_nodes: list = []
+        self._silent_from_pos: Dict[int, int] = {}
+        self._superstep = 0
+        self._replanted_trees = 0
+        self._replanted_labels = 0
 
     def config(self) -> dict:
         return {"batch": self.batch, "beta": self.beta,
@@ -190,7 +206,84 @@ class DistributedPolicy(Policy):
                 plant_trees=plant, compact=compact)
         return self._fns[key]
 
+    # -------------------------------------------------- heartbeats
+
+    def _silent_nodes(self) -> set:
+        """Nodes dark at the current superstep (simulation hook)."""
+        return {node for node, last in self.silent_after.items()
+                if self._superstep > int(last)}
+
+    def _heartbeat(self, st: Step) -> Step:
+        """Report live nodes to the monitor and mask silent nodes'
+        work — a dead node's supersteps genuinely do not run."""
+        if self.monitor is None and not self.silent_after:
+            return st
+        silent = self._silent_nodes()
+        if self.monitor is not None:
+            for node in range(self.q):
+                if node not in silent:
+                    self.monitor.report(node, self._superstep)
+        if not silent:
+            return st
+        valid = np.asarray(st.valid).copy()
+        for node in silent:
+            # queue position where this node's committed work ends —
+            # everything from here on is its lost tail
+            self._silent_from_pos.setdefault(node, st.pos)
+            valid[node, :] = False
+        return st._replace(valid=valid)
+
+    def _recover(self, sink) -> None:
+        """Declare nodes the monitor lost and re-PLaNT their
+        unfinished queues on the survivors."""
+        if self.monitor is None:
+            return
+        for node in self.monitor.lost(self._superstep):
+            if node in self.dead_nodes:
+                continue
+            self.dead_nodes.append(node)
+            completed = self._silent_from_pos.get(
+                node, self.queues.shape[1])
+            roots = lost_roots(self.queues, [node], completed)
+            if self.verbose:
+                print(f"  node {node} lost at superstep "
+                      f"{self._superstep}; re-planting "
+                      f"{len(roots)} roots on survivors")
+            if len(roots):
+                self._replant(sink, roots)
+
+    def _replant(self, sink, roots: np.ndarray) -> None:
+        """One extra communication-free plant launch over the lost
+        roots, spread round-robin across surviving rows (any row may
+        plant any tree — canonical emissions are order-independent,
+        so the labels land set-identical to an undisturbed run)."""
+        survivors = [r for r in range(self.q)
+                     if r not in set(self.dead_nodes)]
+        if not survivors:
+            raise RuntimeError("no surviving nodes to re-plant on")
+        roots = np.asarray(roots, np.int32)
+        S = len(survivors)
+        T = -(-len(roots) // S)
+        mat = np.full((self.q, T), -1, np.int32)
+        for i, r in enumerate(roots):
+            mat[survivors[i % S], i // S] = r
+        fn = self._step_fn(T, T, plant=True, use_hc=self.eta > 0,
+                           compact=0)
+        out = fn(sink.table, self.hc, self.rank_d,
+                 jax.device_put(jnp.asarray(mat), self._node_sh),
+                 jax.device_put(jnp.asarray(mat >= 0), self._node_sh),
+                 self.ell_src, self.ell_w)
+        sink.set_table(out.table)
+        nl, _, ovf, _ = _fetch_mesh_stats(out)
+        sink.note_overflow(ovf)
+        self._replanted_trees += int(len(roots))
+        self._replanted_labels += nl
+
+    # ----------------------------------------------------------------
+
     def step(self, st: Step, sink) -> StepOutcome:
+        self._superstep += 1
+        st = self._heartbeat(st)
         T = st.roots.shape[1]
         roots_d = jax.device_put(jnp.asarray(st.roots), self._node_sh)
         valid_d = jax.device_put(jnp.asarray(st.valid), self._node_sh)
@@ -225,6 +318,7 @@ class DistributedPolicy(Policy):
             self._comm_label_slots += slots
         sink.set_table(out.table)
         sink.note_overflow(ovf)
+        self._recover(sink)
         rec = make_record(mode, labels=nl, explored=exp,
                           trees=int(st.valid.sum()))
         return StepOutcome(mode=mode, record=rec, trees=rec.trees)
@@ -242,17 +336,25 @@ class DistributedPolicy(Policy):
     # ------------------------------------------------ checkpoint bits
 
     def meta(self) -> dict:
-        return {"plant_mode": bool(self.plant_mode)}
+        return {"plant_mode": bool(self.plant_mode),
+                "dead_nodes": [int(x) for x in self.dead_nodes]}
 
     def load_meta(self, meta: dict) -> None:
         self.plant_mode = bool(meta.get("plant_mode", self.plant_mode))
+        self.dead_nodes = [int(x) for x in meta.get("dead_nodes", [])]
 
     def counters(self) -> Dict[str, int]:
-        return {"comm_label_slots": self._comm_label_slots}
+        return {"comm_label_slots": self._comm_label_slots,
+                "replanted_trees": self._replanted_trees,
+                "replanted_labels": self._replanted_labels}
 
     def load_counters(self, counters: Dict[str, int]) -> None:
         self._comm_label_slots = int(
             counters.get("comm_label_slots", 0))
+        self._replanted_trees = int(
+            counters.get("replanted_trees", 0))
+        self._replanted_labels = int(
+            counters.get("replanted_labels", 0))
 
     def extras(self, sink) -> dict:
         return {"partitioned": sink.table, "hc": self.hc, "q": self.q,

@@ -33,6 +33,7 @@ from repro.core.labels import LabelOverflowError
 from repro.engine.policies import Policy, StepOutcome
 from repro.engine.records import (SuperstepRecord, fetch_stat_rows,
                                   record_from_row)
+from repro.ft.inject import fault_site
 
 #: data_state format tag for engine checkpoints
 CKPT_FORMAT = 1
@@ -107,7 +108,9 @@ def _try_restore(ckpt, policy: Policy, sink):
     algorithm, other build input (graph/rank fingerprint), other
     schedule config, other sink layout, larger cap — are cleared so
     their higher step numbers cannot shadow this run's resume points."""
-    step = ckpt.latest_step()
+    # newest *intact* step: a torn newest checkpoint (crash mid-commit)
+    # falls back to the previous one instead of poisoning the resume
+    step = ckpt.latest_intact_step()
     if step is None:
         return None
     meta = ckpt.peek(step)
@@ -174,6 +177,7 @@ def run(policy: Policy, sink, *, ckpt=None, resume: bool = False,
                 print(f"superstep end={end_pos:6d} mode={rec.mode} "
                       f"labels={rec.labels} psi={psi}")
             if ckpt is not None:
+                fault_site("engine.commit")
                 rec_arrays, vocab = _encode_records(records)
                 ckpt.save(end_pos, {"sink": sink.state_arrays(),
                                     "records": rec_arrays},

@@ -1,2 +1,33 @@
+"""`repro.ft` — fault tolerance: injection, durability, elasticity.
+
+Two halves:
+
+- :mod:`repro.ft.inject` — deterministic fault injection behind named
+  ``fault_site`` hooks threaded through every durability-critical
+  write/read in the repo (checkpoint commits, artifact save/load,
+  engine commits, the repair merge, spill reads, the serve answer
+  path), plus the bounded-retry wrapper those paths use for transient
+  I/O. :mod:`repro.ft.harness` drives real subprocesses through crash
+  plans and asserts recovery lands bit-identical labels.
+- :mod:`repro.ft.elastic` — node loss and re-meshing: checkpoint
+  restore onto a different mesh, lost-root collection for re-PLaNTing
+  (the paper's §5.2 independence property as a recovery mechanism),
+  and the host-side :class:`HeartbeatMonitor` failure detector wired
+  into ``repro.engine.dist``.
+"""
+
 from repro.ft.elastic import (HeartbeatMonitor, lost_roots,
                               reshard_state, restore_elastic)
+from repro.ft.inject import (ENV_PLAN, FAULT_EXIT_CODE, FAULT_KINDS,
+                             KNOWN_SITES, Fault, FaultPlan,
+                             InjectedCrash, TransientIOError,
+                             fault_site, faults, flip_bits, install,
+                             torn_write, with_retries)
+
+__all__ = [
+    "ENV_PLAN", "FAULT_EXIT_CODE", "FAULT_KINDS", "KNOWN_SITES",
+    "Fault", "FaultPlan", "HeartbeatMonitor", "InjectedCrash",
+    "TransientIOError", "fault_site", "faults", "flip_bits",
+    "install", "lost_roots", "reshard_state", "restore_elastic",
+    "torn_write", "with_retries",
+]

@@ -22,12 +22,13 @@ Straggler mitigation implemented here:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
+if TYPE_CHECKING:   # import cycle: checkpoint.manager uses ft.inject
+    from repro.checkpoint.manager import CheckpointManager
 
 
 def reshard_state(state: Any, shardings: Any) -> Any:
@@ -36,7 +37,7 @@ def reshard_state(state: Any, shardings: Any) -> Any:
         lambda x, s: jax.device_put(np.asarray(x), s), state, shardings)
 
 
-def restore_elastic(mgr: CheckpointManager, template: Any,
+def restore_elastic(mgr: "CheckpointManager", template: Any,
                     shardings: Any, step: Optional[int] = None
                     ) -> Tuple[Any, int, Dict]:
     """Restore the latest checkpoint onto a (possibly different) mesh."""

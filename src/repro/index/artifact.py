@@ -61,9 +61,10 @@ from repro.core import query as qm
 from repro.core.labels import LabelTable
 from repro.index.plan import BuildPlan
 from repro.index.report import BuildReport
-from repro.index.store import (LOAD_STORE_KINDS, DenseStore, LabelStore,
-                               ShardedStore, SpillStore, open_shard,
-                               shard_filename)
+from repro.ft.inject import fault_site, with_retries
+from repro.index.store import (LOAD_STORE_KINDS, CorruptArtifactError,
+                               DenseStore, LabelStore, ShardedStore,
+                               SpillStore, open_shard, shard_filename)
 from repro.serve import backends
 from repro.serve.service import QueryService
 
@@ -75,6 +76,19 @@ def rank_hash(rank: np.ndarray) -> str:
     """Stable fingerprint of a vertex hierarchy."""
     r = np.ascontiguousarray(np.asarray(rank).astype(np.int64))
     return hashlib.sha256(r.tobytes()).hexdigest()
+
+
+def file_sha256(path: str, chunk: int = 1 << 20) -> str:
+    """Streaming sha256 of a file — bounded resident memory, so
+    verifying a spill-scale shard never loads it whole."""
+    h = hashlib.sha256()
+    with open(path, "rb") as fh:
+        while True:
+            block = fh.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
 
 
 class CHLIndex:
@@ -174,7 +188,10 @@ class CHLIndex:
               batch_size: int = 1024, drop_first: bool = True,
               deadline_ms: float = 2.0, cache: int = 0,
               max_queue: Optional[int] = None,
-              routed: Optional[bool] = None) -> QueryService:
+              routed: Optional[bool] = None,
+              timeout_ms: Optional[float] = None,
+              breaker_threshold: int = 5,
+              breaker_reset_s: float = 30.0) -> QueryService:
         """The serving tier (:class:`repro.serve.QueryService`) in any
         §6.3 storage mode — no mesh/layout/store ceremony at the call
         site. Routes through the label store: dense stores serve all
@@ -191,7 +208,10 @@ class CHLIndex:
         partial batch out; ``cache`` sizes the hot-pair LRU (0 = off);
         ``max_queue`` bounds the admission queue (``None`` = no gate);
         ``routed`` overrides per-shard query routing (``None`` =
-        auto).
+        auto). Degradation knobs (``repro.ft``): ``timeout_ms`` is the
+        per-query expiry budget (None = none); ``breaker_threshold`` /
+        ``breaker_reset_s`` configure the answer-failure circuit
+        breaker — see :class:`repro.serve.QueryService`.
 
         The returned service stays registered (weakly) with this
         index: :meth:`apply` refreshes every live service's answer fn
@@ -202,7 +222,11 @@ class CHLIndex:
                            drop_first=drop_first,
                            deadline_s=deadline_ms * 1e-3,
                            cache_size=cache, max_queue=max_queue,
-                           cache_symmetric=not self.directed)
+                           cache_symmetric=not self.directed,
+                           timeout_s=(None if timeout_ms is None
+                                      else timeout_ms * 1e-3),
+                           breaker_threshold=breaker_threshold,
+                           breaker_reset_s=breaker_reset_s)
         self._services.append(
             (weakref.ref(svc), {"mode": mode, "mesh": mesh,
                                 "routed": routed}))
@@ -226,7 +250,8 @@ class CHLIndex:
     # --------------------------------------------------------- mutate
 
     def apply(self, mutations, *, graph, ckpt=None,
-              resume: bool = False, verbose: bool = False):
+              resume: bool = False, verbose: bool = False,
+              journal=None):
         """Apply a :class:`repro.dynamic.MutationBatch` to this index
         in place — re-planting only the affected trees — and
         invalidate every live service handed out by :meth:`serve`.
@@ -236,10 +261,24 @@ class CHLIndex:
         labels are bit-identical to a from-scratch rebuild on
         ``mutations.apply(graph)``; returns the
         :class:`repro.dynamic.RepairReport`.
+
+        ``journal`` (a :class:`repro.dynamic.RepairJournal`) makes the
+        repair **crash-atomic end to end**: intent plus the
+        pre-mutation store fingerprint are durable before the first
+        label moves, the post-repair fingerprint is recorded before
+        the artifact swap, and on restart
+        :meth:`repro.dynamic.RepairJournal.recover` tells from the
+        on-disk fingerprint whether the saved artifact is pre- or
+        post-mutation — a kill at any point leaves one of exactly
+        those two states, never a half-merged store.
         """
         from repro.dynamic.repair import repair_index
+        if journal is not None:
+            journal.begin(mutations, self)
         report = repair_index(self, mutations, graph, ckpt=ckpt,
                               resume=resume, verbose=verbose)
+        if journal is not None:
+            journal.record_post(self)
         self._invalidate_services()
         return report
 
@@ -327,24 +366,36 @@ class CHLIndex:
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         np.save(os.path.join(tmp, "rank.npy"), np.asarray(self.rank))
+
+        def write_shard(k: int, arrays: dict) -> str:
+            path = os.path.join(tmp, shard_filename(k))
+            with_retries(lambda: np.savez(path, **arrays),
+                         describe=f"index shard {k}")
+            fault_site("artifact.save.shard", path=path)
+            return file_sha256(path)
+
         if self.directed:
             arrays = {}
             for pfx, t in (("out", self.l_out), ("in", self.l_in)):
                 arrays[f"{pfx}_hubs"] = np.asarray(t.hubs)
                 arrays[f"{pfx}_dist"] = np.asarray(t.dist)
                 arrays[f"{pfx}_count"] = np.asarray(t.count)
-            np.savez(os.path.join(tmp, shard_filename(0)), **arrays)
+            shard_sha = [write_shard(0, arrays)]
             store_info = {"kind": "dense", "shards": 1,
                           "shard_labels": [self.total_labels]}
         else:
             shard_labels = []
+            shard_sha = []
             for k, arrs in self.store.shard_arrays():
-                np.savez(os.path.join(tmp, shard_filename(k)), **arrs)
+                shard_sha.append(write_shard(k, dict(arrs)))
                 shard_labels.append(int(np.sum(arrs["count"])))
             kind = "sharded" if self.store.num_shards > 1 else "dense"
             store_info = {"kind": kind,
                           "shards": self.store.num_shards,
                           "shard_labels": shard_labels}
+        # per-file integrity: verified on load (CorruptArtifactError
+        # on mismatch) — a bit flip can never become a wrong answer
+        store_info["shard_sha256"] = shard_sha
         manifest = {
             "format": FORMAT,
             "version": VERSION,
@@ -359,6 +410,8 @@ class CHLIndex:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=2)
+        fault_site("artifact.save.commit",
+                   path=os.path.join(tmp, "manifest.json"))
         old = tmp + ".old"
         shutil.rmtree(old, ignore_errors=True)
         if os.path.isdir(directory):
@@ -373,7 +426,8 @@ class CHLIndex:
     @classmethod
     def load(cls, directory: str, rank: Optional[np.ndarray] = None, *,
              store: Optional[str] = None,
-             shards: Optional[int] = None) -> "CHLIndex":
+             shards: Optional[int] = None,
+             verify: bool = True) -> "CHLIndex":
         """Load a saved index. When ``rank`` is given it must hash to
         the manifest's ``rank_hash`` — a label table is meaningless
         under a different hierarchy.
@@ -383,6 +437,14 @@ class CHLIndex:
         (re-)partitions by hub rank (``shards`` picks K when re-homing
         a dense artifact), ``"spill"`` memory-maps the shard segments
         instead of loading them. Default: the artifact's own layout.
+
+        ``verify`` (default on) re-hashes every shard file against the
+        sha256 the manifest recorded at save time and raises
+        :class:`CorruptArtifactError` on mismatch — a flipped bit or a
+        torn shard is refused, never served. Artifacts saved before
+        checksums existed skip the check. ``verify=False`` trades the
+        integrity pass for open latency (the per-shard label-count
+        cross-check still runs).
         """
         if store is not None and store not in LOAD_STORE_KINDS:
             raise ValueError(f"store {store!r} not one of "
@@ -401,6 +463,8 @@ class CHLIndex:
         plan = BuildPlan.from_dict(manifest["plan"])
         report = BuildReport.from_dict(manifest["report"])
 
+        if verify:
+            cls._verify_checksums(directory, manifest)
         if version < 2:
             stored_rank, built = cls._load_v1(directory, manifest,
                                               spill=store == "spill")
@@ -408,8 +472,9 @@ class CHLIndex:
             stored_rank, built = cls._load_v2(directory, manifest,
                                               spill=store == "spill")
         if rank_hash(stored_rank) != manifest["rank_hash"]:
-            raise ValueError(f"{directory}: stored rank does not match "
-                             "manifest rank_hash (corrupt artifact)")
+            raise CorruptArtifactError(
+                f"{directory}: stored rank does not match manifest "
+                "rank_hash (corrupt artifact)")
         if rank is not None and rank_hash(rank) != manifest["rank_hash"]:
             raise ValueError(
                 f"{directory}: rank-hash mismatch — this index was "
@@ -427,6 +492,32 @@ class CHLIndex:
                    rank=stored_rank)
 
     # ------------------------------------------------- load internals
+
+    @staticmethod
+    def _verify_checksums(directory: str, manifest: dict) -> None:
+        """Refuse shard files whose bytes no longer hash to what the
+        manifest recorded (pre-checksum artifacts carry none — nothing
+        to verify)."""
+        recorded = (manifest.get("store") or {}).get("shard_sha256")
+        if not recorded:
+            return
+        for k, want in enumerate(recorded):
+            path = os.path.join(directory, shard_filename(k))
+            try:
+                got = file_sha256(path)
+            except FileNotFoundError as e:
+                raise CorruptArtifactError(
+                    f"missing shard file {path} — artifact is "
+                    "incomplete (copy interrupted?)") from e
+            except OSError as e:
+                raise CorruptArtifactError(
+                    f"{directory}: {shard_filename(k)} unreadable "
+                    f"while verifying checksum ({e})") from e
+            if got != want:
+                raise CorruptArtifactError(
+                    f"{directory}: {shard_filename(k)} sha256 mismatch "
+                    f"(manifest {want[:12]}…, on disk {got[:12]}…) — "
+                    "corrupt artifact (torn write or bit rot)")
 
     @staticmethod
     def _load_v1(directory: str, manifest: dict, spill: bool = False):
@@ -466,7 +557,7 @@ class CHLIndex:
                     int(np.sum(np.asarray(arrs["out_count"]))
                         + np.sum(np.asarray(arrs["in_count"])))
                 if got != int(expected[k]):
-                    raise ValueError(
+                    raise CorruptArtifactError(
                         f"{directory}: {shard_filename(k)} holds {got} "
                         f"labels but the manifest recorded "
                         f"{int(expected[k])} (corrupt or mixed-version "

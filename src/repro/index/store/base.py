@@ -34,8 +34,17 @@ from typing import Dict, Iterator, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
-__all__ = ["BUILD_STORE_KINDS", "LOAD_STORE_KINDS", "LabelStore",
-           "shard_filename"]
+__all__ = ["BUILD_STORE_KINDS", "CorruptArtifactError",
+           "LOAD_STORE_KINDS", "LabelStore", "shard_filename"]
+
+
+class CorruptArtifactError(ValueError):
+    """An on-disk index artifact fails integrity verification —
+    checksum mismatch, truncated shard npz, label counts that
+    contradict the manifest. Subclasses ``ValueError`` so callers
+    matching the historical error type keep working; catch this to
+    distinguish *corruption* (quarantine, re-fetch, rebuild) from
+    *misuse* (wrong rank, wrong store kind)."""
 
 #: store kinds a :class:`repro.index.plan.BuildPlan` may request.
 #: ("spill" is a *load/serve-time* residency choice — there is nothing

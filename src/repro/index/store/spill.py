@@ -12,8 +12,9 @@ a verbatim ``.npy`` file at a fixed offset inside the archive; we
 parse the local zip header + npy header once and hand the data range
 to ``np.memmap``. Compressed or exotically-versioned members fall back
 to one-shot ``np.load`` of that shard (still one shard resident at a
-time). Truncated/missing shard files raise a ``ValueError`` naming the
-shard, not a numpy traceback.
+time). Truncated/missing shard files raise a typed
+:class:`~repro.index.store.base.CorruptArtifactError` (a
+``ValueError``) naming the shard, not a numpy traceback.
 """
 
 from __future__ import annotations
@@ -25,7 +26,8 @@ from typing import Dict, Iterator, List, Tuple
 import numpy as np
 
 from repro.core.labels import LabelTable
-from repro.index.store.base import shard_filename
+from repro.ft.inject import fault_site
+from repro.index.store.base import CorruptArtifactError, shard_filename
 from repro.index.store.dense import DenseStore
 
 
@@ -73,21 +75,23 @@ def open_npz_arrays(path: str, label: str) -> Dict[str, np.ndarray]:
     """Open an ``.npz`` as memmaps (eager fallback for compressed /
     exotic members); clear errors naming ``label`` for missing or
     corrupt files."""
+    fault_site("artifact.load.shard", path=path)
     if not os.path.exists(path):
-        raise ValueError(f"missing shard file {label} — artifact is "
-                         "incomplete (copy interrupted?)")
+        raise CorruptArtifactError(
+            f"missing shard file {label} — artifact is incomplete "
+            "(copy interrupted?)")
     try:
         return _npz_member_memmaps(path)
     except _Unmappable:
         pass
     except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
-        raise ValueError(
+        raise CorruptArtifactError(
             f"shard file {label} is truncated or corrupt ({e})") from e
     try:
         with np.load(path) as z:
             return {name: z[name] for name in z.files}
     except Exception as e:
-        raise ValueError(
+        raise CorruptArtifactError(
             f"shard file {label} is truncated or corrupt ({e})") from e
 
 
@@ -184,10 +188,20 @@ class SpillStore:
         """Partial PPSD mins over shard ``k`` only, in host numpy over
         the mapped segments — per-shard routing means a query pages in
         only the shards owning its endpoints' hubs."""
+        fault_site("spill.query")
         s = self._shards[k]
-        return _partial_query_np(s["hubs"], s["dist"],
-                                 np.atleast_1d(np.asarray(u, np.int64)),
-                                 np.atleast_1d(np.asarray(v, np.int64)))
+        try:
+            return _partial_query_np(
+                s["hubs"], s["dist"],
+                np.atleast_1d(np.asarray(u, np.int64)),
+                np.atleast_1d(np.asarray(v, np.int64)))
+        except OSError as e:
+            # a mapped page whose backing file went bad faults at read
+            # time, not open time — surface it typed so the routing
+            # tier can quarantine this shard
+            raise CorruptArtifactError(
+                f"spill shard {k} failed during a mapped read "
+                f"({e})") from e
 
     def to_table(self) -> LabelTable:
         """Materializes everything — O(total label slots) host memory;

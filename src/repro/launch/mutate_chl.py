@@ -25,7 +25,7 @@ import dataclasses
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.dynamic import random_mutations
+from repro.dynamic import RepairJournal, random_mutations
 from repro.index import BuildPlan, CHLIndex, build
 from repro.launch.chl import build_graph
 
@@ -92,21 +92,40 @@ def main(argv=None) -> dict:
     print(f"loaded index: n={idx.n} labels={idx.total_labels} "
           f"store={idx.store.kind}/{idx.store.num_shards}")
 
-    rng = np.random.default_rng(args.mut_seed)
-    batch = random_mutations(g, rng, inserts=args.inserts,
-                             deletes=args.deletes,
-                             reweights=args.reweights)
+    out_dir = args.save_index or args.index
+    # crash-atomic apply: intent + pre/post store fingerprints live in
+    # a sibling journal until the repaired artifact swap lands, so an
+    # interrupted run is classified (pre/post) and replayed on restart
+    journal = RepairJournal.for_artifact(out_dir)
+    if journal.pending() is not None:
+        state = journal.recover(idx)
+        print(f"unfinished repair journal found: loaded artifact is "
+              f"{state}-repair")
+        if state == "post":
+            # the previous run's atomic swap landed; only the journal
+            # retirement was lost — nothing to replay
+            print("journal retired; artifact already repaired")
+            return {"report": None, "index": idx, "batch": None,
+                    "graph_new": None}
+        batch = journal.batch()
+        journal.finish()
+        print(f"replaying journaled batch ({len(batch)} mutations)")
+    else:
+        rng = np.random.default_rng(args.mut_seed)
+        batch = random_mutations(g, rng, inserts=args.inserts,
+                                 deletes=args.deletes,
+                                 reweights=args.reweights)
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     rep = idx.apply(batch, graph=g, ckpt=mgr, resume=args.resume,
-                    verbose=True)
+                    verbose=True, journal=journal)
     print(f"repair done: {rep.summary()}")
 
     g_new = batch.apply(g)
     if args.verify_rebuild:
         _assert_rebuild_parity(idx, g_new, rep)
 
-    out_dir = args.save_index or args.index
     idx.save(out_dir)
+    journal.finish()
     print(f"repaired artifact saved to {out_dir}")
 
     if args.queries:

@@ -2,12 +2,16 @@ from repro.serve.backends import MODES, make_answer_fn, partition_by_hub
 from repro.serve.cache import AnswerCache
 from repro.serve.loadgen import poisson_open_loop, zipf_pairs
 from repro.serve.query_server import QueryServer, ServerStats
-from repro.serve.routing import make_routed_answer_fn
-from repro.serve.service import (QueryService, ServiceOverloadError,
-                                 Ticket)
+from repro.serve.routing import (RoutedAnswer, ShardUnavailableError,
+                                 make_routed_answer_fn)
+from repro.serve.service import (CircuitOpenError, QueryService,
+                                 QueryTimeoutError,
+                                 ServiceOverloadError, Ticket)
 from repro.serve.stats import ServiceStats
 
-__all__ = ["MODES", "AnswerCache", "QueryServer", "QueryService",
+__all__ = ["MODES", "AnswerCache", "CircuitOpenError", "QueryServer",
+           "QueryService", "QueryTimeoutError", "RoutedAnswer",
            "ServerStats", "ServiceOverloadError", "ServiceStats",
-           "Ticket", "make_answer_fn", "make_routed_answer_fn",
-           "partition_by_hub", "poisson_open_loop", "zipf_pairs"]
+           "ShardUnavailableError", "Ticket", "make_answer_fn",
+           "make_routed_answer_fn", "partition_by_hub",
+           "poisson_open_loop", "zipf_pairs"]

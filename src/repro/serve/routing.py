@@ -17,15 +17,39 @@ to a power-of-two bucket so jit sees at most ``log2(B)`` shapes per
 shard; host-numpy stores (``SpillStore``) run exact subsets — there
 routing is also an I/O win, since only the owning shards' mapped
 segments are paged in at all.
+
+Degradation (``repro.ft``): a shard whose read fails (truncated
+member, mapped page gone bad — a
+:class:`~repro.index.store.CorruptArtifactError` or raw ``OSError``)
+is **quarantined**: recorded in :attr:`RoutedAnswer.quarantined` and
+never retried. Queries that *need* a quarantined shard raise a typed
+:class:`ShardUnavailableError` — an unreadable shard must surface as
+an error, never as a silently-wrong (too-large) distance. Queries
+whose endpoints hold no labels in the bad shard are unaffected; the
+service's ``health()`` report lists the quarantine set.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Union
+from typing import Dict
 
 import numpy as np
 
 from repro.index.store import LabelStore, SpillStore
+
+
+class ShardUnavailableError(RuntimeError):
+    """A query needs a shard that has been quarantined (its backing
+    file is unreadable or corrupt) — the answer would be wrong, not
+    merely slow, so it is refused."""
+
+    def __init__(self, shard: int, reason: str):
+        super().__init__(
+            f"label shard {shard} is quarantined ({reason}); queries "
+            "needing it cannot be answered until the artifact is "
+            "repaired or reloaded")
+        self.shard = shard
+        self.reason = reason
 
 #: smallest padded subset shape for device-backed per-shard dispatch
 ROUTE_BUCKET_MIN = 16
@@ -38,33 +62,51 @@ def _pad_bucket(idx: np.ndarray) -> int:
     return b
 
 
-def make_routed_answer_fn(store: LabelStore
-                          ) -> Callable[..., np.ndarray]:
+class RoutedAnswer:
     """``answer(u, v) -> f32 [Q]`` that touches only the shards owning
     the endpoints' hubs. Exact (see module docstring); meaningful for
-    ``num_shards > 1`` (a dense store routes to its single shard)."""
-    has = store.shard_counts() > 0                  # [K, n] host bools
-    num_shards = has.shape[0]
-    pad_subsets = not isinstance(store, SpillStore)
+    ``num_shards > 1`` (a dense store routes to its single shard).
+    Shards whose reads fail are quarantined (see module docstring)."""
 
-    def answer(u, v) -> np.ndarray:
+    def __init__(self, store: LabelStore):
+        self._store = store
+        self._has = store.shard_counts() > 0        # [K, n] host bools
+        self.num_shards = self._has.shape[0]
+        self._pad_subsets = not isinstance(store, SpillStore)
+        #: shard → reason, populated on the first failed read; a
+        #: quarantined shard is never retried
+        self.quarantined: Dict[int, str] = {}
+
+    def __call__(self, u, v) -> np.ndarray:
         u = np.atleast_1d(np.asarray(u)).astype(np.int64)
         v = np.atleast_1d(np.asarray(v)).astype(np.int64)
         best = np.full(len(u), np.inf, dtype=np.float32)
-        for k in range(num_shards):
-            mask = has[k, u] & has[k, v]
+        for k in range(self.num_shards):
+            mask = self._has[k, u] & self._has[k, v]
             if not mask.any():
-                continue                     # no endpoint pair lives here
+                continue                 # no endpoint pair lives here
+            if k in self.quarantined:
+                raise ShardUnavailableError(k, self.quarantined[k])
             idx = np.nonzero(mask)[0]
             us, vs = u[idx], v[idx]
-            if pad_subsets:
+            if self._pad_subsets:
                 b = _pad_bucket(idx)
                 if b > len(idx):
                     us = np.pad(us, (0, b - len(idx)))
                     vs = np.pad(vs, (0, b - len(idx)))
-            d, _ = store.query_shard(k, us, vs)
-            best[idx] = np.minimum(best[idx],
-                                   np.asarray(d, np.float32)[:len(idx)])
+            try:
+                d, _ = self._store.query_shard(k, us, vs)
+            except (OSError, ValueError) as e:
+                self.quarantined[k] = f"{type(e).__name__}: {e}"
+                raise ShardUnavailableError(
+                    k, self.quarantined[k]) from e
+            best[idx] = np.minimum(
+                best[idx], np.asarray(d, np.float32)[:len(idx)])
         return best
 
-    return answer
+
+def make_routed_answer_fn(store: LabelStore) -> RoutedAnswer:
+    """Build the routed answer callable (kept as the public
+    constructor name; the callable's class carries the quarantine
+    state)."""
+    return RoutedAnswer(store)

@@ -38,6 +38,25 @@ Latency accounting keeps the legacy drop-first contract: unless
 ``warmup()`` was called, the first launch is treated as the compile
 sample — recorded in ``ServiceStats.warmup_s``, excluded from the
 percentiles and busy time.
+
+Degradation (``repro.ft``): a failing answer fn (a quarantined shard,
+a poisoned kernel) must degrade the service, not kill the process or
+fabricate distances. Three mechanisms, all observable through
+``ServiceStats`` and :meth:`QueryService.health`:
+
+- **per-query timeouts** (``timeout_s``): a query that has waited
+  longer than its budget by the time its batch launches is expired —
+  ``Ticket.error = "timeout"``, value ``nan`` — instead of burning a
+  kernel slot on an answer nobody is waiting for;
+- **failure containment**: an answer-fn exception fails only the
+  queries in that launch (``Ticket.error`` carries the cause, value
+  ``nan``) — it never unwinds through ``pump``/``flush`` and never
+  poisons the cache;
+- **a circuit breaker** (``breaker_threshold`` consecutive launch
+  failures → open): while open, submissions fail fast with
+  :class:`CircuitOpenError` instead of queueing work that will fail;
+  after ``breaker_reset_s`` one probe launch is allowed (half-open)
+  and its outcome closes or re-opens the circuit.
 """
 
 from __future__ import annotations
@@ -48,6 +67,7 @@ from typing import Callable, List, Optional, Sequence, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.inject import fault_site
 from repro.serve.cache import AnswerCache
 from repro.serve.stats import ServiceStats
 
@@ -70,11 +90,29 @@ class ServiceOverloadError(RuntimeError):
         self.max_queue = max_queue
 
 
+class CircuitOpenError(RuntimeError):
+    """The circuit breaker is open — the answer fn has failed
+    ``breaker_threshold`` consecutive launches; fail fast instead of
+    queueing doomed work. Retry after ``retry_in_s``."""
+
+    def __init__(self, retry_in_s: float):
+        super().__init__(
+            f"service circuit breaker is open (answer fn failing); "
+            f"retry in {retry_in_s:.3f}s")
+        self.retry_in_s = retry_in_s
+
+
+class QueryTimeoutError(RuntimeError):
+    """A query expired past its ``timeout_s`` budget before its batch
+    launched (carried on ``Ticket.error``; raised only by callers that
+    choose to)."""
+
+
 class Ticket:
     """One admitted query's future: ``done`` flips when its batch (or
     cache hit) answers; ``value`` is the f32 distance."""
 
-    __slots__ = ("u", "v", "value", "done", "cached",
+    __slots__ = ("u", "v", "value", "done", "cached", "error",
                  "t_submit", "t_done")
 
     def __init__(self, u: int, v: int, t_submit: float):
@@ -83,11 +121,16 @@ class Ticket:
         self.value: Optional[np.float32] = None
         self.done = False
         self.cached = False
+        #: None on success; "timeout" / the answer-fn failure string
+        #: when this query was failed (value is nan then)
+        self.error: Optional[str] = None
         self.t_submit = t_submit
         self.t_done: Optional[float] = None
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         state = f"={self.value}" if self.done else " pending"
+        if self.error is not None:
+            state = f" error={self.error!r}"
         return f"Ticket({self.u},{self.v}{state})"
 
 
@@ -105,6 +148,13 @@ class QueryService:
     cache_symmetric: share (u,v)/(v,u) entries (exact for undirected).
     drop_first:    legacy accounting — first launch lands in warmup_s.
     clock:         injectable time source (tests / virtual time).
+    timeout_s:     per-query budget; queries older than this at launch
+                   time are expired with ``error="timeout"`` (None =
+                   no timeout).
+    breaker_threshold: consecutive failed launches that open the
+                   circuit breaker (0 disables the breaker).
+    breaker_reset_s: seconds the breaker stays open before a half-open
+                   probe launch is allowed.
     """
 
     def __init__(self, answer: AnswerFn, *, batch_size: int = 1024,
@@ -112,13 +162,23 @@ class QueryService:
                  deadline_s: float = 0.002,
                  cache_size: int = 0, cache_symmetric: bool = True,
                  drop_first: bool = True,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 timeout_s: Optional[float] = None,
+                 breaker_threshold: int = 5,
+                 breaker_reset_s: float = 30.0):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self._answer = answer
         self.batch_size = int(batch_size)
         self.max_queue = None if max_queue is None else int(max_queue)
         self.deadline_s = float(deadline_s)
+        self.timeout_s = None if timeout_s is None else float(timeout_s)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_reset_s = float(breaker_reset_s)
+        self._breaker = "closed"       # closed | open | half-open
+        self._breaker_opened_at = 0.0
+        self._consec_failures = 0
+        self._last_error: Optional[str] = None
         self._cache = (AnswerCache(cache_size, symmetric=cache_symmetric)
                        if cache_size else None)
         self._clock = clock or time.perf_counter
@@ -149,8 +209,17 @@ class QueryService:
 
     def try_submit(self, u: int, v: int) -> Optional[Ticket]:
         """Admit one query; ``None`` when the queue is full (the
-        open-loop caller counts that as a rejection and moves on)."""
+        open-loop caller counts that as a rejection and moves on).
+        Raises :class:`CircuitOpenError` while the breaker is open —
+        doomed work is refused at the gate, not queued."""
         now = self._clock()
+        if self._breaker == "open":
+            waited = now - self._breaker_opened_at
+            if waited >= self.breaker_reset_s:
+                self._breaker = "half-open"     # admit one probe batch
+            else:
+                self.stats_.breaker_fast_fails += 1
+                raise CircuitOpenError(self.breaker_reset_s - waited)
         u = int(u)
         v = int(v)
         tk = Ticket(u, v, now)
@@ -211,25 +280,78 @@ class QueryService:
             b <<= 1
         return min(b, cap)
 
+    def _fail(self, tks: List[Ticket], error: str, now: float) -> None:
+        """Resolve tickets as failed: value nan, ``error`` recorded."""
+        for tk in tks:
+            tk.value = np.float32(np.nan)
+            tk.error = error
+            tk.done = True
+            tk.t_done = now
+        self.stats_.failed_queries += len(tks)
+
     def _launch(self, k: int, pad_to: int) -> None:
         """Answer the oldest ``k`` pending queries in one kernel
-        launch padded to ``pad_to`` slots."""
+        launch padded to ``pad_to`` slots. Expired queries are failed
+        instead of launched; an answer-fn exception fails this batch
+        only (and feeds the circuit breaker) — it never propagates."""
         start = self._clock()
-        u = np.asarray(self._pu[:k], dtype=np.int32)
-        v = np.asarray(self._pv[:k], dtype=np.int32)
         tks = self._ptk[:k]
+        uu, vv = self._pu[:k], self._pv[:k]
         del self._pu[:k], self._pv[:k], self._ptk[:k], self._pt[:k]
         self.stats_.queue_depth = len(self._pu)
+        if self.timeout_s is not None:
+            live = [i for i, tk in enumerate(tks)
+                    if start - tk.t_submit <= self.timeout_s]
+            if len(live) < k:
+                expired = [tks[i] for i in range(k)
+                           if start - tks[i].t_submit > self.timeout_s]
+                self.stats_.timeouts += len(expired)
+                self.stats_.queries += len(expired)
+                self._fail(expired, "timeout", start)
+                tks = [tks[i] for i in live]
+                uu = [uu[i] for i in live]
+                vv = [vv[i] for i in live]
+                k = len(live)
+                if k == 0:
+                    return
+        u = np.asarray(uu, dtype=np.int32)
+        v = np.asarray(vv, dtype=np.int32)
         pad = pad_to - k
         if pad:
             u = np.pad(u, (0, pad))
             v = np.pad(v, (0, pad))
+        st = self.stats_
         t0 = time.perf_counter()
-        res = np.asarray(self._answer(jnp.asarray(u), jnp.asarray(v)),
-                         dtype=np.float32)
+        try:
+            fault_site("serve.answer")
+            res = np.asarray(
+                self._answer(jnp.asarray(u), jnp.asarray(v)),
+                dtype=np.float32)
+        except Exception as e:                  # InjectedCrash passes
+            end = self._clock()
+            error = f"{type(e).__name__}: {e}"
+            self._last_error = error
+            st.answer_failures += 1
+            st.batches += 1
+            st.queries += k
+            self._consec_failures += 1
+            tripped = (self.breaker_threshold
+                       and (self._breaker == "half-open"
+                            or self._consec_failures
+                            >= self.breaker_threshold))
+            if tripped:
+                if self._breaker != "open":
+                    st.breaker_trips += 1
+                self._breaker = "open"
+                self._breaker_opened_at = end
+                self._consec_failures = 0
+            self._fail(tks, error, end)
+            return
         dt = time.perf_counter() - t0
         end = self._clock()
-        st = self.stats_
+        self._consec_failures = 0
+        if self._breaker == "half-open":        # probe succeeded
+            self._breaker = "closed"
         st.queries += k
         st.batches += 1
         st.real_slots += k
@@ -338,3 +460,42 @@ class QueryService:
 
     def stats(self) -> dict:
         return self.stats_.summary()
+
+    def health(self) -> dict:
+        """Liveness/degradation report for operators and probes.
+
+        ``status``: ``"ok"`` (everything answering), ``"degraded"``
+        (answers flow but faults occurred — failed launches, expired
+        queries, or quarantined shards), ``"unavailable"`` (breaker
+        open: submissions fail fast). Quarantined shards come from the
+        routed answer fn when it tracks them
+        (:class:`repro.serve.routing.RoutedAnswer`)."""
+        now = self._clock()
+        st = self.stats_
+        quarantined = dict(getattr(self._answer, "quarantined",
+                                   None) or {})
+        retry_in = 0.0
+        if self._breaker == "open":
+            retry_in = max(0.0, self.breaker_reset_s
+                           - (now - self._breaker_opened_at))
+        if self._breaker == "open" and retry_in > 0:
+            status = "unavailable"
+        elif (quarantined or st.answer_failures or st.timeouts
+                or self._breaker != "closed"):
+            status = "degraded"
+        else:
+            status = "ok"
+        return {
+            "status": status,
+            "breaker": self._breaker,
+            "breaker_retry_in_s": retry_in,
+            "consecutive_failures": self._consec_failures,
+            "answer_failures": st.answer_failures,
+            "failed_queries": st.failed_queries,
+            "timeouts": st.timeouts,
+            "breaker_trips": st.breaker_trips,
+            "breaker_fast_fails": st.breaker_fast_fails,
+            "quarantined_shards": quarantined,
+            "queue_depth": len(self._pu),
+            "last_error": self._last_error,
+        }

@@ -69,6 +69,13 @@ class ServiceStats:
     cache_misses: int = 0
     invalidations: int = 0         # index-mutation epoch bumps served
 
+    # faults (repro.ft): the degradation counters health() reads
+    answer_failures: int = 0       # kernel/answer-fn launches that raised
+    failed_queries: int = 0        # queries answered with an error
+    timeouts: int = 0              # queries expired past timeout_s
+    breaker_trips: int = 0         # closed/half-open → open transitions
+    breaker_fast_fails: int = 0    # submissions refused while open
+
     # per-stage latency windows (seconds)
     lat_samples: Deque[float] = dataclasses.field(
         default_factory=_new_window)            # per-batch answer time
@@ -126,4 +133,10 @@ class ServiceStats:
             "queue_p99_ms": percentile_ms(self.queue_wait_samples, 99),
             "total_p50_ms": percentile_ms(self.total_lat_samples, 50),
             "total_p99_ms": percentile_ms(self.total_lat_samples, 99),
+            # faults
+            "answer_failures": self.answer_failures,
+            "failed_queries": self.failed_queries,
+            "timeouts": self.timeouts,
+            "breaker_trips": self.breaker_trips,
+            "breaker_fast_fails": self.breaker_fast_fails,
         }

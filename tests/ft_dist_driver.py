@@ -1,0 +1,57 @@
+"""Subprocess driver: node loss + re-PLaNT on a real 2-device mesh.
+
+Run standalone:  PYTHONPATH=src python tests/ft_dist_driver.py
+Invoked by tests/test_ft.py in a subprocess so the 2-device host
+platform never leaks into the main (1-device) test session.
+
+Node 1 completes superstep 2, then goes dark (``silent_after`` masks
+its queue columns — the work honestly never runs). The
+``HeartbeatMonitor`` declares it lost after ``patience`` silent
+supersteps and the engine re-PLaNTs its unfinished queue tail on the
+survivor. The recovered index must hold exactly the reference label
+*sets* — replanted trees land their labels in the survivor's
+partition, so slot layout differs but canonical content cannot (§5.2:
+PLaNT trees depend on nothing, any node may plant any tree).
+"""
+
+from repro.compat import set_host_device_count
+
+set_host_device_count(2)               # before jax backend init
+
+
+def main() -> None:
+    import jax
+    assert jax.device_count() == 2, jax.devices()
+
+    from repro.core import labels as lbl
+    from repro.core import validate
+    from repro.core.dgll import make_node_mesh
+    from repro.core.hybrid import plant_distributed_chl
+    from repro.core.pll import pll_undirected
+    from repro.ft import HeartbeatMonitor
+    from repro.graphs import grid_road
+    from repro.graphs.ranking import degree_ranking
+
+    g = grid_road(8, 8, seed=3)
+    rank = degree_ranking(g)
+    ref = pll_undirected(g, rank)
+    mesh = make_node_mesh(2)
+
+    mon = HeartbeatMonitor(2, patience=1)
+    # beta=2 keeps enough supersteps (2,4,8,16,2) for the dark node to
+    # cross the monitor's patience before the schedule runs out
+    table, stats = plant_distributed_chl(
+        g, rank, mesh=mesh, batch=2, beta=2.0, monitor=mon,
+        silent_after={1: 2}, verbose=True)
+
+    assert stats["dead_nodes"] == [1], stats["dead_nodes"]
+    assert stats["replanted_trees"] > 0, stats["replanted_trees"]
+    validate.check_equal(lbl.to_numpy_sets(table), ref)
+    print(f"[ok] node 1 lost; {stats['replanted_trees']} trees "
+          f"({stats['replanted_labels']} labels) re-planted on the "
+          "survivor; label sets equal the PLL reference")
+    print("FT_DIST_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,540 @@
+"""The `repro.ft` subsystem: deterministic fault injection behind
+named sites, crash-safe durability (checkpoint torn-write fallback,
+artifact checksums, the journaled repair protocol), graceful serving
+degradation (timeouts, circuit breaker, shard quarantine), and the
+elastic node-loss recovery primitives.
+
+Subprocess hard-kill coverage (real ``os._exit`` at each site →
+resume → bit-identical artifacts) lives in ``repro.launch.ft_smoke``,
+run by CI; the tests here pin the same invariants in-process with
+soft :class:`InjectedCrash` faults, plus a real 2-device node-loss
+run via ``tests/ft_dist_driver.py``.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, CorruptCheckpointError
+from repro.dynamic import RepairJournal, random_mutations, \
+    store_fingerprint
+from repro.ft import (FAULT_EXIT_CODE, Fault, FaultPlan,
+                      HeartbeatMonitor, InjectedCrash,
+                      TransientIOError, fault_site, faults,
+                      lost_roots, torn_write, with_retries)
+from repro.graphs import grid_road
+from repro.graphs.ranking import degree_ranking
+from repro.index import BuildPlan, CHLIndex, build
+from repro.index.store import CorruptArtifactError, shard_filename
+from repro.serve import (CircuitOpenError, QueryService, RoutedAnswer,
+                         ShardUnavailableError)
+
+
+def road():
+    g = grid_road(6, 6, seed=2)
+    return g, degree_ranking(g)
+
+
+def sharded_index():
+    g, rank = road()
+    plan = BuildPlan(algo="plant", batch=8, store="sharded", shards=2)
+    return g, rank, build(g, rank, plan)
+
+
+def stores_equal(a, b) -> bool:
+    sa, sb = list(a.shard_arrays()), list(b.shard_arrays())
+    if [k for k, _ in sa] != [k for k, _ in sb]:
+        return False
+    return all(np.array_equal(np.asarray(x[key]), np.asarray(y[key]))
+               for (_, x), (_, y) in zip(sa, sb)
+               for key in ("hubs", "dist", "count"))
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------- FaultPlan
+
+def test_fault_plan_rejects_unknown_site():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan({"definitely.not.a.site": [Fault("crash")]})
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor")
+
+
+def test_fault_plan_json_roundtrip():
+    plan = FaultPlan({"engine.commit": [Fault("crash", after=2,
+                                              hard=True)],
+                      "spill.query": [Fault("io", count=3)]}, seed=7)
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.seed == 7
+    assert back.sites == plan.sites
+
+
+def test_fault_plan_site_rng_deterministic():
+    a = FaultPlan({}, seed=3)._rng("artifact.load.shard")
+    b = FaultPlan({}, seed=3)._rng("artifact.load.shard")
+    assert np.array_equal(a.integers(0, 1 << 30, 8),
+                          b.integers(0, 1 << 30, 8))
+
+
+def test_crash_fires_after_n_hits():
+    plan = FaultPlan({"engine.commit": [Fault("crash", after=1)]})
+    with faults(plan):
+        fault_site("engine.commit")            # hit 1 passes
+        with pytest.raises(InjectedCrash):
+            fault_site("engine.commit")        # hit 2 crashes
+        fault_site("engine.commit")            # hit 3 passes again
+    assert plan.fired == [("engine.commit", "crash")]
+    fault_site("engine.commit")                # uninstalled → no-op
+
+
+def test_io_fault_window_matches_retry_budget():
+    plan = FaultPlan({"checkpoint.write": [Fault("io", count=2)]})
+    with faults(plan):
+        with_retries(lambda: fault_site("checkpoint.write"),
+                     base_delay_s=0.0)
+    assert plan.fired == [("checkpoint.write", "io")] * 2
+
+    plan = FaultPlan({"checkpoint.write": [Fault("io", count=5)]})
+    with faults(plan):
+        with pytest.raises(TransientIOError):
+            with_retries(lambda: fault_site("checkpoint.write"),
+                         retries=3, base_delay_s=0.0)
+
+
+def test_injected_crash_is_never_retried():
+    plan = FaultPlan({"engine.commit": [Fault("crash")]})
+    calls = {"n": 0}
+
+    def body():
+        calls["n"] += 1
+        fault_site("engine.commit")
+
+    with faults(plan):
+        with pytest.raises(InjectedCrash):
+            with_retries(body, base_delay_s=0.0)
+    assert calls["n"] == 1          # BaseException: no second attempt
+    assert not isinstance(InjectedCrash("x"), Exception)
+
+
+def test_torn_write_and_flip_bits(tmp_path):
+    p = str(tmp_path / "blob")
+    with open(p, "wb") as f:
+        f.write(bytes(range(200)))
+    kept = torn_write(p, 0.25)
+    assert kept == 50 and os.path.getsize(p) == 50
+    before = open(p, "rb").read()
+    plan = FaultPlan({}, seed=1)
+    offs = __import__("repro.ft.inject", fromlist=["flip_bits"]) \
+        .flip_bits(p, plan._rng("x"), flips=3)
+    after = open(p, "rb").read()
+    assert len(offs) == 3 and before != after
+    assert len(after) == 50         # bit rot, not truncation
+
+
+def test_hard_crash_kills_subprocess():
+    from repro.ft.harness import assert_child_killed, run_child
+    plan = FaultPlan({"engine.commit": [Fault("crash", hard=True)]})
+    proc = run_child(
+        ["-c", "from repro.ft.inject import fault_site; "
+               "fault_site('engine.commit'); print('survived')"],
+        plan=plan)
+    assert_child_killed(proc)
+    assert proc.returncode == FAULT_EXIT_CODE
+    assert "survived" not in proc.stdout
+
+
+# --------------------------------------------------------- checkpoint
+
+def ckpt_state():
+    return {"a": np.arange(12, dtype=np.int64),
+            "b": np.linspace(0.0, 1.0, 7).astype(np.float32)}
+
+
+def test_checkpoint_torn_newest_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    st = ckpt_state()
+    mgr.save(1, st, data_state={"pos": 1})
+    mgr.save(2, {k: v + 1 for k, v in st.items()},
+             data_state={"pos": 2})
+    torn_write(os.path.join(mgr._step_dir(2), "arrays.npz"), 0.4)
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        assert mgr.latest_intact_step() == 1
+    state, step, data = mgr.restore(st)
+    assert step == 1 and data == {"pos": 1}
+    np.testing.assert_array_equal(np.asarray(state["a"]), st["a"])
+    with pytest.raises(CorruptCheckpointError, match="CRC|BadZip"):
+        mgr.restore(st, step=2)
+    with pytest.raises(CorruptCheckpointError):
+        mgr.peek(step=2)
+
+
+def test_checkpoint_all_torn_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, ckpt_state())
+    torn_write(os.path.join(mgr._step_dir(1), "arrays.npz"), 0.4)
+    with pytest.warns(UserWarning):
+        with pytest.raises(CorruptCheckpointError,
+                           match="no intact step"):
+            mgr.latest_intact_step()
+
+
+def test_checkpoint_commit_crash_leaves_no_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    plan = FaultPlan({"checkpoint.commit": [Fault("crash")]})
+    with faults(plan):
+        with pytest.raises(InjectedCrash):
+            mgr.save(3, ckpt_state())
+    assert mgr.all_steps() == []           # rename never happened
+    mgr.save(3, ckpt_state())              # site healed → clean save
+    assert mgr.all_steps() == [3]
+    assert mgr.verify_step(3) is None
+
+
+def test_checkpoint_write_transient_io_is_retried(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    plan = FaultPlan({"checkpoint.write": [Fault("io", count=2)]})
+    with faults(plan):
+        mgr.save(1, ckpt_state())          # retries absorb the fault
+    assert plan.fired == [("checkpoint.write", "io")] * 2
+    assert mgr.latest_intact_step() == 1
+
+
+def test_checkpoint_gc_pins_steps_being_read(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = ckpt_state()
+    mgr.save(1, st)
+    mgr.save(2, st)
+    mgr._reading.add(1)                    # a concurrent restore
+    mgr.save(3, st)
+    mgr.save(4, st)
+    assert 1 in mgr.all_steps(), "GC deleted a step being read"
+    assert 2 not in mgr.all_steps()
+    mgr._reading.discard(1)
+    mgr.save(5, st)
+    assert mgr.all_steps() == [4, 5]
+
+
+# ----------------------------------------------------------- artifact
+
+def test_artifact_bitflip_rejected_at_load(tmp_path):
+    g, rank, idx = sharded_index()
+    d = str(tmp_path / "idx")
+    idx.save(d)
+    shard = os.path.join(d, shard_filename(1))
+    with open(shard, "r+b") as f:
+        f.seek(os.path.getsize(shard) // 3)
+        byte = f.read(1)[0]
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([byte ^ 0x10]))
+    with pytest.raises(CorruptArtifactError, match="sha256 mismatch"):
+        CHLIndex.load(d, rank=rank)
+
+
+def test_artifact_save_crash_leaves_no_directory(tmp_path):
+    g, rank, idx = sharded_index()
+    d = str(tmp_path / "idx")
+    plan = FaultPlan({"artifact.save.commit": [Fault("crash")]})
+    with faults(plan):
+        with pytest.raises(InjectedCrash):
+            idx.save(d)
+    assert not os.path.exists(d), "staged swap landed a partial dir"
+    idx.save(d)
+    back = CHLIndex.load(d, rank=rank)
+    assert stores_equal(idx.store, back.store)
+
+
+def test_artifact_torn_shard_write_cannot_serve_wrong_answers(
+        tmp_path):
+    """A fault tearing a shard *during* save must surface as a typed
+    load error — never as a loadable artifact with wrong labels."""
+    g, rank, idx = sharded_index()
+    d = str(tmp_path / "idx")
+    plan = FaultPlan({"artifact.save.shard": [
+        Fault("torn", keep_fraction=0.5)]})
+    with faults(plan):
+        idx.save(d)                        # save itself survives
+    with pytest.raises(CorruptArtifactError):
+        CHLIndex.load(d, rank=rank)
+
+
+def test_engine_commit_crash_then_resume_bit_identical(tmp_path):
+    g, rank = road()
+    plan_ = BuildPlan(algo="plant", batch=4, store="sharded", shards=2)
+    ref = build(g, rank, plan_)
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    fplan = FaultPlan({"engine.commit": [Fault("crash", after=2)]})
+    with faults(fplan):
+        with pytest.raises(InjectedCrash):
+            build(g, rank, plan_, ckpt=mgr, resume=False)
+    assert fplan.fired == [("engine.commit", "crash")]
+    assert mgr.latest_intact_step() is not None
+    idx = build(g, rank, plan_, ckpt=mgr, resume=True)
+    assert stores_equal(idx.store, ref.store), \
+        "crash+resume diverged from the uninterrupted build"
+
+
+# ------------------------------------------------------ repair journal
+
+def test_journal_protocol_roundtrip(tmp_path):
+    g, rank, idx = sharded_index()
+    d = str(tmp_path / "idx")
+    idx.save(d)
+    j = RepairJournal.for_artifact(d)
+    assert j.pending() is None
+    rng = np.random.default_rng(5)
+    batch = random_mutations(g, rng, inserts=1, deletes=1, reweights=1)
+
+    j.begin(batch, idx)
+    rec = j.pending()
+    assert rec["state"] == "begun"
+    assert rec["pre"] == store_fingerprint(idx.store)
+    assert j.batch().to_dict() == batch.to_dict()
+    with pytest.raises(RuntimeError, match="unfinished repair"):
+        j.begin(batch, idx)                # no double-begin
+    assert j.recover(idx) == "pre"         # store untouched so far
+    assert j.pending() is not None         # pre-recovery keeps intent
+
+    idx.apply(batch, graph=g)
+    j.record_post(idx)
+    assert j.pending()["state"] == "repaired"
+    assert j.recover(idx) == "post"        # swap-equivalent state
+    assert j.pending() is None             # post-recovery retires it
+    j.finish()                             # idempotent
+
+
+def test_journal_flags_out_of_band_change(tmp_path):
+    g, rank, idx = sharded_index()
+    d = str(tmp_path / "idx")
+    idx.save(d)
+    j = RepairJournal.for_artifact(d)
+    rng = np.random.default_rng(6)
+    batch = random_mutations(g, rng)
+    j.begin(batch, idx)
+    # the artifact is replaced out-of-band while a repair is journaled
+    # — its store matches neither the journaled pre nor post state
+    g2 = grid_road(6, 6, seed=9)
+    other = build(g2, degree_ranking(g2),
+                  BuildPlan(algo="plant", batch=8, store="sharded",
+                            shards=2))
+    assert store_fingerprint(other.store) != store_fingerprint(
+        idx.store)
+    with pytest.raises(CorruptArtifactError, match="neither"):
+        j.recover(other)
+    j.finish()
+
+
+def test_repair_merge_crash_replay_bit_identical(tmp_path):
+    g, rank, idx = sharded_index()
+    d = str(tmp_path / "idx")
+    idx.save(d)
+    rng = np.random.default_rng(9)
+    batch = random_mutations(g, rng, inserts=2, deletes=1, reweights=1)
+
+    ref = CHLIndex.load(d, rank=rank)      # uninterrupted repair
+    ref.apply(batch, graph=g)
+
+    victim = CHLIndex.load(d, rank=rank)
+    j = RepairJournal.for_artifact(d)
+    plan = FaultPlan({"repair.merge": [Fault("crash")]})
+    with faults(plan):
+        with pytest.raises(InjectedCrash):
+            victim.apply(batch, graph=g, journal=j)
+    # the crash beat the merge: store is pre, the intent is durable
+    fresh = CHLIndex.load(d, rank=rank)
+    assert j.recover(fresh) == "pre"
+    replay = j.batch()
+    j.finish()
+    fresh.apply(replay, graph=g, journal=j)
+    j.finish()
+    assert stores_equal(fresh.store, ref.store), \
+        "journal replay diverged from the uninterrupted repair"
+
+
+# -------------------------------------------------------- degradation
+
+def good_answer(u, v):
+    return np.zeros(len(np.atleast_1d(np.asarray(u))), np.float32)
+
+
+def test_timeout_expires_stale_queries():
+    clock = FakeClock()
+    calls = {"n": 0}
+
+    def answer(u, v):
+        calls["n"] += 1
+        return good_answer(u, v)
+
+    svc = QueryService(answer, batch_size=4, timeout_s=0.5,
+                       clock=clock, drop_first=False)
+    t1 = svc.try_submit(0, 1)
+    t2 = svc.try_submit(1, 2)
+    clock.t = 1.0                          # both past their budget
+    svc.drain()
+    assert calls["n"] == 0, "expired queries still hit the kernel"
+    for tk in (t1, t2):
+        assert tk.done and tk.error == "timeout" and np.isnan(tk.value)
+    assert svc.stats_.timeouts == 2
+    assert svc.stats_.failed_queries == 2
+    assert svc.health()["status"] == "degraded"
+
+    t3 = svc.try_submit(2, 3)              # fresh query still answered
+    svc.drain()
+    assert t3.done and t3.error is None and t3.value == 0.0
+
+
+def test_breaker_opens_fails_fast_and_half_open_recovers():
+    clock = FakeClock()
+
+    def bad(u, v):
+        raise RuntimeError("poisoned kernel")
+
+    svc = QueryService(bad, batch_size=2, breaker_threshold=2,
+                       breaker_reset_s=10.0, clock=clock,
+                       drop_first=False)
+    tks = svc.submit([0, 1], [1, 2])       # launch 1 fails (consec 1)
+    assert all(tk.done and "poisoned" in tk.error for tk in tks)
+    assert svc.health()["breaker"] == "closed"
+    svc.submit([2, 3], [3, 4])             # launch 2 fails → trips
+    assert svc.health()["breaker"] == "open"
+    assert svc.health()["status"] == "unavailable"
+    with pytest.raises(CircuitOpenError):
+        svc.try_submit(5, 6)
+    st = svc.stats()
+    assert st["breaker_trips"] == 1
+    assert st["breaker_fast_fails"] == 1
+    assert st["answer_failures"] == 2
+    assert st["failed_queries"] == 4
+
+    clock.t = 11.0                         # reset window elapsed
+    svc._answer = good_answer              # the fault was repaired
+    probe = svc.try_submit(7, 8)           # half-open admits a probe
+    assert probe is not None
+    svc.drain()
+    assert probe.done and probe.error is None
+    health = svc.health()
+    assert health["breaker"] == "closed"
+    assert health["status"] == "degraded"  # history is not erased
+    assert svc.stats()["breaker_trips"] == 1
+
+
+def test_half_open_probe_failure_reopens():
+    clock = FakeClock()
+
+    def bad(u, v):
+        raise RuntimeError("still down")
+
+    svc = QueryService(bad, batch_size=1, breaker_threshold=1,
+                       breaker_reset_s=10.0, clock=clock,
+                       drop_first=False)
+    svc.try_submit(0, 1)                   # launches, fails, trips
+    assert svc.health()["breaker"] == "open"
+    clock.t = 11.0
+    svc.try_submit(1, 2)                   # half-open probe fails
+    assert svc.health()["breaker"] == "open"
+    assert svc.stats()["breaker_trips"] == 2
+    assert svc.health()["breaker_retry_in_s"] == pytest.approx(10.0)
+
+
+def test_quarantined_shard_typed_error_and_health():
+    g, rank, idx = sharded_index()
+    ra = RoutedAnswer(idx.store)
+    orig = idx.store.query_shard
+    calls = {"n": 0}
+
+    def failing(k, us, vs):
+        if k == 0:
+            calls["n"] += 1
+            raise ValueError("mapped read failed")
+        return orig(k, us, vs)
+
+    idx.store.query_shard = failing
+    try:
+        # every vertex owns its own label, so (u, u) pairs route to
+        # u's hub shard; hub partitioning is rank-based — find a pair
+        # that needs shard 0
+        need0 = np.nonzero(ra._has[0])[0]
+        u = int(need0[0])
+        with pytest.raises(ShardUnavailableError, match="shard 0"):
+            ra(u, u)
+        assert 0 in ra.quarantined
+        assert "mapped read failed" in ra.quarantined[0]
+        with pytest.raises(ShardUnavailableError):
+            ra(u, u)                       # quarantined: not retried
+        assert calls["n"] == 1
+    finally:
+        idx.store.query_shard = orig
+
+    # the pair is refused even after the store heals — quarantine is
+    # sticky until the artifact is reloaded
+    with pytest.raises(ShardUnavailableError):
+        ra(u, u)
+
+    # a query not touching shard 0 is still answered
+    other = np.nonzero(ra._has[1] & ~ra._has[0])[0]
+    if len(other):
+        w = int(other[0])
+        assert np.isfinite(ra(w, w)[0])
+
+    svc = QueryService(ra, batch_size=4, drop_first=False)
+    svc.submit([u], [u])
+    svc.drain()
+    health = svc.health()
+    assert health["status"] == "degraded"
+    assert health["quarantined_shards"] == ra.quarantined
+    assert svc.stats()["answer_failures"] == 1
+
+
+def test_serve_wires_degradation_knobs():
+    g, rank, idx = sharded_index()
+    svc = idx.serve(mode="qlsn", batch_size=32, timeout_ms=250,
+                    breaker_threshold=3, breaker_reset_s=5.0)
+    assert svc.timeout_s == pytest.approx(0.25)
+    assert svc.breaker_threshold == 3
+    assert svc.breaker_reset_s == 5.0
+    assert svc.health()["status"] == "ok"
+
+
+# ------------------------------------------------------------ elastic
+
+def test_lost_roots_collects_uncommitted_tail():
+    queues = np.array([[9, 7, 5, 3],
+                       [8, 6, 4, -1]], dtype=np.int32)
+    np.testing.assert_array_equal(lost_roots(queues, [1], 1), [6, 4])
+    np.testing.assert_array_equal(lost_roots(queues, [0], 4), [])
+    np.testing.assert_array_equal(
+        np.sort(lost_roots(queues, [0, 1], 2)), [3, 4, 5])
+
+
+def test_heartbeat_monitor_declares_silent_nodes():
+    mon = HeartbeatMonitor(3, patience=2)
+    for s in (1, 2, 3):
+        for node in (0, 1, 2):
+            if not (node == 1 and s > 1):  # node 1 dark after step 1
+                mon.report(node, s)
+    assert mon.lost(3) == []               # 3 - 1 = 2, not yet > 2
+    assert mon.lost(4) == [1]
+    mon.report(1, 5)                       # a flapping node recovers
+    assert mon.lost(5) == []
+
+
+@pytest.mark.slow
+def test_ft_dist_node_loss_2dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    driver = os.path.join(os.path.dirname(__file__),
+                          "ft_dist_driver.py")
+    out = subprocess.run([sys.executable, driver], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "FT_DIST_OK" in out.stdout

@@ -14,7 +14,7 @@ from repro.graphs.ranking import degree_ranking
 from repro.index import (BuildPlan, CHLIndex, DenseStore, ShardedStore,
                          SpillStore, build)
 from repro.index.artifact import rank_hash
-from repro.index.store import shard_filename
+from repro.index.store import CorruptArtifactError, shard_filename
 
 
 def small_graph():
@@ -205,8 +205,13 @@ def test_truncated_shard_file_clear_error(tmp_path):
     data = open(shard, "rb").read()
     with open(shard, "wb") as f:
         f.write(data[:len(data) // 3])
-    with pytest.raises(ValueError, match="truncated or corrupt"):
+    # the checksum pass refuses the torn file with the typed error
+    with pytest.raises(CorruptArtifactError, match="sha256 mismatch"):
         CHLIndex.load(path)
+    # with verification off, the truncated-zip parse still names the
+    # shard instead of raising a numpy traceback
+    with pytest.raises(ValueError, match="truncated or corrupt"):
+        CHLIndex.load(path, verify=False)
 
 
 def test_tampered_shard_labels_clear_error(tmp_path):
@@ -219,8 +224,44 @@ def test_tampered_shard_labels_clear_error(tmp_path):
         arrs = {k: z[k] for k in z.files}
     arrs["count"] = np.zeros_like(arrs["count"])
     np.savez(shard, **arrs)
-    with pytest.raises(ValueError, match="manifest recorded"):
+    # caught first by the checksum pass (typed), and still caught by
+    # the label-count cross-check when verification is off
+    with pytest.raises(CorruptArtifactError):
         CHLIndex.load(path)
+    with pytest.raises(ValueError, match="manifest recorded"):
+        CHLIndex.load(path, verify=False)
+
+
+def test_spill_truncated_member_typed_error(tmp_path):
+    # mid-file corruption under the mmap parse path: the lazy zip
+    # walk must surface the typed error naming the shard, never a
+    # zipfile/numpy traceback
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    shard = os.path.join(path, shard_filename(1))
+    data = open(shard, "rb").read()
+    with open(shard, "wb") as f:
+        f.write(data[:len(data) // 2])
+    with pytest.raises(CorruptArtifactError, match="truncated or"):
+        CHLIndex.load(path, store="spill", verify=False)
+    # with verification on, the checksum pass refuses it even earlier
+    with pytest.raises(CorruptArtifactError, match="sha256 mismatch"):
+        CHLIndex.load(path, store="spill")
+
+
+def test_spill_verify_keeps_lazy_mapping(tmp_path):
+    # the integrity pass streams file hashes; it must not force the
+    # spill store to materialize labels
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    spill = CHLIndex.load(path, store="spill")
+    assert spill.store.is_mapped()
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(spill.query(u, v), idx.query(u, v))
 
 
 def test_load_rehomes_between_kinds(tmp_path):
