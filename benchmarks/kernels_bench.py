@@ -63,12 +63,13 @@ def run() -> List[Row]:
                  .block_until_ready(), repeat=3)
     out.append(row(f"kernels/label_query/pallas_{mode}", t, note))
 
-    out += _run_ell_relax(mode, note, rng)
-    _write_json(out, mode)
+    relax_rows, label_bytes = _run_ell_relax(mode, note, rng)
+    out += relax_rows
+    _write_json(out, mode, label_bytes)
     return out
 
 
-def _run_ell_relax(mode: str, note: str, rng) -> List[Row]:
+def _run_ell_relax(mode: str, note: str, rng):
     """Fused ELL relaxation sweep: ref vs Pallas, plus an end-to-end
     PLaNT construction row (the hot path the kernel serves)."""
     from benchmarks.common import bench_graphs
@@ -115,14 +116,18 @@ def _run_ell_relax(mode: str, note: str, rng) -> List[Row]:
     assert sidx.store.kind == "sharded"
     out.append(row("engine/streaming_sharded_build_e2e", t,
                    f"{name} n={g.n} batch=16 shards=2"))
-    out += _run_label_store(idx, g, rng)
-    return out
+    store_rows, label_bytes = _run_label_store(idx, g, rng)
+    out += store_rows
+    return out, label_bytes
 
 
-def _run_label_store(idx, g, rng) -> List[Row]:
-    """Serving trajectory: dense vs sharded vs spill label-store query
-    latency (QLSN probes over the same index), so BENCH_kernels.json
-    tracks the storage backends alongside the kernels."""
+def _run_label_store(idx, g, rng):
+    """Serving trajectory: dense vs sharded vs spill vs compressed
+    label-store query latency (QLSN probes over the same index, all
+    four answers asserted equal — the compressed leg uses the u16
+    exact codec on the integer-weight bench graph), plus the at-rest
+    label_bytes per residency, so BENCH_kernels.json tracks the
+    storage backends alongside the kernels."""
     import os
     import tempfile
 
@@ -132,12 +137,16 @@ def _run_label_store(idx, g, rng) -> List[Row]:
     Q = 512
     u = rng.integers(0, g.n, Q).astype(np.int32)
     v = rng.integers(0, g.n, Q).astype(np.int32)
+    label_bytes = {}
     with tempfile.TemporaryDirectory() as tmp:
         path = idx.save(os.path.join(tmp, "index"))
         stores = [
             ("dense", CHLIndex.load(path, store="dense")),
             ("sharded", CHLIndex.load(path, store="sharded", shards=4)),
             ("spill", CHLIndex.load(path, store="spill")),
+            ("compressed", CHLIndex.load(path, store="compressed",
+                                         codec="u16", quant_exact=True,
+                                         shards=2)),
         ]
         ref = None
         for kind, loaded in stores:
@@ -153,14 +162,18 @@ def _run_label_store(idx, g, rng) -> List[Row]:
             out.append(row(f"serve/store_{kind}", t / Q,
                            f"qlsn Q={Q} "
                            f"shards={loaded.store.num_shards}"))
-    return out
+            label_bytes[kind] = int(loaded.store.label_bytes())
+    label_bytes["compression_ratio"] = round(
+        label_bytes["dense"] / label_bytes["compressed"], 3)
+    return out, label_bytes
 
 
-def _write_json(rows: List[Row], mode: str) -> None:
+def _write_json(rows: List[Row], mode: str, label_bytes=None) -> None:
     BENCH_JSON.write_text(json.dumps({
         "generated_by": "benchmarks/kernels_bench.py",
         "jax": jax_version_str(),
         "pallas_backend": mode,
+        "label_bytes": label_bytes or {},
         "rows": rows,
     }, indent=2) + "\n")
 

@@ -185,7 +185,9 @@ def repair_index(idx, batch: MutationBatch, g, *, ckpt=None,
     if idx.store.kind not in ("dense", "sharded"):
         raise NotImplementedError(
             f"apply() needs a writable dense or sharded store "
-            f"(got {idx.store.kind!r}); reload without store='spill'")
+            f"(got {idx.store.kind!r}); reload with store='dense' or "
+            "'sharded' (spill/compressed residency is read-only — "
+            "re-home, repair, then save back compressed)")
     if g.n != idx.n:
         raise ValueError(f"graph has n={g.n} but the index has "
                          f"n={idx.n}")

@@ -57,6 +57,8 @@ KNOWN_SITES = (
     "artifact.save.shard",    # CHLIndex.save, one shard file on disk
     "artifact.save.commit",   # CHLIndex.save, before the staged swap
     "artifact.load.shard",    # open_npz_arrays, before parsing a shard
+    "quant.encode.shard",     # CompressedStore._encode, per shard
+    "quant.decode.shard",     # CompressedStore.from_encoded_shards
     "repair.merge",           # dynamic.repair, before the store swap
     "spill.query",            # SpillStore.query_shard, before the read
     "serve.answer",           # QueryService._launch, before the kernel

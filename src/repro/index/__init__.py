@@ -12,6 +12,8 @@ The single entry point for the paper's pipeline:
 
 Label residency is pluggable (``repro.index.store``): build with
 ``BuildPlan(store="sharded", shards=K)`` for hub-partitioned labels,
+``store="compressed"`` (+ ``codec=``/``quant_exact=``) for quantized
+labels (``repro.index.quant`` — 2–4x smaller at rest, f32 compute),
 or load with ``store="spill"`` to memory-map an index whose labels
 exceed host RAM.
 
@@ -23,15 +25,19 @@ application API (they warn) — new code goes through ``build``.
 from repro.index.artifact import CHLIndex, rank_hash
 from repro.index.build import build
 from repro.index.plan import ALGOS, DISTRIBUTED_ALGOS, BuildPlan
+from repro.index.quant import (DIST_CODECS, QuantizationError,
+                               QuantPrecisionError, QuantRangeError)
 from repro.index.report import (BuildReport, OverflowEvent,
                                 SuperstepStat, normalize_stats)
 from repro.index.store import (BUILD_STORE_KINDS, LOAD_STORE_KINDS,
-                               DenseStore, LabelStore, ShardedStore,
-                               SpillStore)
+                               CompressedStore, DenseStore, LabelStore,
+                               ShardedStore, SpillStore)
 
 __all__ = [
-    "ALGOS", "BUILD_STORE_KINDS", "DISTRIBUTED_ALGOS", "BuildPlan",
-    "BuildReport", "CHLIndex", "DenseStore", "LOAD_STORE_KINDS",
-    "LabelStore", "OverflowEvent", "ShardedStore", "SpillStore",
-    "SuperstepStat", "build", "normalize_stats", "rank_hash",
+    "ALGOS", "BUILD_STORE_KINDS", "CompressedStore", "DIST_CODECS",
+    "DISTRIBUTED_ALGOS", "BuildPlan", "BuildReport", "CHLIndex",
+    "DenseStore", "LOAD_STORE_KINDS", "LabelStore", "OverflowEvent",
+    "QuantPrecisionError", "QuantRangeError", "QuantizationError",
+    "ShardedStore", "SpillStore", "SuperstepStat", "build",
+    "normalize_stats", "rank_hash",
 ]

@@ -14,26 +14,37 @@ it:
     idx.save("run/index")                # versioned sharded artifact
     idx2 = CHLIndex.load("run/index", store="spill")
 
-On-disk format (version 2):
+On-disk format (version 3):
 
-    <dir>/manifest.json   {"format": "repro.index/chl", "version": 2,
+    <dir>/manifest.json   {"format": "repro.index/chl", "version": 3,
                            "plan": BuildPlan.to_dict(),
                            "report": BuildReport.to_dict(),
                            "rank_hash": sha256(rank bytes),
                            "directed": bool, "n": int,
                            "total_labels": int, "als": float,
-                           "store": {"kind": "dense"|"sharded",
+                           "store": {"kind": "dense"|"sharded"
+                                             |"compressed",
                                      "shards": K,
-                                     "shard_labels": [per-shard totals]}}
+                                     "shard_labels": [per-shard totals],
+                                     # compressed artifacts only:
+                                     "codec": "bf16"|"u16"|"u32",
+                                     "exact": bool,
+                                     "scale": [per-shard f32 steps],
+                                     "dtype": {"dhub": [...], "dcode": s},
+                                     "max_ulp_err": int}}
     <dir>/rank.npy        the vertex hierarchy
     <dir>/shard_<k>.npz   hubs/dist/count of label shard k
-                          (directed: one shard of out_*/in_* pairs)
+                          (directed: one shard of out_*/in_* pairs;
+                          compressed: encoded dhub/dcode/count — the
+                          checksums cover the *encoded* bytes)
 
-Version-1 artifacts (monolithic ``arrays.npz``) still load, into a
-:class:`DenseStore`, bit-identically. ``load(store=...)`` re-homes
-either version: ``"dense"`` merges shards, ``"sharded"`` partitions by
-hub rank, ``"spill"`` memory-maps the shard files so labels larger
-than host RAM stay serveable. Loads are rejected on format/version
+Version-1 artifacts (monolithic ``arrays.npz``) and version-2
+artifacts (no codec fields) still load bit-identically.
+``load(store=...)`` re-homes any version: ``"dense"`` merges shards,
+``"sharded"`` partitions by hub rank, ``"spill"`` memory-maps the
+shard files so labels larger than host RAM stay serveable, and
+``"compressed"`` (with ``codec=`` / ``quant_exact=``) encodes the
+labels through ``repro.index.quant``. Loads are rejected on format/version
 mismatch, rank-hash mismatch, and per-shard label-count mismatch (a
 truncated shard file names itself instead of raising a numpy
 traceback). Writes go through a tmp dir + ``os.replace`` swap: a fresh
@@ -62,14 +73,15 @@ from repro.core.labels import LabelTable
 from repro.index.plan import BuildPlan
 from repro.index.report import BuildReport
 from repro.ft.inject import fault_site, with_retries
-from repro.index.store import (LOAD_STORE_KINDS, CorruptArtifactError,
-                               DenseStore, LabelStore, ShardedStore,
-                               SpillStore, open_shard, shard_filename)
+from repro.index.store import (LOAD_STORE_KINDS, CompressedStore,
+                               CorruptArtifactError, DenseStore,
+                               LabelStore, ShardedStore, SpillStore,
+                               open_shard, shard_filename)
 from repro.serve import backends
 from repro.serve.service import QueryService
 
 FORMAT = "repro.index/chl"
-VERSION = 2
+VERSION = 3
 
 
 def rank_hash(rank: np.ndarray) -> str:
@@ -336,29 +348,45 @@ class CHLIndex:
     # -------------------------------------------------------- memory
 
     def memory_report(self, q: Optional[int] = None) -> dict:
-        """Per-mode cluster label storage (Table 4). ``q`` defaults to
-        the build mesh size. Sharded/spill stores additionally report
-        the per-shard split, without materializing the dense table."""
+        """Per-mode cluster label storage (Table 4) plus the per-store
+        breakdown: resident ``label_bytes``, bytes per label, and the
+        compression ratio vs dense f32 (8 B/label — 1.0 for the
+        uncompressed backends). ``q`` defaults to the build mesh size.
+        Multi-shard stores additionally report the per-shard split and
+        a compressed store its codec/dtype/scale metadata — all
+        without materializing the dense table."""
         q = q or self.report.q
         if self.directed:
             return {"l_out_bytes": qm.label_memory_bytes(self.l_out),
                     "l_in_bytes": qm.label_memory_bytes(self.l_in),
                     "q": q}
         base = self.store.label_bytes()
+        total = self.store.total_labels
         out = qm.mode_memory_totals(self.n, base, q)
         out["store"] = self.store.kind
         out["shards"] = self.store.num_shards
-        if isinstance(self.store, ShardedStore):
+        out["label_bytes"] = base
+        out["dense_f32_bytes"] = total * 8
+        out["bytes_per_label"] = base / max(1, total)
+        out["compression_ratio"] = (total * 8) / max(1, base)
+        if hasattr(self.store, "shard_label_bytes"):
             out["shard_bytes"] = self.store.shard_label_bytes()
+        if isinstance(self.store, CompressedStore):
+            out["codec"] = self.store.codec
+            out["quant_exact"] = self.store.exact
+            out["dtypes"] = self.store.dtypes()
+            out["scale"] = self.store.scales
+            out["max_ulp_err"] = self.store.max_ulp_err
         return out
 
     # ---------------------------------------------------------- disk
 
     def save(self, directory: str) -> str:
         """Atomically write the versioned on-disk artifact (format
-        version 2: per-shard npz segments); returns the directory
-        path. One shard is resident at a time, so saving a spill store
-        never materializes the full table."""
+        version 3: per-shard npz segments, encoded for a compressed
+        store); returns the directory path. One shard is resident at a
+        time, so saving a spill store never materializes the full
+        table."""
         parent = os.path.dirname(os.path.abspath(directory)) or "."
         os.makedirs(parent, exist_ok=True)
         tmp = os.path.join(parent,
@@ -389,10 +417,18 @@ class CHLIndex:
             for k, arrs in self.store.shard_arrays():
                 shard_sha.append(write_shard(k, dict(arrs)))
                 shard_labels.append(int(np.sum(arrs["count"])))
-            kind = "sharded" if self.store.num_shards > 1 else "dense"
+            if isinstance(self.store, CompressedStore):
+                # encoded shards persist as-is; the codec fields let
+                # the loader dequantize (or keep serving encoded)
+                kind = "compressed"
+            else:
+                kind = ("sharded" if self.store.num_shards > 1
+                        else "dense")
             store_info = {"kind": kind,
                           "shards": self.store.num_shards,
                           "shard_labels": shard_labels}
+            if isinstance(self.store, CompressedStore):
+                store_info.update(self.store.manifest_info())
         # per-file integrity: verified on load (CorruptArtifactError
         # on mismatch) — a bit flip can never become a wrong answer
         store_info["shard_sha256"] = shard_sha
@@ -427,6 +463,8 @@ class CHLIndex:
     def load(cls, directory: str, rank: Optional[np.ndarray] = None, *,
              store: Optional[str] = None,
              shards: Optional[int] = None,
+             codec: Optional[str] = None,
+             quant_exact: bool = False,
              verify: bool = True) -> "CHLIndex":
         """Load a saved index. When ``rank`` is given it must hash to
         the manifest's ``rank_hash`` — a label table is meaningless
@@ -436,7 +474,15 @@ class CHLIndex:
         ``"dense"`` merges shards into one table, ``"sharded"``
         (re-)partitions by hub rank (``shards`` picks K when re-homing
         a dense artifact), ``"spill"`` memory-maps the shard segments
-        instead of loading them. Default: the artifact's own layout.
+        instead of loading them, ``"compressed"`` re-homes any saved
+        index into quantized residency (``codec`` picks the distance
+        codec, default bf16 — or the artifact's own when it is already
+        compressed; ``quant_exact`` demands the validated bit-exact
+        encoding and raises a typed ``QuantizationError`` when the
+        labels cannot satisfy it). Default: the artifact's own layout.
+        A compressed artifact cannot be memory-mapped (its query path
+        must dequantize) — ``store="spill"`` on one is refused with
+        guidance.
 
         ``verify`` (default on) re-hashes every shard file against the
         sha256 the manifest recorded at save time and raises
@@ -487,7 +533,8 @@ class CHLIndex:
             l_out, l_in = built
             return cls(l_out=l_out, l_in=l_in, plan=plan, report=report,
                        rank=stored_rank)
-        built = cls._rehome(built, store, stored_rank, shards)
+        built = cls._rehome(built, store, stored_rank, shards,
+                            codec=codec, quant_exact=quant_exact)
         return cls(store=built, plan=plan, report=report,
                    rank=stored_rank)
 
@@ -572,6 +619,15 @@ class CHLIndex:
                                   jnp.asarray(s[f"{pfx}count"]))
 
             return stored_rank, (tbl("out_"), tbl("in_"))
+        if info.get("kind") == "compressed":
+            if spill:
+                raise ValueError(
+                    "a compressed artifact cannot be memory-mapped "
+                    "(queries must dequantize); load with "
+                    "store='compressed' (encoded residency) or "
+                    "'dense'/'sharded' (decoded)")
+            return stored_rank, CompressedStore.from_encoded_shards(
+                shards, info, stored_rank)
         if spill:
             return stored_rank, SpillStore(shards)
         if info.get("kind") == "sharded" or K > 1:
@@ -580,7 +636,9 @@ class CHLIndex:
 
     @staticmethod
     def _rehome(store: LabelStore, kind: Optional[str],
-                rank: np.ndarray, shards: Optional[int]) -> LabelStore:
+                rank: np.ndarray, shards: Optional[int], *,
+                codec: Optional[str] = None,
+                quant_exact: bool = False) -> LabelStore:
         """Convert a loaded store to the requested residency."""
         if kind is None or kind == "spill":
             return store          # spill was honored at open time
@@ -588,6 +646,15 @@ class CHLIndex:
             if isinstance(store, DenseStore):
                 return store
             return DenseStore(store.to_table())
+        if kind == "compressed":
+            if isinstance(store, CompressedStore) \
+                    and codec in (None, store.codec) \
+                    and shards in (None, store.num_shards) \
+                    and (not quant_exact or store.exact):
+                return store      # already encoded as requested
+            return CompressedStore.from_store(
+                store, rank, codec=codec or "bf16", exact=quant_exact,
+                shards=shards)
         # kind == "sharded": repartition unless the shard count already
         # matches (``shards`` only forces K when it differs)
         if isinstance(store, ShardedStore) and shards in (

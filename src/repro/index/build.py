@@ -35,7 +35,7 @@ from repro.engine import STREAMING_ALGOS, EngineResult, run_build
 from repro.index.artifact import CHLIndex
 from repro.index.plan import BuildPlan
 from repro.index.report import BuildReport, OverflowEvent
-from repro.index.store import DenseStore, ShardedStore
+from repro.index.store import CompressedStore, DenseStore, ShardedStore
 
 
 def _resolve_shards(plan: BuildPlan, extras: Optional[dict] = None
@@ -87,7 +87,10 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
     cap = plan.cap or lbl.default_cap(n)
     cap = min(cap, n)
     streaming_shards = None
-    if plan.store == "sharded" and plan.algo in STREAMING_ALGOS:
+    if plan.store in ("sharded", "compressed") \
+            and plan.algo in STREAMING_ALGOS:
+        # compressed builds stream through the same hub-partitioned
+        # sink; the shards are encoded after construction
         streaming_shards = _resolve_shards(plan)
     notes = []
     if plan.algo != "pll-ref":           # the host oracle runs no sweeps
@@ -154,6 +157,10 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
     partitioned = res.extras.get("partitioned")
     if res.sink.kind == "sharded":       # streamed: shards are the build
         store = ShardedStore.from_accumulator(res.sink.acc)
+        if plan.store == "compressed":
+            store = CompressedStore.from_store(
+                store, rank, codec=plan.codec or "bf16",
+                exact=plan.quant_exact)
     else:
         if res.sink.kind == "mesh":
             from repro.core.dgll import merge_partitions
@@ -163,8 +170,20 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
         if plan.store == "sharded":
             store = ShardedStore.from_table(
                 table, rank, _resolve_shards(plan, res.extras))
+        elif plan.store == "compressed":
+            store = CompressedStore.from_table(
+                table, rank, codec=plan.codec or "bf16",
+                exact=plan.quant_exact,
+                shards=_resolve_shards(plan, res.extras))
         else:
             store = DenseStore(table)
+    if isinstance(store, CompressedStore):
+        if store.exact:
+            notes.append(f"quant: codec={store.codec} exact "
+                         "(bit-identical round trip validated)")
+        else:
+            notes.append(f"quant: codec={store.codec} lossy, max "
+                         f"label ulp error {store.max_ulp_err}")
     total = store.total_labels
     report = BuildReport(total_labels=total, als=total / max(1, n),
                          **report_kw)

@@ -29,9 +29,14 @@ class BuildPlan:
     ``psi_th=None`` → auto Ψ-threshold (γ·q) for the hybrid.
     ``mesh_devices=None`` → all local devices for distributed algos.
     ``store`` picks the label residency of the built index ("dense" =
-    one table, "sharded" = hub-partitioned ``LabelStore``; "spill" is
-    a load/serve-time choice, not a build product); ``shards=None`` →
-    the build mesh size for distributed algos, else all local devices.
+    one table, "sharded" = hub-partitioned ``LabelStore``,
+    "compressed" = quantized labels via ``repro.index.quant``; "spill"
+    is a load/serve-time choice, not a build product); ``shards=None``
+    → the build mesh size for distributed algos, else all local
+    devices. ``codec`` (store="compressed" only) picks the distance
+    codec ("bf16" | "u16" | "u32"; default bf16) and ``quant_exact``
+    demands the validated bit-exact encoding — the build *fails* with
+    a typed ``QuantizationError`` rather than quantize lossily.
     """
 
     algo: str = "hybrid"
@@ -49,6 +54,8 @@ class BuildPlan:
     cap_growth: float = 2.0
     store: str = "dense"              # label residency (repro.index.store)
     shards: Optional[int] = None      # hub partitions for store="sharded"
+    codec: Optional[str] = None       # distance codec for store="compressed"
+    quant_exact: bool = False         # validated exactness mode (quant)
 
     def __post_init__(self):
         if self.algo not in ALGOS:
@@ -81,6 +88,14 @@ class BuildPlan:
                 "CHLIndex.load)")
         if self.shards is not None and self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
+        from repro.index.quant import DIST_CODECS
+        if self.codec is not None and self.codec not in DIST_CODECS:
+            raise ValueError(
+                f"codec {self.codec!r} not one of {DIST_CODECS}")
+        if self.store != "compressed" and (self.codec is not None
+                                           or self.quant_exact):
+            raise ValueError(
+                "codec / quant_exact apply only to store='compressed'")
 
     @property
     def distributed(self) -> bool:

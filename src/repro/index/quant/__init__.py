@@ -1,0 +1,33 @@
+"""repro.index.quant — label compression codecs (storage dtype ≠
+compute dtype).
+
+The quantization subsystem behind
+:class:`repro.index.store.compressed.CompressedStore`: distance codecs
+(``codecs`` — bf16 truncation or fixed-point u16/u32 with a validated
+exactness mode) and hub-ID delta coding over the canonical rank order
+(``deltas``). Everything here transforms *storage*; all query
+arithmetic stays f32 after a vectorized dequant, so a compressed index
+in exact mode answers bit-identically to a dense one.
+
+**Standing rule** (extends the label-store rule): dtype conversion of
+label arrays happens only here and in ``repro.index.store`` — codec
+logic must never leak into serve/engine code.
+"""
+
+from repro.index.quant.codecs import (DIST_CODECS, QuantizationError,
+                                      QuantPrecisionError,
+                                      QuantRangeError, decode_dist_jnp,
+                                      decode_dist_np, encode_dist,
+                                      max_ulp_error)
+from repro.index.quant.deltas import (delta_decode_rows_jnp,
+                                      delta_decode_rows_np,
+                                      delta_encode_rows,
+                                      order_permutation)
+
+__all__ = [
+    "DIST_CODECS", "QuantizationError", "QuantPrecisionError",
+    "QuantRangeError", "decode_dist_jnp", "decode_dist_np",
+    "delta_decode_rows_jnp", "delta_decode_rows_np",
+    "delta_encode_rows", "encode_dist", "max_ulp_error",
+    "order_permutation",
+]

@@ -1,0 +1,162 @@
+"""Distance codecs — the storage half of the storage/compute dtype
+split.
+
+A codec maps the f32 label-distance plane to a narrower storage dtype;
+every consumer (the query intersection, cross-shard mins, ``to_table``)
+dequantizes back to f32 *before* any arithmetic, so compute semantics
+never change — only residency does. Three codecs:
+
+- ``"bf16"`` — truncate f32 to bfloat16 via the round-to-nearest-even
+  bit trick, stored as u16 (no ml_dtypes dependency in the on-disk
+  format; +inf survives exactly). 2 bytes, ~3 significand digits.
+- ``"u16"`` / ``"u32"`` — fixed-point against a per-shard scale, with
+  the dtype's max value reserved as the +inf/pad sentinel. In **exact
+  mode** the scale is pinned to 1.0 and the encoder *proves* the
+  round trip is bit-identical (integer-weight graphs: every label
+  distance is an integral f32 ≤ the diameter bound); it refuses with a
+  typed error otherwise — quantization may never silently change an
+  answer. Lossy mode picks scale = max/(max_code-1) and reports the
+  measured max ulp error instead.
+
+Encoding runs in host numpy (the save/ build path); decoding has both
+a numpy form (``to_table``, host analysis) and a jnp form traced
+inside the query jit (``repro.index.store.compressed``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["DIST_CODECS", "QuantizationError", "QuantPrecisionError",
+           "QuantRangeError", "decode_dist_jnp", "decode_dist_np",
+           "encode_dist", "max_ulp_error"]
+
+#: distance codecs a BuildPlan / CHLIndex.load may request
+DIST_CODECS = ("bf16", "u16", "u32")
+
+_FIXED = {"u16": np.uint16, "u32": np.uint32}
+
+
+class QuantizationError(ValueError):
+    """A distance codec cannot (or refuses to) represent the labels it
+    was asked to encode. Subclasses ``ValueError`` like the other
+    artifact-misuse errors."""
+
+
+class QuantRangeError(QuantizationError):
+    """Exact mode: the max label distance (a diameter bound) exceeds
+    the codec's representable range — encoding would clip, so it is
+    refused at encode time instead of serving wrong distances."""
+
+
+class QuantPrecisionError(QuantizationError):
+    """Exact mode: the bitwise round-trip check failed (non-integral
+    weights under a fixed-point codec, or mantissas wider than the
+    storage dtype) — encoding would round, so it is refused."""
+
+
+def _valid_mask(dist: np.ndarray) -> np.ndarray:
+    return np.isfinite(dist)
+
+
+def max_ulp_error(orig: np.ndarray, decoded: np.ndarray) -> int:
+    """Max f32 ulp distance between original and decoded values over
+    the finite entries (both arrays share the +inf/pad layout)."""
+    ok = np.isfinite(orig)
+    if not ok.any():
+        return 0
+    a = np.ascontiguousarray(orig[ok], np.float32).view(np.int32)
+    b = np.ascontiguousarray(decoded[ok], np.float32).view(np.int32)
+    # label distances are non-negative, so the int32 views are ordered
+    # like the floats and their difference counts representable steps
+    return int(np.abs(a.astype(np.int64) - b.astype(np.int64)).max())
+
+
+def encode_dist(dist: np.ndarray, codec: str, *, exact: bool = False
+                ) -> Tuple[np.ndarray, float, int]:
+    """Encode f32 distances (+inf = pad/unreachable) under ``codec``.
+
+    Returns ``(codes, scale, max_ulp)`` — ``scale`` is the per-shard
+    fixed-point step (1.0 for bf16/exact), ``max_ulp`` the measured
+    max f32 ulp error of the round trip (0 in exact mode, by proof).
+    Exact mode raises :class:`QuantRangeError` /
+    :class:`QuantPrecisionError` instead of degrading.
+    """
+    if codec not in DIST_CODECS:
+        raise QuantizationError(
+            f"unknown distance codec {codec!r}; one of {DIST_CODECS}")
+    d = np.ascontiguousarray(dist, np.float32)
+    if codec == "bf16":
+        bits = d.view(np.uint32)
+        # round-to-nearest-even truncation to the top 16 bits; +inf
+        # (0x7f80_0000) maps to 0x7f80 and decodes back to +inf
+        codes = ((bits + np.uint32(0x7FFF)
+                  + ((bits >> np.uint32(16)) & np.uint32(1)))
+                 >> np.uint32(16)).astype(np.uint16)
+        dec = decode_dist_np(codes, "bf16", 1.0)
+        ulp = max_ulp_error(d, dec)
+        if exact and ulp:
+            raise QuantPrecisionError(
+                "exact mode: bf16 cannot represent these label "
+                f"distances bit-exactly (max ulp error {ulp}); use "
+                "codec='u16'/'u32' on an integer-weight graph, or "
+                "lossy mode")
+        return codes, 1.0, ulp
+    dt = _FIXED[codec]
+    info = np.iinfo(dt)
+    sentinel = np.uint64(info.max)
+    max_code = info.max - 1                  # top value = +inf sentinel
+    ok = _valid_mask(d)
+    maxf = float(d[ok].max()) if ok.any() else 0.0
+    if exact:
+        if maxf > max_code:
+            raise QuantRangeError(
+                f"exact mode: max label distance {maxf:.0f} (a graph "
+                f"diameter bound) exceeds the {codec} codec's "
+                f"representable range {max_code} at scale=1 — refusing "
+                "to clip; use codec='u32' or lossy mode")
+        scale = 1.0
+        codes = np.where(ok, np.round(np.where(ok, d, 0.0))
+                         .astype(np.uint64), sentinel).astype(dt)
+        dec = decode_dist_np(codes, codec, scale)
+        if not np.array_equal(np.where(ok, dec, 0.0),
+                              np.where(ok, d, 0.0)):
+            raise QuantPrecisionError(
+                f"exact mode: {codec} round trip is not bit-identical "
+                "— label distances are not integral f32 (non-integer "
+                "edge weights?); use lossy mode or bf16")
+        return codes, scale, 0
+    scale = float(np.float32(maxf / max_code)) if maxf > 0 else 1.0
+    q = np.round(np.where(ok, d, 0.0) / np.float32(scale))
+    codes = np.where(ok, np.clip(q, 0, max_code).astype(np.uint64),
+                     sentinel).astype(dt)
+    ulp = max_ulp_error(d, decode_dist_np(codes, codec, scale))
+    return codes, scale, ulp
+
+
+def decode_dist_np(codes: np.ndarray, codec: str, scale: float
+                   ) -> np.ndarray:
+    """Host-numpy dequant back to f32 (+inf for the sentinel)."""
+    if codec == "bf16":
+        return (np.ascontiguousarray(codes, np.uint16)
+                .astype(np.uint32) << np.uint32(16)).view(np.float32)
+    info = np.iinfo(_FIXED[codec])
+    return np.where(codes == info.max, np.float32(np.inf),
+                    codes.astype(np.float32) * np.float32(scale))
+
+
+def decode_dist_jnp(codes, codec: str, scale):
+    """Traced dequant — the compute side of the dtype split. Runs
+    inside the query jit so storage stays narrow on device and every
+    min-reduction / intersection happens in f32."""
+    import jax
+    import jax.numpy as jnp
+    if codec == "bf16":
+        return jax.lax.bitcast_convert_type(
+            codes.astype(jnp.uint32) << 16, jnp.float32)
+    dt = _FIXED[codec]
+    return jnp.where(codes == dt(np.iinfo(dt).max), jnp.inf,
+                     codes.astype(jnp.float32)
+                     * jnp.asarray(scale, jnp.float32))

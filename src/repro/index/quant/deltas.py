@@ -1,0 +1,103 @@
+"""Hub-ID delta coding over the canonical rank order.
+
+CHL labels are hub sets drawn from a global vertex hierarchy; inside
+one vertex's row, replacing each hub id by its *order index* (position
+in the rank-descending root order — the same order construction
+processes trees in) and sorting the row by it yields a strictly
+increasing sequence. First-order deltas of that sequence are small —
+shard k owns every K-th order index, so consecutive deltas hover
+around K — and fit u8/u16 where raw ids need i32. Reconstruction is a
+cumsum plus one gather through the order permutation, cheap enough to
+trace inside the query jit.
+
+Pad slots carry delta 0, so the cumsum stays *constant* past the valid
+prefix (never out of range) and the decoded row is masked by ``count``
+exactly like a dense row is masked by ``hubs >= 0``. Encoding is
+host-numpy (the build/save path); :func:`delta_decode_rows_jnp` is the
+traced form.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["delta_decode_rows_np", "delta_decode_rows_jnp",
+           "delta_encode_rows", "order_permutation"]
+
+
+def order_permutation(rank: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """``(order, oi)`` for a hierarchy: ``order[p]`` is the vertex at
+    rank-descending position ``p`` (stable, ties by vertex id — the
+    engine's root order) and ``oi[v]`` its inverse."""
+    from repro.engine.scheduler import rank_order
+    order = rank_order(rank)
+    oi = np.empty(len(order), np.int64)
+    oi[order] = np.arange(len(order))
+    return order.astype(np.int32), oi
+
+
+def _narrowest(max_delta: int) -> np.dtype:
+    for dt in (np.uint8, np.uint16, np.uint32):
+        if max_delta <= np.iinfo(dt).max:
+            return np.dtype(dt)
+    raise ValueError(f"order-index delta {max_delta} exceeds u32")
+
+
+def delta_encode_rows(hubs: np.ndarray, dist: np.ndarray,
+                      count: np.ndarray, oi: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Canonicalize one shard's rows (sort the valid prefix by hub
+    order-index; distances ride along under the same permutation) and
+    delta-encode the order indices in the narrowest unsigned dtype.
+
+    Returns ``(deltas uintX [n, Ls], dist_sorted f32 [n, Ls],
+    count i32 [n])``. Sorting is semantics-preserving: the f32 min in
+    the query intersection is order-insensitive, so a canonically
+    sorted row answers bit-identically.
+    """
+    hubs = np.asarray(hubs)
+    dist = np.asarray(dist, np.float32)
+    count = np.asarray(count, np.int32)
+    n, Ls = hubs.shape
+    valid = (np.arange(Ls)[None, :] < count[:, None]) & (hubs >= 0)
+    key = np.where(valid, oi[np.clip(hubs, 0, None)],
+                   np.iinfo(np.int64).max)
+    perm = np.argsort(key, axis=1, kind="stable")
+    key_s = np.take_along_axis(key, perm, axis=1)
+    dist_s = np.take_along_axis(dist, perm, axis=1)
+    valid_s = np.arange(Ls)[None, :] < count[:, None]
+    oi_s = np.where(valid_s, key_s, 0)
+    # carry the last valid order index into the pad region so the pad
+    # deltas are exactly 0 (cumsum stays constant past the prefix)
+    oi_pad = np.maximum.accumulate(oi_s, axis=1)
+    deltas = np.diff(oi_pad, axis=1, prepend=0)
+    dist_s = np.where(valid_s, dist_s, np.float32(np.inf))
+    max_d = int(deltas.max()) if deltas.size else 0
+    return deltas.astype(_narrowest(max_d)), dist_s, count
+
+
+def delta_decode_rows_np(deltas: np.ndarray, count: np.ndarray,
+                         order: np.ndarray) -> np.ndarray:
+    """Host reconstruction of hub ids from deltas (-1 pads)."""
+    deltas = np.asarray(deltas)
+    count = np.asarray(count, np.int32)
+    n = len(order)
+    Ls = deltas.shape[1] if deltas.ndim == 2 else 0
+    oi = np.cumsum(deltas.astype(np.int64), axis=1)
+    valid = np.arange(Ls)[None, :] < count[:, None]
+    return np.where(valid, order[np.clip(oi, 0, n - 1)],
+                    -1).astype(np.int32)
+
+
+def delta_decode_rows_jnp(deltas, count, order):
+    """Traced reconstruction — cumsum + one gather through the order
+    permutation, inside the query jit (gathered [Q, Ls] rows or full
+    [n, Ls] shards alike)."""
+    import jax.numpy as jnp
+    Ls = deltas.shape[-1]
+    n = order.shape[0]
+    oi = jnp.cumsum(deltas.astype(jnp.int32), axis=-1)
+    valid = jnp.arange(Ls)[None, :] < count[:, None]
+    return jnp.where(valid, order[jnp.clip(oi, 0, n - 1)], -1)

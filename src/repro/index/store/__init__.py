@@ -10,13 +10,14 @@ from repro.index.store.base import (BUILD_STORE_KINDS,
                                     LOAD_STORE_KINDS,
                                     CorruptArtifactError, LabelStore,
                                     shard_filename)
+from repro.index.store.compressed import CompressedStore
 from repro.index.store.dense import DenseStore
 from repro.index.store.sharded import ShardedStore
 from repro.index.store.spill import (SpillStore, open_npz_arrays,
                                      open_shard)
 
 __all__ = [
-    "BUILD_STORE_KINDS", "CorruptArtifactError", "LOAD_STORE_KINDS",
-    "DenseStore", "LabelStore", "ShardedStore", "SpillStore",
-    "open_npz_arrays", "open_shard", "shard_filename",
+    "BUILD_STORE_KINDS", "CompressedStore", "CorruptArtifactError",
+    "LOAD_STORE_KINDS", "DenseStore", "LabelStore", "ShardedStore",
+    "SpillStore", "open_npz_arrays", "open_shard", "shard_filename",
 ]

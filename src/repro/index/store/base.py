@@ -15,12 +15,17 @@ the store decides residency —
   mins plus one cross-shard reduction;
 - :class:`~repro.index.store.spill.SpillStore` — per-shard
   memory-mapped npz segments, so an index whose labels exceed host RAM
-  still loads and serves (latency traded for capacity).
+  still loads and serves (latency traded for capacity);
+- :class:`~repro.index.store.compressed.CompressedStore` — quantized
+  residency (``repro.index.quant``): hub-ID deltas + distance codecs
+  keep labels 2–4x smaller at rest, dequantized to f32 inside the
+  query jit (storage dtype ≠ compute dtype).
 
 **Standing rule:** everything outside ``repro/index/store/`` talks to
 the protocol below (``query`` / ``to_table`` / ``shard_arrays`` /
-``label_bytes``), never to a backend's internal arrays. New backends
-implement this protocol.
+``label_bytes``), never to a backend's internal arrays — and dtype
+conversion of label arrays happens only in ``repro/index/quant/`` and
+``repro/index/store/``. New backends implement this protocol.
 
 Every backend must be *query-exact*: partitioning labels by hub keeps
 PPSD answers bit-identical, because all labels of a given hub live in
@@ -49,17 +54,17 @@ class CorruptArtifactError(ValueError):
 #: store kinds a :class:`repro.index.plan.BuildPlan` may request.
 #: ("spill" is a *load/serve-time* residency choice — there is nothing
 #: to memory-map until an artifact exists on disk.)
-BUILD_STORE_KINDS = ("dense", "sharded")
+BUILD_STORE_KINDS = ("dense", "sharded", "compressed")
 
 #: store kinds `CHLIndex.load(..., store=...)` may request.
-LOAD_STORE_KINDS = ("dense", "sharded", "spill")
+LOAD_STORE_KINDS = ("dense", "sharded", "spill", "compressed")
 
 
 @runtime_checkable
 class LabelStore(Protocol):
     """What ``CHLIndex`` and ``repro.serve`` require of a label store."""
 
-    #: backend name ("dense" | "sharded" | "spill")
+    #: backend name ("dense" | "sharded" | "spill" | "compressed")
     kind: str
 
     @property
@@ -102,8 +107,14 @@ class LabelStore(Protocol):
         ...
 
     def shard_arrays(self) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
-        """Yield ``(k, {"hubs", "dist", "count"})`` per shard, one shard
-        resident at a time — the save path, bounded-memory by contract."""
+        """Yield ``(k, arrays)`` per shard, one shard resident at a
+        time — the save path, bounded-memory by contract. Dense/
+        sharded/spill stores yield ``{"hubs", "dist", "count"}``; a
+        compressed store yields its *encoded* arrays (``{"dhub",
+        "dcode", "count"}`` — what the artifact persists and
+        checksums). Consumers that need f32 labels go through
+        ``to_table`` (or ``decoded_shard_arrays`` on a compressed
+        store), never by reinterpreting these dtypes themselves."""
         ...
 
     def label_bytes(self) -> int:

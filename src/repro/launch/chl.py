@@ -74,13 +74,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--compact", type=int, default=0)
     ap.add_argument("--cap", type=int, default=None)
     ap.add_argument("--store", default="dense",
-                    choices=("dense", "sharded"),
+                    choices=("dense", "sharded", "compressed"),
                     help="label residency of the built index "
-                         "(repro.index.store); sharded PLaNT builds "
-                         "stream emissions straight into shards")
+                         "(repro.index.store); sharded/compressed "
+                         "PLaNT builds stream emissions straight into "
+                         "shards")
     ap.add_argument("--shards", type=int, default=None,
-                    help="hub partitions for --store sharded "
-                         "(default: mesh size / local devices)")
+                    help="hub partitions for --store sharded/"
+                         "compressed (default: mesh size / local "
+                         "devices)")
+    ap.add_argument("--codec", default=None,
+                    choices=("bf16", "u16", "u32"),
+                    help="distance codec for --store compressed "
+                         "(default bf16)")
+    ap.add_argument("--quant-exact", action="store_true",
+                    dest="quant_exact",
+                    help="demand the validated bit-exact encoding "
+                         "(--store compressed; fails rather than "
+                         "quantize lossily)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint after every committed superstep "
                          "(every algorithm)")
@@ -111,6 +122,19 @@ def main(argv=None) -> dict:
     idx = build(g, rank, plan, mesh=mesh, ckpt=mgr,
                 resume=args.resume, verbose=True)
     print(f"CHL done: {idx.report.summary()}")
+    if not idx.directed:
+        mr = idx.memory_report()
+        line = (f"memory: store={mr['store']} shards={mr['shards']} "
+                f"label_bytes={mr['label_bytes']} "
+                f"({mr['bytes_per_label']:.2f} B/label, "
+                f"{mr['compression_ratio']:.2f}x vs dense f32)")
+        if "codec" in mr:
+            line += (f" codec={mr['codec']}"
+                     f"{' exact' if mr['quant_exact'] else ' lossy'}"
+                     f" max_ulp_err={mr['max_ulp_err']}")
+        print(line)
+        if "shard_bytes" in mr:
+            print(f"memory: shard_bytes={mr['shard_bytes']}")
 
     out_dir = args.save_index or (
         os.path.join(args.ckpt_dir, "index") if args.ckpt_dir else None)

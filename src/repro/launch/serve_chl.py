@@ -11,7 +11,9 @@ modes — construction and serving can live in different processes,
 which is the production shape. ``--store`` overrides the label
 residency: ``sharded`` re-homes the labels into hub partitions
 (``--shards`` picks K), ``spill`` memory-maps the shard segments so an
-index larger than host RAM still serves.
+index larger than host RAM still serves, ``compressed`` quantizes the
+labels in place (``--codec`` picks the distance codec) so 2–4x more
+labels stay device-resident.
 
 Two drive shapes:
 
@@ -40,11 +42,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--mode", default="qlsn",
                     choices=("qlsn", "qfdl", "qdol"))
     ap.add_argument("--store", default=None,
-                    choices=("dense", "sharded", "spill"),
+                    choices=("dense", "sharded", "spill", "compressed"),
                     help="label residency override "
                          "(default: the artifact's own layout)")
     ap.add_argument("--shards", type=int, default=None,
-                    help="hub partitions when re-homing to sharded")
+                    help="hub partitions when re-homing to "
+                         "sharded/compressed")
+    ap.add_argument("--codec", default=None,
+                    choices=("bf16", "u16", "u32"),
+                    help="distance codec when re-homing to compressed "
+                         "(default: bf16, or the artifact's own)")
+    ap.add_argument("--quant-exact", action="store_true",
+                    dest="quant_exact",
+                    help="demand the validated bit-exact encoding when "
+                         "re-homing to compressed")
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--batch-size", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
@@ -66,7 +77,8 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
 
     idx = CHLIndex.load(args.index, store=args.store,
-                        shards=args.shards)
+                        shards=args.shards, codec=args.codec,
+                        quant_exact=args.quant_exact)
     print(f"loaded index: n={idx.n} labels={idx.total_labels} "
           f"ALS={idx.als:.1f} built-by={idx.plan.algo} "
           f"store={idx.store.kind}/{idx.store.num_shards}")

@@ -30,12 +30,18 @@ Per store backend:
 - **SpillStore**: QLSN from the memory-mapped shard segments (host
   numpy — capacity over latency). The distributed modes need labels
   in device memory; asking for them raises with guidance.
+- **CompressedStore**: QLSN straight from the encoded shards — the
+  store's jitted gather→dequant→intersect keeps labels narrow at rest
+  and all arithmetic f32 (bit-identical to dense in the codec's exact
+  mode). *qfdl*/*qdol* dequantize into a dense table once (the
+  distributed layouts want f32 rows); compression is a residency
+  choice, never a compute-dtype choice.
 
-**Per-shard routing** (``routed=``): for multi-shard sharded/spill
-QLSN, the answer fn from ``repro.serve.routing`` touches only the
-shards in which *both* endpoints hold labels, instead of reducing
-over all K — bit-identical (skipped shards contribute only +inf) and
-the serving tier's default. ``routed=None`` picks automatically;
+**Per-shard routing** (``routed=``): for multi-shard sharded/spill/
+compressed QLSN, the answer fn from ``repro.serve.routing`` touches
+only the shards in which *both* endpoints hold labels, instead of
+reducing over all K — bit-identical (skipped shards contribute only
++inf) and the serving tier's default. ``routed=None`` picks automatically;
 ``True``/``False`` force it (``False`` = the full-reduction paths
 above, which parity tests compare against).
 """
@@ -51,8 +57,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import query as qm
 from repro.core.labels import LabelTable
-from repro.index.store import (DenseStore, LabelStore, ShardedStore,
-                               SpillStore)
+from repro.index.store import (CompressedStore, DenseStore, LabelStore,
+                               ShardedStore, SpillStore)
 from repro.parallel.sharding import hub_partition_arrays
 
 MODES = ("qlsn", "qfdl", "qdol")
@@ -140,7 +146,8 @@ def make_answer_fn(store: Union[LabelStore, LabelTable],
     if mode not in MODES:
         raise ValueError(f"unknown query mode {mode!r}; one of {MODES}")
     store = _as_store(store)
-    routable = (isinstance(store, (ShardedStore, SpillStore))
+    routable = (isinstance(store, (ShardedStore, SpillStore,
+                                   CompressedStore))
                 and store.num_shards > 1 and mode == "qlsn")
     if routed is None:
         routed = routable
@@ -158,6 +165,14 @@ def make_answer_fn(store: Union[LabelStore, LabelTable],
                 "'sharded' for the distributed modes")
         return lambda u, v: jnp.asarray(
             store.query(np.asarray(u), np.asarray(v))[0])
+    if isinstance(store, CompressedStore):
+        if mode == "qlsn":
+            # serve from the encoded shards: decode happens inside the
+            # store's query jit, per touched row — never a dense copy
+            return lambda u, v: store.query_device(u, v)[0]
+        # distributed layouts want dense f32 rows — dequantize once
+        return _dense_answer_fn(store.to_table(), mode, mesh=mesh,
+                                partitioned=partitioned, rank=rank)
     if isinstance(store, ShardedStore):
         return _sharded_answer_fn(store, mode, mesh=mesh,
                                   partitioned=partitioned, rank=rank)

@@ -12,10 +12,11 @@ Exactness: dropped (query, shard) pairs contribute only +inf to the
 cross-shard f32 min, so the routed answer is bit-identical to the
 full K-shard reduction (pinned by ``tests/test_serve.py``).
 
-Device-backed stores (``ShardedStore``) pad each shard's query subset
-to a power-of-two bucket so jit sees at most ``log2(B)`` shapes per
-shard; host-numpy stores (``SpillStore``) run exact subsets — there
-routing is also an I/O win, since only the owning shards' mapped
+Device-backed stores (``ShardedStore``, ``CompressedStore`` — the
+latter dequantizes inside its own query jit) pad each shard's query
+subset to a power-of-two bucket so jit sees at most ``log2(B)`` shapes
+per shard; host-numpy stores (``SpillStore``) run exact subsets —
+there routing is also an I/O win, since only the owning shards' mapped
 segments are paged in at all.
 
 Degradation (``repro.ft``): a shard whose read fails (truncated

@@ -1,0 +1,419 @@
+"""repro.index.quant + CompressedStore: codec round trips, the
+validated exactness mode, delta coding, serve parity (bit-identical in
+exact mode, bounded in lossy mode), the v3 on-disk format (v2 still
+loads), re-homing, fault sites, and the codec-containment hygiene
+rule."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.graphs import scale_free
+from repro.graphs.ranking import degree_ranking
+from repro.index import (BuildPlan, CHLIndex, CompressedStore,
+                         DenseStore, QuantPrecisionError,
+                         QuantRangeError, QuantizationError,
+                         ShardedStore, build)
+from repro.index.quant import (decode_dist_np, delta_decode_rows_np,
+                               delta_encode_rows, encode_dist,
+                               max_ulp_error, order_permutation)
+from repro.index.store import CorruptArtifactError, shard_filename
+
+
+def small_graph():
+    g = scale_free(48, attach=2, seed=3)
+    return g, degree_ranking(g)
+
+
+def query_batch(n, count=96, seed=5):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, n, count).astype(np.int32),
+            rng.integers(0, n, count).astype(np.int32))
+
+
+def build_pair(codec="u16", exact=True, shards=2):
+    g, rank = small_graph()
+    dense = build(g, rank, BuildPlan(algo="plant", batch=8))
+    comp = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                    store="compressed", codec=codec,
+                                    quant_exact=exact, shards=shards))
+    return g, rank, dense, comp
+
+
+# ------------------------------------------------------------- codecs
+
+def test_bf16_codec_round_trip_and_inf():
+    d = np.array([[0.0, 1.0, 2.5, 100.0, np.inf]], np.float32)
+    codes, scale, ulp = encode_dist(d, "bf16")
+    assert codes.dtype == np.uint16 and scale == 1.0 and ulp == 0
+    dec = decode_dist_np(codes, "bf16", scale)
+    np.testing.assert_array_equal(dec, d)       # all bf16-representable
+    # a value needing >8 significand bits rounds (to nearest even)
+    wide = np.array([[1.0009765625]], np.float32)     # 1 + 2^-10
+    codes, _, ulp = encode_dist(wide, "bf16")
+    assert ulp > 0
+    with pytest.raises(QuantPrecisionError):
+        encode_dist(wide, "bf16", exact=True)
+
+
+@pytest.mark.parametrize("codec", ["u16", "u32"])
+def test_fixed_codec_exact_round_trip(codec):
+    d = np.array([[0.0, 3.0, 17.0, 65000.0, np.inf]], np.float32)
+    codes, scale, ulp = encode_dist(d, codec, exact=True)
+    assert scale == 1.0 and ulp == 0
+    np.testing.assert_array_equal(decode_dist_np(codes, codec, scale), d)
+
+
+def test_fixed_codec_exact_refusals():
+    over = np.array([[70000.0]], np.float32)      # > u16 max-1
+    with pytest.raises(QuantRangeError, match="diameter"):
+        encode_dist(over, "u16", exact=True)
+    # u32 still has headroom for the same value
+    codes, scale, _ = encode_dist(over, "u32", exact=True)
+    np.testing.assert_array_equal(
+        decode_dist_np(codes, "u32", scale), over)
+    frac = np.array([[1.5]], np.float32)
+    with pytest.raises(QuantPrecisionError, match="integral"):
+        encode_dist(frac, "u16", exact=True)
+    with pytest.raises(QuantizationError):
+        encode_dist(frac, "nope")
+
+
+def test_fixed_codec_lossy_scale_and_ulp():
+    rng = np.random.default_rng(0)
+    d = (rng.random((8, 16)).astype(np.float32) * 1e6)
+    d[0, 0] = np.inf
+    codes, scale, ulp = encode_dist(d, "u16")
+    dec = decode_dist_np(codes, "u16", scale)
+    assert np.isinf(dec[0, 0])
+    ok = np.isfinite(d)
+    # quantization error bounded by half a step (+ f32 rounding slack)
+    assert np.abs(dec[ok] - d[ok]).max() <= scale * 0.51
+    assert ulp == max_ulp_error(d, dec) and ulp > 0
+
+
+# ------------------------------------------------------------- deltas
+
+def test_delta_round_trip_unsorted_and_empty_rows():
+    rng = np.random.default_rng(1)
+    n, Ls = 32, 6
+    rank = rng.permutation(n).astype(np.int64)
+    count = rng.integers(0, Ls + 1, n).astype(np.int32)
+    count[0] = 0                                   # an empty row
+    hubs = np.full((n, Ls), -1, np.int32)
+    dist = np.full((n, Ls), np.inf, np.float32)
+    for i in range(n):
+        hs = rng.choice(n, count[i], replace=False)
+        hubs[i, :count[i]] = hs                    # NOT order-sorted
+        dist[i, :count[i]] = rng.integers(1, 50, count[i])
+    order, oi = order_permutation(rank)
+    deltas, dist_s, cnt = delta_encode_rows(hubs, dist, count, oi)
+    assert deltas.dtype == np.uint8                # n=32 fits easily
+    back = delta_decode_rows_np(deltas, cnt, order)
+    for i in range(n):
+        want = {(h, d) for h, d in zip(hubs[i], dist[i]) if h >= 0}
+        got = {(h, d) for h, d in zip(back[i], dist_s[i]) if h >= 0}
+        assert got == want, i
+        # canonical layout: strictly increasing order indices
+        ois = oi[back[i, :cnt[i]]]
+        assert (np.diff(ois) > 0).all()
+    assert (back[0] == -1).all()
+
+
+# ------------------------------------------------------------- parity
+
+def test_compressed_query_bit_identical_in_exact_mode():
+    """Acceptance: qlsn dense vs compressed is bit-identical when the
+    codec proves exactness."""
+    g, rank, dense, comp = build_pair(codec="u16", exact=True)
+    assert isinstance(comp.store, CompressedStore)
+    assert comp.store.exact and comp.store.max_ulp_err == 0
+    assert comp.total_labels == dense.total_labels
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(comp.query(u, v), dense.query(u, v))
+    d, h = comp.query_with_hub(u, v)
+    finite = np.isfinite(d)
+    assert (h[finite] >= 0).all() and (h[~finite] == -1).all()
+
+
+def test_compressed_serve_parity_routed_and_unrouted():
+    g, rank, dense, comp = build_pair(codec="u16", exact=True)
+    u, v = query_batch(g.n)
+    want = dense.query(u, v)
+    for routed in (None, True, False):
+        srv = comp.serve(mode="qlsn", batch_size=len(u), routed=routed)
+        srv.warmup()
+        srv.submit(u, v)
+        np.testing.assert_array_equal(np.asarray(srv.flush()), want,
+                                      err_msg=f"routed={routed}")
+
+
+def test_compressed_distributed_modes_dequantize_once():
+    from repro.core.dgll import make_node_mesh
+    g, rank, dense, comp = build_pair(codec="u16", exact=True)
+    mesh = make_node_mesh(1)
+    u, v = query_batch(g.n, count=64)
+    want = dense.query(u, v)
+    for mode in ("qfdl", "qdol"):
+        srv = comp.serve(mode=mode, mesh=mesh, batch_size=len(u))
+        srv.submit(u, v)
+        np.testing.assert_array_equal(np.asarray(srv.flush()), want,
+                                      err_msg=mode)
+
+
+def test_compressed_lossy_within_documented_ulp_bound():
+    g, rank, dense, comp = build_pair(codec="bf16", exact=False)
+    u, v = query_batch(g.n)
+    want = dense.query(u, v)
+    got = comp.query(u, v)
+    ok = np.isfinite(want)
+    assert (np.isfinite(got) == ok).all()
+    # each stored distance is within max_ulp_err ulps of its original;
+    # a query adds two decoded values — bound the sum by the absolute
+    # error the recorded ulp count implies (bf16: rel err <= 2^-8)
+    rel = np.float32(2.0 ** -8)
+    tol = 2 * rel * np.maximum(want[ok], 1.0)
+    assert (np.abs(got[ok] - want[ok]) <= tol).all()
+
+
+def test_compressed_label_bytes_at_least_2x_smaller():
+    """Acceptance: >= 2x label_bytes reduction vs DenseStore."""
+    g, rank, dense, comp = build_pair(codec="u16", exact=True)
+    assert comp.store.label_bytes() * 2 <= dense.store.label_bytes()
+    # u8 deltas + u16 codes = 3 B/label vs dense 8
+    assert comp.store.label_bytes() == comp.total_labels * 3
+
+
+# ----------------------------------------------------- build plumbing
+
+def test_build_lossy_reports_max_ulp_in_notes():
+    g = scale_free(48, attach=2, seed=3, max_w=1000)
+    rank = degree_ranking(g)
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="compressed", codec="bf16"))
+    assert any("max label ulp error" in s for s in idx.report.notes), \
+        idx.report.notes
+    assert idx.store.max_ulp_err > 0
+
+
+def test_build_exact_overflow_refused_typed():
+    """Satellite: an integer-weight graph whose diameter bound
+    overflows u16 must raise at encode time, never serve clipped
+    distances."""
+    g = scale_free(48, attach=2, seed=3, max_w=60000)
+    rank = degree_ranking(g)
+    with pytest.raises(QuantRangeError, match="u16"):
+        build(g, rank, BuildPlan(algo="plant", batch=8,
+                                 store="compressed", codec="u16",
+                                 quant_exact=True))
+    # same labels encode fine one dtype up, still bit-exact
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="compressed", codec="u32",
+                                   quant_exact=True))
+    dense = build(g, rank, BuildPlan(algo="plant", batch=8))
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(idx.query(u, v), dense.query(u, v))
+
+
+def test_plan_codec_validation():
+    with pytest.raises(ValueError, match="compressed"):
+        BuildPlan(codec="bf16")                     # store is dense
+    with pytest.raises(ValueError, match="compressed"):
+        BuildPlan(quant_exact=True)
+    with pytest.raises(ValueError, match="codec"):
+        BuildPlan(store="compressed", codec="int4")
+    plan = BuildPlan(store="compressed", codec="u16", quant_exact=True)
+    assert BuildPlan.from_dict(plan.to_dict()) == plan
+
+
+def test_directed_build_rejects_compressed_store():
+    from repro.graphs import random_connected
+    g = random_connected(16, extra_edges=12, seed=0, directed=True)
+    with pytest.raises(ValueError, match="dense"):
+        build(g, degree_ranking(g),
+              BuildPlan(algo="directed", store="compressed"))
+
+
+# ------------------------------------------------------------- format
+
+def test_v3_compressed_save_load_round_trip(tmp_path):
+    g, rank, dense, comp = build_pair(codec="u16", exact=True)
+    path = comp.save(str(tmp_path / "idx"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 3
+    info = manifest["store"]
+    assert info["kind"] == "compressed" and info["codec"] == "u16"
+    assert info["exact"] and len(info["scale"]) == 2
+    assert info["dtype"]["dcode"] == "uint16"
+    assert len(info["shard_sha256"]) == 2
+    loaded = CHLIndex.load(path)
+    assert isinstance(loaded.store, CompressedStore)
+    assert loaded.store.codec == "u16" and loaded.store.exact
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(loaded.query(u, v),
+                                  dense.query(u, v))
+
+
+def test_v2_manifest_still_loads(tmp_path):
+    """A pre-codec (version 2) artifact loads unchanged under the v3
+    loader."""
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="sharded", shards=2))
+    path = idx.save(str(tmp_path / "idx"))
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["version"] = 2
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    loaded = CHLIndex.load(path)
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(loaded.query(u, v), idx.query(u, v))
+
+
+def test_load_rehomes_compressed_both_directions(tmp_path):
+    g, rank, dense, comp = build_pair(codec="u16", exact=True)
+    u, v = query_batch(g.n)
+    want = dense.query(u, v)
+    # dense artifact -> compressed residency
+    dpath = dense.save(str(tmp_path / "dense"))
+    as_comp = CHLIndex.load(dpath, store="compressed", codec="u16",
+                            quant_exact=True)
+    assert isinstance(as_comp.store, CompressedStore)
+    np.testing.assert_array_equal(as_comp.query(u, v), want)
+    # compressed artifact -> decoded residencies
+    cpath = comp.save(str(tmp_path / "comp"))
+    for kind, cls in (("dense", DenseStore), ("sharded", ShardedStore)):
+        back = CHLIndex.load(cpath, store=kind)
+        assert isinstance(back.store, cls), kind
+        np.testing.assert_array_equal(back.query(u, v), want)
+    # re-encoding under a different codec decodes then re-encodes
+    re = CHLIndex.load(cpath, store="compressed", codec="bf16")
+    assert re.store.codec == "bf16"
+    # already-matching request adopts the encoded shards as-is
+    same = CHLIndex.load(cpath, store="compressed")
+    assert same.store.codec == "u16"
+    np.testing.assert_array_equal(same.query(u, v), want)
+
+
+def test_spill_from_compressed_refused(tmp_path):
+    g, rank, dense, comp = build_pair()
+    path = comp.save(str(tmp_path / "idx"))
+    with pytest.raises(ValueError, match="memory-mapped"):
+        CHLIndex.load(path, store="spill")
+
+
+# ------------------------------------------- integrity + fault sites
+
+def test_tampered_encoded_shard_raises_corrupt(tmp_path):
+    """Acceptance: a bit flip in an encoded shard is refused, never
+    served."""
+    g, rank, dense, comp = build_pair()
+    path = comp.save(str(tmp_path / "idx"))
+    fpath = os.path.join(path, shard_filename(0))
+    blob = bytearray(open(fpath, "rb").read())
+    blob[len(blob) // 2] ^= 0x10
+    with open(fpath, "wb") as f:
+        f.write(blob)
+    with pytest.raises(CorruptArtifactError, match="sha256"):
+        CHLIndex.load(path)
+
+
+def test_structurally_corrupt_encoded_shard_raises_typed():
+    """Even past the checksums, out-of-range deltas / counts raise
+    CorruptArtifactError, not an index error mid-query."""
+    g, rank = small_graph()
+    idx = build(g, rank, BuildPlan(algo="plant", batch=8,
+                                   store="compressed", codec="u16",
+                                   quant_exact=True))
+    (s,) = [dict(a) for _, a in idx.store.shard_arrays()]
+    info = idx.store.manifest_info()
+    bad = dict(s)
+    bad["dhub"] = s["dhub"].copy()
+    bad["dhub"][0, 0] = np.iinfo(bad["dhub"].dtype).max   # oi >= n
+    with pytest.raises(CorruptArtifactError, match="order index"):
+        CompressedStore.from_encoded_shards([bad], info, rank)
+    bad2 = dict(s)
+    bad2["count"] = s["count"].copy()
+    bad2["count"][0] = s["dhub"].shape[1] + 7
+    with pytest.raises(CorruptArtifactError, match="counts"):
+        CompressedStore.from_encoded_shards([bad2], info, rank)
+
+
+def test_fault_sites_quant_encode_and_decode(tmp_path):
+    from repro.ft import Fault, FaultPlan, InjectedCrash, faults
+    g, rank, dense, comp = build_pair()
+    path = comp.save(str(tmp_path / "idx"))
+    # crash while re-encoding on load: nothing on disk changes
+    with faults(FaultPlan({"quant.encode.shard": [Fault("crash")]})):
+        with pytest.raises(InjectedCrash):
+            CHLIndex.load(path, store="compressed", codec="bf16")
+    # crash while adopting encoded shards at load time
+    with faults(FaultPlan({"quant.decode.shard": [Fault("crash")]})):
+        with pytest.raises(InjectedCrash):
+            CHLIndex.load(path)
+    # the artifact survived both: still loads and answers
+    u, v = query_batch(g.n)
+    np.testing.assert_array_equal(CHLIndex.load(path).query(u, v),
+                                  dense.query(u, v))
+
+
+# ------------------------------------------------------------- report
+
+def test_memory_report_compressed_breakdown():
+    g, rank, dense, comp = build_pair(codec="u16", exact=True)
+    rep = comp.memory_report(q=4)
+    assert rep["store"] == "compressed" and rep["shards"] == 2
+    assert rep["codec"] == "u16" and rep["quant_exact"]
+    assert rep["compression_ratio"] >= 2.0
+    assert rep["bytes_per_label"] == pytest.approx(3.0)
+    assert sum(rep["shard_bytes"]) == rep["label_bytes"]
+    assert rep["dtypes"]["dcode"] == "uint16"
+    drep = dense.memory_report(q=4)
+    assert drep["compression_ratio"] == pytest.approx(1.0)
+    assert drep["label_bytes"] == dense.store.label_bytes()
+
+
+# ------------------------------------------------------------ hygiene
+
+#: storage-dtype tokens banned outside the codec layer
+_BANNED = ("uint8", "uint16", "uint32", "bfloat16", "float16",
+           "bitcast_convert_type")
+
+#: label-touching packages the ban applies to (the LM stack —
+#: models/checkpoint/launch-specs — legitimately uses bf16 activations
+#: and is out of scope; label arrays never flow through it)
+_LABEL_CODE = ("src/repro/core/", "src/repro/engine/",
+               "src/repro/serve/", "src/repro/dynamic/",
+               "src/repro/parallel/", "src/repro/kernels/",
+               "src/repro/sssp/", "src/repro/graphs/",
+               "src/repro/index/", "benchmarks/", "examples/")
+
+#: the codec layer itself — the only place storage dtypes may appear
+_CODEC_LAYER = ("src/repro/index/quant/", "src/repro/index/store/")
+
+
+def test_no_label_dtype_casts_outside_codec_layer():
+    """Satellite: mirrors the no-direct-table-access rule — narrow
+    storage dtypes on label arrays live only in repro/index/quant and
+    repro/index/store, so codec logic cannot leak into serve/engine
+    code."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    offenders = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if not rel.startswith(_LABEL_CODE) \
+                or rel.startswith(_CODEC_LAYER):
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if any(tok in line for tok in _BANNED):
+                offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, (
+        "storage-dtype use on label code outside the codec layer "
+        "(repro/index/quant + repro/index/store):\n  "
+        + "\n  ".join(offenders))

@@ -132,7 +132,8 @@ def test_v1_artifact_loads_dense_bit_identical(tmp_path):
     np.testing.assert_array_equal(loaded.query(u, v), idx.query(u, v))
 
 
-def test_v1_artifact_resaves_as_v2_and_spills(tmp_path):
+def test_v1_artifact_resaves_as_current_and_spills(tmp_path):
+    from repro.index.artifact import VERSION
     g, rank = small_graph()
     idx = build(g, rank, BuildPlan(algo="plant", batch=8))
     d = str(tmp_path / "v1")
@@ -142,11 +143,11 @@ def test_v1_artifact_resaves_as_v2_and_spills(tmp_path):
     spilled = CHLIndex.load(d, store="spill")
     assert spilled.store.is_mapped()
     np.testing.assert_array_equal(spilled.query(u, v), idx.query(u, v))
-    # load → save migrates to v2 per-shard layout
+    # load → save migrates to the current per-shard layout
     p2 = CHLIndex.load(d).save(str(tmp_path / "v2"))
     with open(os.path.join(p2, "manifest.json")) as f:
         manifest = json.load(f)
-    assert manifest["version"] == 2
+    assert manifest["version"] == VERSION
     assert manifest["store"]["shards"] == 1
     assert os.path.exists(os.path.join(p2, shard_filename(0)))
     np.testing.assert_array_equal(CHLIndex.load(p2).query(u, v),
