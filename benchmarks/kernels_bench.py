@@ -99,6 +99,8 @@ def _run_ell_relax(mode: str, note: str, rng):
                  .block_until_ready(), repeat=3)
     out.append(row(f"kernels/ell_relax/pallas_{mode}", t, note))
 
+    out += _run_ell_relax_windowed(mode, note, rng)
+
     # end-to-end: full PLaNT construction (sweep loop + frontier
     # gating + strided fixpoint checks) on a small paper-style graph
     name, g, gr = bench_graphs("small")[1]       # scale-free
@@ -106,6 +108,11 @@ def _run_ell_relax(mode: str, note: str, rng):
     idx, t = timed(lambda: build(g, gr, plan), repeat=1)
     out.append(row("kernels/ell_relax/plant_chl_e2e", t,
                    f"{name} n={g.n} batch=16"))
+
+    # same construction forced past the (shrunk) VMEM budget: every
+    # sweep streams the source-windowed kernel end-to-end — tracks the
+    # windowing tax on a whole build, not just one sweep
+    out.append(_run_plant_e2e_windowed(name, g, gr))
 
     # engine streaming build: same construction, emissions
     # hub-partitioned straight into 2 shard arrays (the dense [n, cap]
@@ -119,6 +126,88 @@ def _run_ell_relax(mode: str, note: str, rng):
     store_rows, label_bytes = _run_label_store(idx, g, rng)
     out += store_rows
     return out, label_bytes
+
+
+def _run_ell_relax_windowed(mode: str, note: str, rng) -> List[Row]:
+    """Source-windowed sweep at n past the old single-window wall.
+
+    This row used to be impossible: the sweep fell back to the jnp
+    reference beyond n = 131072. The default size sits just past that
+    wall (two 81920-wide windows); ``REPRO_BENCH_WINDOWED_N`` shrinks
+    it for CI smoke runs — the layout is forced to two windows either
+    way, so the scalar-prefetch streaming path is what gets timed.
+    """
+    import os
+
+    from repro.kernels.ell_relax import sweep_layout
+
+    out: List[Row] = []
+    n = int(os.environ.get("REPRO_BENCH_WINDOWED_N", "163840"))
+    B, deg = 8, 8
+    n_bn = -(-n // 128) * 128
+    mw = -(-(n_bn // 2) // 128) * 128            # force >= 2 windows
+    dist = jnp.asarray(np.where(rng.random((B, n)) < 0.5,
+                                rng.integers(0, 9, (B, n)), np.inf),
+                       jnp.float32)
+    mrank = jnp.asarray(np.where(np.isfinite(dist),
+                                 rng.integers(0, 99, (B, n)), -1),
+                        jnp.int32)
+    alive = jnp.ones(B, dtype=bool)
+    ell_src = jnp.asarray(rng.integers(0, n, (n, deg)), jnp.int32)
+    ell_w = jnp.asarray(np.where(rng.random((n, deg)) < 0.4,
+                                 rng.integers(1, 9, (n, deg)), np.inf),
+                        jnp.float32)
+    rank = jnp.asarray(rng.permutation(n), jnp.int32)
+    layout = sweep_layout(ell_src, ell_w, max_window=mw)
+    assert layout is not None and layout.num_windows >= 2
+    (dr, mr), t = timed(
+        lambda: [x.block_until_ready() for x in
+                 ell_sweep(dist, mrank, dist, alive, ell_src, ell_w,
+                           rank, use_kernel=False)], repeat=1)
+    out.append(row("kernels/ell_relax/windowed_ref_jnp", t,
+                   f"B={B} n={n} deg={deg}"))
+    (dw, mw_), t = timed(
+        lambda: [x.block_until_ready() for x in
+                 ell_sweep(dist, mrank, dist, alive, ell_src, ell_w,
+                           rank, use_kernel=True, layout=layout)],
+        repeat=1)
+    assert np.array_equal(np.asarray(dw), np.asarray(dr))
+    assert np.array_equal(np.asarray(mw_), np.asarray(mr))
+    out.append(row(f"kernels/ell_relax/windowed_pallas_{mode}", t,
+                   f"{note} windows={layout.num_windows} "
+                   f"window={layout.window} dk={layout.dk}"))
+    return out
+
+
+def _run_plant_e2e_windowed(name: str, g, gr) -> Row:
+    import os
+
+    import jax
+
+    from repro.index import BuildPlan, build
+    from repro.kernels.ell_relax import (ELL_RELAX_ENV_VAR,
+                                         VMEM_BUDGET_ENV_VAR,
+                                         clear_layout_cache)
+
+    forced = {VMEM_BUDGET_ENV_VAR: "16k", ELL_RELAX_ENV_VAR: "kernel"}
+    saved = {k: os.environ.get(k) for k in forced}
+    os.environ.update(forced)
+    clear_layout_cache()
+    jax.clear_caches()                 # env resolved at trace time
+    try:
+        plan = BuildPlan(algo="plant", batch=64)
+        widx, t = timed(lambda: build(g, gr, plan), repeat=1)
+        assert any("source-windowed" in s for s in widx.report.notes)
+        return row("kernels/ell_relax/plant_chl_e2e_windowed", t,
+                   f"{name} n={g.n} batch=64 budget=16k")
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        clear_layout_cache()
+        jax.clear_caches()
 
 
 def _run_label_store(idx, g, rng):

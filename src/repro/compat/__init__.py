@@ -25,6 +25,7 @@ from repro.compat.shardmap import replication_kwarg, resolve_shard_map, shard_ma
 from repro.compat.meshes import (axis_types_supported, make_mesh,
                                  mesh_axis_kwargs)
 from repro.compat.pallas import (compiler_params_cls, pallas_call,
+                                 prefetch_scalar_grid_spec,
                                  resolve_interpret, tpu_compiler_params)
 from repro.compat.xla import (COLLECTIVE_TIMEOUT_FLAGS, apply_xla_flags,
                               host_device_flags, set_host_device_count,
@@ -73,7 +74,7 @@ __all__ = [
     "resolve_shard_map", "replication_kwarg", "shard_map",
     "make_mesh", "mesh_axis_kwargs", "axis_types_supported",
     "pallas_call", "resolve_interpret", "tpu_compiler_params",
-    "compiler_params_cls",
+    "compiler_params_cls", "prefetch_scalar_grid_spec",
     "COLLECTIVE_TIMEOUT_FLAGS", "supported_xla_flags", "xla_flags",
     "apply_xla_flags", "host_device_flags", "set_host_device_count",
     "capabilities",

@@ -91,6 +91,33 @@ def resolve_interpret(interpret: Optional[bool] = None, *,
     return plat != "tpu"
 
 
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch: int, grid,
+                              in_specs, out_specs):
+    """Resolve the Pallas TPU scalar-prefetch grid spec portably.
+
+    ``PrefetchScalarGridSpec`` marks the first ``num_scalar_prefetch``
+    operands as scalar tables available *before* kernel launch: block
+    index maps receive them as trailing ref arguments and may compute
+    data-dependent block indices from them (the mechanism behind the
+    source-windowed ``ell_relax`` gather). Lives under the Pallas TPU
+    namespace but is honored by the interpreter on every backend, so
+    it resolves here rather than being probed at each call site.
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError as e:                         # pragma: no cover
+        raise NotImplementedError(
+            "Pallas TPU module unavailable; scalar-prefetch grid "
+            "specs need jax.experimental.pallas.tpu") from e
+    cls = getattr(pltpu, "PrefetchScalarGridSpec", None)
+    if cls is None:                                  # pragma: no cover
+        raise NotImplementedError(
+            "installed Pallas exposes no PrefetchScalarGridSpec; "
+            "scalar-prefetch driven kernels are unavailable")
+    return cls(num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+               in_specs=in_specs, out_specs=out_specs)
+
+
 def pallas_call(kernel, *, out_shape,
                 grid=None, in_specs=None, out_specs=None,
                 dimension_semantics: Optional[Sequence[str]] = None,

@@ -52,11 +52,17 @@ class BatchLabels(NamedTuple):
 def construct_batch(ell_src: Array, ell_w: Array, rank: Array,
                     roots: Array, valid: Array,
                     glob: LabelTable, loc: LabelTable,
-                    rank_queries: bool = True) -> BatchLabels:
+                    rank_queries: bool = True,
+                    layout=None) -> BatchLabels:
     """One batch of pruned trees (LCC-I / paraPLL inner step).
 
     Blocking = [rank query] ∨ distance query vs (global ∪ local)
     committed tables; emission = reached ∧ unblocked at fixpoint.
+
+    ``layout``: optional precomputed source-bucketed ELL layout
+    (`repro.sssp.relax.ell_layout`, a pytree) — keeps the fused kernel
+    past the single-window VMEM budget; without it the traced
+    adjacency forces the jnp-reference sweep there.
     """
     hmap_g = lbl.hub_distance_map(glob, roots)
     hmap_l = lbl.hub_distance_map(loc, roots)
@@ -72,7 +78,7 @@ def construct_batch(ell_src: Array, ell_w: Array, rank: Array,
     block_fn = relax.combine_blocks(*fns)
 
     st = relax.batched_sssp_maxrank(ell_src, ell_w, rank, roots,
-                                    block_fn=block_fn)
+                                    block_fn=block_fn, layout=layout)
     emit = jnp.isfinite(st.dist) & ~(cover <= st.dist)
     if rank_queries:
         emit &= rank[None, :] <= rank[roots][:, None]

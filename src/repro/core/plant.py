@@ -41,12 +41,19 @@ class TreeBatch(NamedTuple):
 @functools.partial(jax.jit, static_argnames=("use_hc",))
 def plant_batch(ell_src: Array, ell_w: Array, rank: Array, roots: Array,
                 valid: Array, hc: LabelTable | None = None,
-                use_hc: bool = False) -> TreeBatch:
+                use_hc: bool = False, layout=None) -> TreeBatch:
     """PLaNT a batch of trees rooted at ``roots`` (mask via ``valid``).
 
     ``hc``/``use_hc``: the Common Label Table of §5.3 — labels of the
     top-η hubs, used as a distance-query pruning oracle for PLaNTed
     trees.
+
+    ``layout``: optional precomputed source-bucketed ELL layout
+    (`repro.sssp.relax.ell_layout`) — required to keep the fused
+    kernel past the single-window VMEM budget, since the adjacency is
+    a tracer in here and cannot be bucketed on the fly. A
+    `BucketedEll` is a pytree, so it threads through this jit like any
+    other operand.
     """
     if use_hc:
         assert hc is not None
@@ -60,7 +67,7 @@ def plant_batch(ell_src: Array, ell_w: Array, rank: Array, roots: Array,
         block_fn = None
 
     st = relax.batched_sssp_maxrank(ell_src, ell_w, rank, roots,
-                                    block_fn=block_fn)
+                                    block_fn=block_fn, layout=layout)
     root_rank = rank[roots][:, None]
     emit = (st.mrank == root_rank) & jnp.isfinite(st.dist)
     if use_hc:

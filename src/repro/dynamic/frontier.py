@@ -40,7 +40,7 @@ import jax
 import numpy as np
 
 from repro.graphs.graph import Graph
-from repro.sssp.relax import batched_sssp
+from repro.sssp.relax import batched_sssp, ell_layout
 
 from .mutations import DELETE, INSERT, REWEIGHT, ResolvedBatch
 
@@ -54,9 +54,11 @@ BUCKET_MIN = 4
 
 # jit at this boundary: batched_sssp's lax.while_loop is built for
 # the jitted callers (plant_batch et al.); calling it eagerly would
-# re-trace the sweep loop on every mutation batch
-_planes = jax.jit(lambda ell_src, ell_w, roots:
-                  batched_sssp(ell_src, ell_w, roots))
+# re-trace the sweep loop on every mutation batch. The bucketed
+# layout is built (and cached) eagerly per graph — inside the jit the
+# adjacency is a tracer — so oversized graphs keep the windowed kernel
+_planes = jax.jit(lambda ell_src, ell_w, roots, layout:
+                  batched_sssp(ell_src, ell_w, roots, layout=layout))
 
 
 def _bucket(k: int, cap: int) -> int:
@@ -72,12 +74,13 @@ def endpoint_planes(g: Graph, roots: Iterable[int], *,
     chunked batched ``ell_relax`` sweeps."""
     roots = np.unique(np.asarray(list(roots), dtype=np.int64))
     planes: Dict[int, np.ndarray] = {}
+    layout = ell_layout(g.ell_src, g.ell_w)
     for lo in range(0, len(roots), chunk):
         part = roots[lo:lo + chunk]
         width = _bucket(len(part), chunk)
         pad = np.pad(part, (0, width - len(part)), mode="edge")
         dist = np.asarray(_planes(g.ell_src, g.ell_w,
-                                  pad.astype(np.int32)))
+                                  pad.astype(np.int32), layout))
         for r, row in zip(part, dist):
             planes[int(r)] = row
     return planes

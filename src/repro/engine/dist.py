@@ -57,13 +57,16 @@ def build_common_table(g, rank: np.ndarray, eta_roots: np.ndarray,
     communication (η extra tree constructions amortized over the run).
     """
     from repro.core.plant import plant_batch
+    from repro.sssp.relax import ell_layout
     n = g.n
     hc = lbl.empty(n, hc_cap)
     roots = jnp.asarray(np.asarray(eta_roots).astype(np.int32))
     valid = jnp.ones(len(eta_roots), dtype=bool)
-    tb = plant_batch(jnp.asarray(g.ell_src), jnp.asarray(g.ell_w),
+    es = jnp.asarray(g.ell_src)
+    ew = jnp.asarray(g.ell_w)
+    tb = plant_batch(es, ew,
                      jnp.asarray(np.asarray(rank).astype(np.int32)),
-                     roots, valid)
+                     roots, valid, layout=ell_layout(es, ew))
     hc, ovf = lbl.insert_batch(hc, roots, tb.emit, tb.dist)
     if bool(ovf):
         raise lbl.LabelOverflowError(hc_cap, "common label table")
@@ -118,6 +121,12 @@ class DistributedPolicy(Policy):
         self.rank = np.asarray(rank)
         self.queues = dist.assign_roots(self.rank, self.q)
         self.rank_d = jnp.asarray(self.rank.astype(np.int32))
+        # NOTE: the adjacency enters the shard_map supersteps as traced
+        # operands, so past the single-window VMEM budget those sweeps
+        # fall back to the jnp reference (one-time warning). Threading
+        # a BucketedEll through dgll_superstep_fn's collectives is the
+        # documented follow-on; single-host policies already stream
+        # the source-windowed kernel.
         self.ell_src = jnp.asarray(g.ell_src)
         self.ell_w = jnp.asarray(g.ell_w)
         self._rep = NamedSharding(mesh, P())

@@ -25,6 +25,7 @@ from repro.core.labels import LabelTable
 from repro.engine.records import (SuperstepRecord, make_record,
                                   pack_stats)
 from repro.engine.scheduler import BatchSchedule, Step, rank_order
+from repro.sssp.relax import ell_layout
 
 Array = jax.Array
 
@@ -139,6 +140,10 @@ class PlantPolicy(Policy):
                       else rank_order(rank))
         self.ell_src = jnp.asarray(g.ell_src)
         self.ell_w = jnp.asarray(g.ell_w)
+        # bucketed layout (None when one VMEM window covers the graph):
+        # built eagerly here because inside the jitted plant_batch the
+        # adjacency is a tracer and cannot be bucketed
+        self.layout = ell_layout(self.ell_src, self.ell_w)
         self.rank_d = jnp.asarray(np.asarray(rank).astype(np.int32))
         self.hc = hc
         self.fingerprint = build_fingerprint(g, rank)
@@ -169,7 +174,8 @@ class PlantPolicy(Policy):
         roots_d = jnp.asarray(st.roots)
         valid_d = jnp.asarray(st.valid)
         tb = plant_batch(self.ell_src, self.ell_w, self.rank_d, roots_d,
-                         valid_d, hc=self.hc, use_hc=self.hc is not None)
+                         valid_d, hc=self.hc, use_hc=self.hc is not None,
+                         layout=self.layout)
         sink.insert(roots_d, tb.emit, tb.dist)
         stats = pack_stats(jnp.sum(tb.emit, dtype=jnp.int32),
                            jnp.sum(tb.explored * valid_d,
@@ -194,6 +200,8 @@ class DirectedPlantPolicy(Policy):
         self.order = rank_order(rank)
         self.fwd = (jnp.asarray(g.ell_src), jnp.asarray(g.ell_w))
         self.bwd = (jnp.asarray(gr.ell_src), jnp.asarray(gr.ell_w))
+        self.fwd_layout = ell_layout(*self.fwd)
+        self.bwd_layout = ell_layout(*self.bwd)
         self.rank_d = jnp.asarray(np.asarray(rank).astype(np.int32))
         self.fingerprint = build_fingerprint(g, rank)
 
@@ -207,9 +215,11 @@ class DirectedPlantPolicy(Policy):
         from repro.core.plant import plant_batch
         r = jnp.asarray(st.roots)
         v = jnp.asarray(st.valid)
-        tb_f = plant_batch(self.fwd[0], self.fwd[1], self.rank_d, r, v)
+        tb_f = plant_batch(self.fwd[0], self.fwd[1], self.rank_d, r, v,
+                           layout=self.fwd_layout)
         sink.insert(r, tb_f.emit, tb_f.dist, channel="in")
-        tb_b = plant_batch(self.bwd[0], self.bwd[1], self.rank_d, r, v)
+        tb_b = plant_batch(self.bwd[0], self.bwd[1], self.rank_d, r, v,
+                           layout=self.bwd_layout)
         sink.insert(r, tb_b.emit, tb_b.dist, channel="out")
         stats = pack_stats(
             jnp.sum(tb_f.emit, dtype=jnp.int32)
@@ -246,6 +256,7 @@ class GLLPolicy(Policy):
         self.order = rank_order(rank)
         self.ell_src = jnp.asarray(g.ell_src)
         self.ell_w = jnp.asarray(g.ell_w)
+        self.layout = ell_layout(self.ell_src, self.ell_w)
         self.rank_d = jnp.asarray(np.asarray(rank).astype(np.int32))
         self.alpha = alpha
         self.rank_queries = rank_queries
@@ -284,13 +295,14 @@ class GLLPolicy(Policy):
         valid_d = jnp.asarray(st.valid)
         if self._first and self.plant_first:
             tb = plant_batch(self.ell_src, self.ell_w, self.rank_d,
-                             roots_d, valid_d)
+                             roots_d, valid_d, layout=self.layout)
             bl = BatchLabels(roots=roots_d, emit=tb.emit, dist=tb.dist)
         else:
             bl = construct_batch(self.ell_src, self.ell_w, self.rank_d,
                                  roots_d, valid_d, sink.table(),
                                  self.loc,
-                                 rank_queries=self.rank_queries)
+                                 rank_queries=self.rank_queries,
+                                 layout=self.layout)
         self._first = False
         self.loc, ovf = lbl.insert_batch(self.loc, roots_d, bl.emit,
                                          bl.dist)

@@ -96,11 +96,17 @@ def build(g, rank: np.ndarray, plan: Optional[BuildPlan] = None, *,
     if plan.algo != "pll-ref":           # the host oracle runs no sweeps
         from repro.kernels.ell_relax import (kernel_fits,
                                              resolve_use_kernel,
-                                             vmem_fallback_note)
+                                             vmem_fallback_note,
+                                             windowed_note)
         if resolve_use_kernel(None) and not kernel_fits(n):
-            # surface the documented VMEM limit in the report, not just
-            # a one-time runtime warning from the sweep itself
-            notes.append(vmem_fallback_note(n))
+            # surface the windowing decision in the report: single-host
+            # builds stream the source-windowed kernel; the distributed
+            # policies pass traced adjacency into shard_map supersteps
+            # and still fall back to the jnp reference there
+            if plan.algo in ("dgll", "hybrid", "plant-dist"):
+                notes.append(vmem_fallback_note(n))
+            else:
+                notes.append(windowed_note(n))
     overflow_events = []
     t0 = time.perf_counter()
     attempt = 0

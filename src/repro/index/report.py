@@ -50,8 +50,10 @@ class BuildReport:
     cleaned: int = 0                 # DQ_Clean removals (GLL/LCC)
     constructed: int = 0             # optimistic emissions (GLL/LCC)
     notes: List[str] = dataclasses.field(default_factory=list)
-    #   ^ build-time advisories (e.g. the ell_relax VMEM fallback) —
-    #   absent in v1 manifests, defaulting to [] on load
+    #   ^ build-time advisories (e.g. the ell_relax source-windowing
+    #   decision past the single-window VMEM budget, or the jnp
+    #   fallback on distributed traced sweeps) — absent in v1
+    #   manifests, defaulting to [] on load
 
     @property
     def cap_retries(self) -> int:

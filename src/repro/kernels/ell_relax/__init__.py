@@ -1,10 +1,25 @@
-from repro.kernels.ell_relax.ell_relax import ell_relax
+from repro.kernels.ell_relax.ell_relax import ell_relax, ell_relax_windowed
+from repro.kernels.ell_relax.layout import (DEFAULT_VMEM_BUDGET,
+                                            VMEM_BUDGET_ENV_VAR, BucketedEll,
+                                            WindowPlan, build_bucketed_ell,
+                                            clear_layout_cache, kernel_fits,
+                                            max_window, sweep_layout,
+                                            vmem_budget, window_plan)
 from repro.kernels.ell_relax.ops import (ELL_RELAX_ENV_VAR, ell_sweep,
-                                         kernel_fits, resolve_use_kernel,
+                                         reset_warnings, resolve_sweep_backend,
+                                         resolve_use_kernel,
                                          vmem_fallback_note,
-                                         warn_vmem_fallback)
-from repro.kernels.ell_relax.ref import ell_sweep_ref
+                                         warn_vmem_fallback, windowed_note)
+from repro.kernels.ell_relax.ref import ell_sweep_bucketed_ref, ell_sweep_ref
 
-__all__ = ["ell_relax", "ell_sweep", "ell_sweep_ref",
-           "resolve_use_kernel", "kernel_fits", "ELL_RELAX_ENV_VAR",
-           "vmem_fallback_note", "warn_vmem_fallback"]
+__all__ = [
+    "ell_relax", "ell_relax_windowed",
+    "ell_sweep", "ell_sweep_ref", "ell_sweep_bucketed_ref",
+    "resolve_use_kernel", "resolve_sweep_backend",
+    "kernel_fits", "max_window", "vmem_budget", "window_plan",
+    "sweep_layout", "build_bucketed_ell", "clear_layout_cache",
+    "BucketedEll", "WindowPlan",
+    "ELL_RELAX_ENV_VAR", "VMEM_BUDGET_ENV_VAR", "DEFAULT_VMEM_BUDGET",
+    "windowed_note", "vmem_fallback_note", "warn_vmem_fallback",
+    "reset_warnings",
+]

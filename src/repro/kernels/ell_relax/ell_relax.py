@@ -12,11 +12,14 @@ candidate cube never leaves on-chip memory.
 Layout (one grid cell = one ``[BB, BN]`` output tile, folded over DK
 in-edge chunks, reusing the `repro.kernels.minplus` fold idiom):
 
-- the gather *sources* (``prop``/``mrank`` planes) are staged as full
-  ``[BB, n]`` rows — an ELL row may pull from any vertex, so the
-  source plane must be VMEM-resident in its entirety. VMEM bound:
-  ``2 · BB · n · 4 B`` (≈ 6.4 MB at BB=8, n=100k) — `ops.py` documents
-  the fallback for larger n;
+- the gather *sources* (``prop``/``mrank`` planes) are staged as
+  ``[BB, W]`` rows. The dense kernel (`ell_relax`) uses one window
+  covering the whole plane (``W = n``, VMEM bound ``2 · BB · n · 4 B``
+  — ≈ 6.4 MB at BB=8, n=100k); past the VMEM budget the
+  source-windowed kernel (`ell_relax_windowed`) streams ``[BB, W]``
+  windows selected per chunk by a scalar-prefetched ``chunk_win``
+  table over a source-bucketed layout (`layout.BucketedEll`), making
+  the VMEM cost O(W) independent of n;
 - the gather *targets* (``ell_src``/``ell_w`` tiles, the dist/mrank
   tiles being relaxed, the rank row) are ``[BN, DK]`` / ``[BB, BN]``
   blocks;
@@ -45,16 +48,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.compat import pallas_call, resolve_interpret
+from repro.compat import (pallas_call, prefetch_scalar_grid_spec,
+                          resolve_interpret)
 
 NEG = -1  # mrank payload for "unreached"
 
 
-def _ell_relax_kernel(dist_ref, mrank_ref, prop_ref, psrc_ref, alive_ref,
-                      src_ref, w_ref, rank_ref, out_d_ref, out_m_ref):
-    """One (b, v, k) grid step: fold in-edge chunk k into tile (b, v)."""
-    k = pl.program_id(2)
-    nk = pl.num_programs(2)
+def _relax_step(k, nk, dist_ref, mrank_ref, prop_ref, psrc_ref,
+                alive_ref, src_ref, w_ref, rank_ref,
+                out_d_ref, out_m_ref):
+    """Fold one in-edge chunk into the output tile — the shared body of
+    the dense and source-windowed kernels. The dense kernel's chunk is
+    a DK slice of the whole-plane gather; the windowed kernel's chunk
+    additionally selects which plane window it gathers from (its
+    ``src_ref`` holds window-*local* indices), but the fold itself is
+    identical: the lexicographic (min, max-at-min) accumulation is
+    insensitive to how edges are partitioned into chunks."""
     live = jnp.any(alive_ref[...] > 0)
 
     @pl.when(jnp.logical_not(live))
@@ -68,8 +77,8 @@ def _ell_relax_kernel(dist_ref, mrank_ref, prop_ref, psrc_ref, alive_ref,
 
     @pl.when(live)
     def _relax():
-        prop = prop_ref[...]             # [BB, n] f32, inf at ~frontier
-        psrc = psrc_ref[...]             # [BB, n] i32 source mranks
+        prop = prop_ref[...]             # [BB, W] f32, inf at ~frontier
+        psrc = psrc_ref[...]             # [BB, W] i32 source mranks
         src = src_ref[...]               # [BN, DK] i32 in-edge sources
         w = w_ref[...]                   # [BN, DK] f32, inf padding
 
@@ -109,6 +118,29 @@ def _ell_relax_kernel(dist_ref, mrank_ref, prop_ref, psrc_ref, alive_ref,
             keep = jnp.where(dist_t <= new_dist, mrank_t, NEG)
             out_d_ref[...] = new_dist
             out_m_ref[...] = jnp.maximum(keep, through)
+
+
+def _ell_relax_kernel(dist_ref, mrank_ref, prop_ref, psrc_ref, alive_ref,
+                      src_ref, w_ref, rank_ref, out_d_ref, out_m_ref):
+    """One (b, v, k) grid step: fold in-edge chunk k into tile (b, v)."""
+    _relax_step(pl.program_id(2), pl.num_programs(2), dist_ref,
+                mrank_ref, prop_ref, psrc_ref, alive_ref, src_ref,
+                w_ref, rank_ref, out_d_ref, out_m_ref)
+
+
+def _ell_relax_windowed_kernel(cw_ref, dist_ref, mrank_ref, prop_ref,
+                               psrc_ref, alive_ref, src_ref, w_ref,
+                               rank_ref, out_d_ref, out_m_ref):
+    """One (b, v, c) grid step of the source-windowed kernel.
+
+    ``cw_ref`` is the scalar-prefetched ``chunk_win`` table; the block
+    index maps already consumed it to stream the right ``[BB, W]``
+    plane window and ``[BN, DK]`` edge chunk in, so the body is the
+    plain chunk fold (``src_ref`` holds window-local indices)."""
+    del cw_ref                     # consumed by the block index maps
+    _relax_step(pl.program_id(2), pl.num_programs(2), dist_ref,
+                mrank_ref, prop_ref, psrc_ref, alive_ref, src_ref,
+                w_ref, rank_ref, out_d_ref, out_m_ref)
 
 
 def ell_relax(dist: jax.Array, mrank: jax.Array, prop: jax.Array,
@@ -178,3 +210,85 @@ def _ell_relax_jit(dist, mrank, prop, prop_mrank, alive,
         dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(dist, mrank, prop, prop_mrank, alive, ell_src, ell_w, rank)
+
+
+def ell_relax_windowed(dist: jax.Array, mrank: jax.Array,
+                       prop: jax.Array, prop_mrank: jax.Array,
+                       alive: jax.Array, src_b: jax.Array,
+                       w_b: jax.Array, rank: jax.Array,
+                       chunk_win: jax.Array, *, window: int,
+                       bb: int = 8, bn: int = 128, dk: int = 128,
+                       interpret: bool | None = None):
+    """Source-windowed fused relaxation sweep (tile-aligned shapes;
+    `ops.py` pads and `layout.build_bucketed_ell` buckets).
+
+    Args:
+      dist/mrank/prop/prop_mrank: as `ell_relax`, width ``n_pad``
+        (= ``window · num_windows``).
+      alive: i32 [B, 1] — 0 retires the tree.
+      src_b: i32 [n_pad, C·dk] — *window-local* in-edge sources.
+      w_b:   f32 [n_pad, C·dk] — weights, ``+inf`` padding.
+      rank:  i32 [1, n_pad].
+      chunk_win: i32 [n_pad // bn, C] — source window per (vertex
+        tile, chunk); scalar-prefetched so the grid's block index
+        maps stream the right ``[bb, window]`` plane slice per cell.
+    Returns:
+      (new_dist f32 [B, n_pad], new_mrank i32 [B, n_pad]).
+    """
+    return _ell_relax_windowed_jit(
+        dist, mrank, prop, prop_mrank, alive, src_b, w_b, rank,
+        chunk_win, window=window, bb=bb, bn=bn, dk=dk,
+        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bb", "bn",
+                                             "dk", "interpret"))
+def _ell_relax_windowed_jit(dist, mrank, prop, prop_mrank, alive,
+                            src_b, w_b, rank, chunk_win, *,
+                            window: int, bb: int, bn: int, dk: int,
+                            interpret: bool):
+    B, n_pad = dist.shape
+    ntiles = n_pad // bn
+    nchunks = src_b.shape[1] // dk
+    assert mrank.shape == (B, n_pad) and prop.shape == (B, n_pad)
+    assert prop_mrank.shape == (B, n_pad) and alive.shape == (B, 1)
+    assert src_b.shape == w_b.shape == (n_pad, nchunks * dk)
+    assert rank.shape == (1, n_pad)
+    assert chunk_win.shape == (ntiles, nchunks)
+    assert B % bb == 0 and n_pad % bn == 0 and window % bn == 0
+    assert n_pad % window == 0, (n_pad, window)
+
+    grid = (B // bb, ntiles, nchunks)
+    # index maps receive the grid indices plus the prefetched scalar
+    # ref: chunk c of vertex tile v gathers from plane window
+    # chunk_win[v, c] — the whole point of the scalar prefetch
+    grid_spec = prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda b, v, c, cw: (b, v)),
+            pl.BlockSpec((bb, bn), lambda b, v, c, cw: (b, v)),
+            pl.BlockSpec((bb, window),
+                         lambda b, v, c, cw: (b, cw[v, c])),  # prop win
+            pl.BlockSpec((bb, window),
+                         lambda b, v, c, cw: (b, cw[v, c])),  # mrank win
+            pl.BlockSpec((bb, 1), lambda b, v, c, cw: (b, 0)),
+            pl.BlockSpec((bn, dk), lambda b, v, c, cw: (v, c)),
+            pl.BlockSpec((bn, dk), lambda b, v, c, cw: (v, c)),
+            pl.BlockSpec((1, bn), lambda b, v, c, cw: (0, v)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bn), lambda b, v, c, cw: (b, v)),
+            pl.BlockSpec((bb, bn), lambda b, v, c, cw: (b, v)),
+        ])
+    return pallas_call(
+        _ell_relax_windowed_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_pad), jnp.int32),
+        ],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+    )(chunk_win, dist, mrank, prop, prop_mrank, alive, src_b, w_b,
+      rank)

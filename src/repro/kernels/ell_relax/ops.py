@@ -19,13 +19,19 @@ Backend selection (``use_kernel``):
   (e.g. ``kernel`` + ``REPRO_PALLAS_BACKEND=interpret`` exercises the
   emulated kernel path end-to-end, as CI's bench smoke does).
 
-VMEM note: the kernel stages the two [BB, n] gather-source planes in
-VMEM (an ELL row may pull from anywhere), ≈ ``8·BB·n`` bytes — 6.4 MB
-at BB=8, n=100k. Past `_KERNEL_MAX_N` the padded wrapper falls back
-to the reference rather than risk a VMEM OOM — announced by a
-one-time ``UserWarning`` (and a ``BuildReport.notes`` entry when the
-build goes through ``repro.index``); sharding the source plane needs
-scalar-prefetch DMA and is future work (ROADMAP).
+VMEM windowing: the kernel gathers from ``[BB, W]`` source-plane
+slices. When the whole plane fits the budget
+(``REPRO_ELL_VMEM_BUDGET``, default 8 MiB → W ≤ 131072 at BB=8) a
+single window covers it and the dense kernel runs unchanged — the
+small-n fast path. Past that, the sweep runs the source-windowed
+kernel over a bucketed layout (`layout.BucketedEll`): pass one via
+``layout=`` (the sweep driver and engine policies build it once per
+graph via `sweep_layout`), or let `ell_sweep` build and cache it when
+the adjacency is concrete. Only when the adjacency is *traced* (an
+outer jit with no threaded layout — e.g. the distributed shard_map
+supersteps) does the sweep still fall back to the jnp reference,
+announced by a one-time-per-(n, reason) ``UserWarning``
+(`reset_warnings` is the test hook).
 """
 
 from __future__ import annotations
@@ -33,48 +39,67 @@ from __future__ import annotations
 import functools
 import os
 import warnings
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.compat import resolve_interpret
-from repro.kernels.ell_relax.ell_relax import ell_relax
+from repro.kernels.ell_relax.ell_relax import ell_relax, ell_relax_windowed
+from repro.kernels.ell_relax.layout import (  # noqa: F401 — re-exported
+    DEFAULT_VMEM_BUDGET, VMEM_BUDGET_ENV_VAR, BucketedEll, WindowPlan,
+    build_bucketed_ell, clear_layout_cache, kernel_fits, max_window,
+    sweep_layout, vmem_budget, window_plan)
 from repro.kernels.ell_relax.ref import ell_sweep_ref
 
 ELL_RELAX_ENV_VAR = "REPRO_ELL_RELAX"
 
-# The two [BB, n] source planes (f32 + i32) at BB=8 cost 2·8·4 = 64n
-# bytes of VMEM → ~8.4 MB at this cap, leaving headroom in 16 MB.
-_KERNEL_MAX_N = 131072
+
+#: (n, reason) pairs already warned about — one warning per distinct
+#: situation instead of a process-global latch, so a second build at a
+#: different size (or after `reset_warnings`) still announces itself
+_warned: set = set()
 
 
-def kernel_fits(n: int) -> bool:
-    """Whether the fused kernel's VMEM-resident source planes fit for
-    an n-vertex graph (past this, `ell_sweep` runs the reference)."""
-    return n <= _KERNEL_MAX_N
+def reset_warnings() -> None:
+    """Test hook: clear the one-per-(n, reason) warning registry."""
+    _warned.clear()
 
 
-_vmem_fallback_warned = False
+def _warn_once(n: int, reason: str, message: str) -> None:
+    if (int(n), reason) in _warned:
+        return
+    _warned.add((int(n), reason))
+    warnings.warn(message, stacklevel=4)
+
+
+def windowed_note(n: int) -> str:
+    """Advisory for `BuildReport.notes`: this build's sweeps run the
+    source-windowed kernel — records the chosen window geometry."""
+    plan = window_plan(n)
+    return (f"ell_relax: n={n} exceeds the single-window VMEM budget "
+            f"({vmem_budget()} B); sweeps run the source-windowed "
+            f"kernel (window={plan.window}, "
+            f"num_windows={plan.num_windows}).")
 
 
 def vmem_fallback_note(n: int) -> str:
-    return (f"ell_relax: n={n} exceeds the fused kernel's VMEM budget "
-            f"(n <= {_KERNEL_MAX_N}); relaxation sweeps run the jnp "
-            "reference. Sharding the gather-source plane via "
-            "scalar-prefetch DMA is an open ROADMAP item.")
+    return (f"ell_relax: n={n} exceeds the single-window VMEM budget "
+            f"({vmem_budget()} B) and the adjacency is traced (no "
+            "precomputed bucketed layout reaches this sweep); "
+            "relaxation runs the jnp reference. Thread a "
+            "`sweep_layout(...)` result through ``layout=`` to run "
+            "the windowed kernel.")
 
 
-def warn_vmem_fallback(n: int) -> bool:
-    """If the fused kernel was *wanted* but ``n`` exceeds the VMEM cap,
-    emit a one-time ``UserWarning`` (the documented limit, visible at
-    runtime instead of only in ROADMAP.md). Returns True when the
+def warn_vmem_fallback(n: int, reason: str = "traced") -> bool:
+    """If the fused kernel was *wanted* but the sweep must fall back to
+    the reference (oversized n with only traced adjacency in reach),
+    emit a ``UserWarning`` once per (n, reason). Returns True when the
     fallback engaged."""
-    global _vmem_fallback_warned
     if kernel_fits(n):
         return False
-    if not _vmem_fallback_warned:
-        _vmem_fallback_warned = True
-        warnings.warn(vmem_fallback_note(n), stacklevel=3)
+    _warn_once(n, reason, vmem_fallback_note(n))
     return True
 
 
@@ -96,6 +121,37 @@ def resolve_use_kernel(use_kernel: bool | None = None, *,
     return not resolve_interpret(interpret)
 
 
+def resolve_sweep_backend(ell_src, ell_w, *,
+                          use_kernel: bool | None = None,
+                          layout: Optional[BucketedEll] = None,
+                          interpret: bool | None = None
+                          ) -> Tuple[bool, Optional[BucketedEll]]:
+    """One place that decides how a sweep over this adjacency runs.
+
+    Returns ``(use_kernel, layout)``: ``(False, None)`` → jnp
+    reference; ``(True, None)`` → dense single-window kernel;
+    ``(True, layout)`` → source-windowed kernel. A caller-provided
+    multi-window ``layout`` always wins (that is how tests and
+    benchmarks force windowed execution at small n); otherwise the
+    VMEM budget decides, building (and caching) the layout on demand
+    when the adjacency is concrete, warning + falling back to the
+    reference when it is traced.
+    """
+    kern = resolve_use_kernel(use_kernel, interpret=interpret)
+    if not kern:
+        return False, None
+    if layout is not None and layout.num_windows > 1:
+        return True, layout
+    n = ell_src.shape[0]
+    if kernel_fits(n):
+        return True, None
+    layout = sweep_layout(ell_src, ell_w)
+    if layout is None:
+        warn_vmem_fallback(n)
+        return False, None
+    return True, layout
+
+
 def _pad_to(x: jax.Array, mult: int, axis: int, fill) -> jax.Array:
     size = x.shape[axis]
     pad = (-size) % mult
@@ -106,9 +162,19 @@ def _pad_to(x: jax.Array, mult: int, axis: int, fill) -> jax.Array:
     return jnp.pad(x, widths, constant_values=fill)
 
 
+def _pad_axis(x: jax.Array, axis: int, size: int, fill) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
 def ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank, *,
               use_kernel: bool | None = None,
-              interpret: bool | None = None):
+              interpret: bool | None = None,
+              layout: Optional[BucketedEll] = None):
     """One frontier-gated relaxation sweep; shape-safe.
 
     Args:
@@ -116,13 +182,20 @@ def ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank, *,
       prop:  f32 [B, n] — dist masked to +inf at blocked/inactive
         sources (frontier gating);
       alive: bool/i32 [B] — False retires the whole tree;
-      ell_src/ell_w: [n, deg] pull ELL; rank: i32 [n].
+      ell_src/ell_w: [n, deg] pull ELL; rank: i32 [n];
+      layout: optional precomputed `BucketedEll` (see `sweep_layout`)
+        selecting the source-windowed kernel — required past the VMEM
+        budget when the adjacency is traced, optional (auto-built and
+        cached) when it is concrete.
     Returns (new_dist f32 [B, n], new_mrank i32 [B, n]).
     """
     interp = resolve_interpret(interpret)
-    kern = resolve_use_kernel(use_kernel, interpret=interp)
-    if kern and warn_vmem_fallback(dist.shape[1]):
-        kern = False
+    kern, layout = resolve_sweep_backend(
+        ell_src, ell_w, use_kernel=use_kernel, layout=layout,
+        interpret=interp)
+    if kern and layout is not None:
+        return _ell_sweep_windowed_jit(dist, mrank, prop, alive,
+                                       layout, rank, interpret=interp)
     return _ell_sweep_jit(dist, mrank, prop, alive, ell_src, ell_w,
                           rank, use_kernel=kern, interpret=interp)
 
@@ -146,4 +219,23 @@ def _ell_sweep_jit(dist, mrank, prop, alive, ell_src, ell_w, rank, *,
     r = _pad_to(rank.astype(jnp.int32)[None, :], bn, 1, 0)
     nd, nm = ell_relax(d, m, p, m, a, es, ew, r,
                        bb=bb, bn=bn, dk=dk, interpret=interpret)
+    return nd[:B, :n], nm[:B, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _ell_sweep_windowed_jit(dist, mrank, prop, alive, layout, rank, *,
+                            interpret: bool):
+    B, n = dist.shape
+    assert n == layout.n, (n, layout.n)
+    bb, bn = 8, layout.bn
+    n_pad = layout.n_pad
+    d = _pad_axis(_pad_to(dist, bb, 0, jnp.inf), 1, n_pad, jnp.inf)
+    m = _pad_axis(_pad_to(mrank, bb, 0, -1), 1, n_pad, -1)
+    p = _pad_axis(_pad_to(prop, bb, 0, jnp.inf), 1, n_pad, jnp.inf)
+    a = _pad_to(alive.astype(jnp.int32)[:, None], bb, 0, 0)
+    r = _pad_axis(rank.astype(jnp.int32)[None, :], 1, n_pad, 0)
+    nd, nm = ell_relax_windowed(d, m, p, m, a, layout.src, layout.w,
+                                r, layout.chunk_win,
+                                window=layout.window, bb=bb, bn=bn,
+                                dk=layout.dk, interpret=interpret)
     return nd[:B, :n], nm[:B, :n]

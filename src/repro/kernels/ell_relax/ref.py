@@ -30,3 +30,35 @@ def ell_sweep_ref(dist: jax.Array, mrank: jax.Array, prop: jax.Array,
     keep = jnp.where(dist <= new_dist, mrank, -1)
     new_mrank = jnp.maximum(keep, through)
     return new_dist, new_mrank
+
+
+def _pad_plane(x: jax.Array, n_pad: int, fill) -> jax.Array:
+    pad = n_pad - x.shape[-1]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def ell_sweep_bucketed_ref(dist: jax.Array, mrank: jax.Array,
+                           prop: jax.Array, prop_mrank: jax.Array,
+                           layout, rank: jax.Array):
+    """`ell_sweep_ref` over a source-bucketed layout (duck-typed
+    `layout.BucketedEll`): reconstruct global source indices from the
+    window-local ``layout.src`` plus each chunk's window id, then run
+    the dense oracle over the padded planes. Bit-identical to both the
+    dense sweep (bucketing only reorders/partitions an exact fold) and
+    the windowed Pallas kernel."""
+    n = dist.shape[-1]
+    n_pad = layout.n_pad
+    wincol = jnp.repeat(jnp.repeat(layout.chunk_win, layout.bn, axis=0),
+                        layout.dk, axis=1)          # [n_pad, C*dk]
+    gsrc = layout.src + wincol * layout.window
+    nd, nm = ell_sweep_ref(
+        _pad_plane(dist, n_pad, jnp.inf),
+        _pad_plane(mrank, n_pad, -1),
+        _pad_plane(prop, n_pad, jnp.inf),
+        _pad_plane(prop_mrank, n_pad, -1),
+        gsrc, layout.w,
+        _pad_plane(rank.astype(jnp.int32), n_pad, 0))
+    return nd[:, :n], nm[:, :n]

@@ -64,14 +64,28 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ell_relax import (ell_sweep, kernel_fits,
-                                     resolve_use_kernel,
-                                     warn_vmem_fallback)
+from repro.kernels.ell_relax import (BucketedEll, ell_sweep,
+                                     resolve_sweep_backend, sweep_layout)
 
 Array = jax.Array
 BlockFn = Callable[[Array, Array], Array]   # (dist [B,n], roots [B]) -> blocked [B,n]
 
 DEFAULT_CHECK_EVERY = 4
+
+
+def ell_layout(ell_src: Array, ell_w: Array, *,
+               max_window: Optional[int] = None) -> Optional[BucketedEll]:
+    """Build (and cache) the source-bucketed ELL layout for this
+    adjacency, or None when one window covers it — the driver-facing
+    alias of `repro.kernels.ell_relax.sweep_layout`.
+
+    Callers that relax the same graph repeatedly under jit (engine
+    policies, `plant_batch`) build this once *eagerly* — the adjacency
+    is a tracer inside their jitted step functions, where bucketing is
+    impossible — and thread it through ``layout=``. Returns None as
+    well when the adjacency is itself traced.
+    """
+    return sweep_layout(ell_src, ell_w, max_window=max_window)
 
 
 class RelaxState(NamedTuple):
@@ -126,6 +140,7 @@ def batched_sssp_maxrank(
     check_every: Optional[int] = None,
     use_kernel: Optional[bool] = None,
     frontier_gating: Optional[bool] = None,
+    layout: Optional[BucketedEll] = None,
 ) -> RelaxState:
     """Relax a batch of trees to fixpoint.
 
@@ -151,6 +166,13 @@ def batched_sssp_maxrank(
         on the dense-XLA path masking cannot reduce the gather cost
         and would only add per-sweep mask work. Either setting
         reaches the identical fixpoint (monotone lattice).
+      layout: optional precomputed `BucketedEll` (see `ell_layout`)
+        selecting the source-windowed kernel for adjacencies past the
+        single-window VMEM budget. When omitted and the adjacency is
+        concrete, the backend resolver builds + caches one on demand;
+        when the adjacency is traced (this function called under an
+        outer jit) the sweep falls back to the jnp reference with a
+        one-time warning — thread a layout in to keep the kernel.
 
     Returns:
       RelaxState with fixpoint ``dist``/``mrank``.
@@ -160,11 +182,13 @@ def batched_sssp_maxrank(
     rank = rank.astype(jnp.int32)
     cap = n if max_sweeps is None else max_sweeps
     # gating/stride defaults must track the path that actually runs:
-    # past the kernel's VMEM cap ell_sweep falls back to the reference,
-    # where gating + striding would only add work
-    kern = resolve_use_kernel(use_kernel)
-    if kern and warn_vmem_fallback(n):
-        kern = False
+    # oversized adjacencies get the source-windowed kernel when a
+    # bucketed layout is available (given or buildable), and only fall
+    # back to the reference — where gating + striding would only add
+    # work — when the adjacency is traced with no layout threaded in
+    kern, layout = resolve_sweep_backend(ell_src, ell_w,
+                                         use_kernel=use_kernel,
+                                         layout=layout)
     gated = kern if frontier_gating is None else bool(frontier_gating)
     stride = ((DEFAULT_CHECK_EVERY if kern else 1)
               if check_every is None else check_every)
@@ -203,7 +227,7 @@ def batched_sssp_maxrank(
                     if has_block else dist)
             alive = jnp.ones((B,), dtype=bool)
         nd, nm = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w,
-                           rank, use_kernel=kern)
+                           rank, use_kernel=kern, layout=layout)
         new_frontier = (nd < dist) | (nm != mrank)
         if carry_blocked:
             return (nd, nm, blocked, new_frontier), None
@@ -235,7 +259,8 @@ def batched_sssp(ell_src: Array, ell_w: Array, roots: Array,
                  *, max_sweeps: Optional[int] = None,
                  check_every: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
-                 frontier_gating: Optional[bool] = None) -> Array:
+                 frontier_gating: Optional[bool] = None,
+                 layout: Optional[BucketedEll] = None) -> Array:
     """Plain batched SSSP distances (no rank tracking): f32 [B, n].
 
     Runs through the same fused/gated engine with a constant-zero rank
@@ -246,7 +271,8 @@ def batched_sssp(ell_src: Array, ell_w: Array, roots: Array,
     st = batched_sssp_maxrank(
         ell_src, ell_w, jnp.zeros((n,), dtype=jnp.int32), roots,
         max_sweeps=max_sweeps, check_every=check_every,
-        use_kernel=use_kernel, frontier_gating=frontier_gating)
+        use_kernel=use_kernel, frontier_gating=frontier_gating,
+        layout=layout)
     return st.dist
 
 

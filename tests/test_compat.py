@@ -274,6 +274,31 @@ def test_pallas_call_dispatches_without_per_site_interpret():
     np.testing.assert_array_equal(np.asarray(out), 2.0)
 
 
+def test_prefetch_scalar_grid_spec_drives_index_maps():
+    """The compat scalar-prefetch resolver: a prefetched index table
+    picks which input block each grid step reads (the mechanism behind
+    the source-windowed ell_relax gather), honored by the interpreter
+    on every backend."""
+    from jax.experimental import pallas as pl
+
+    def pick(tbl_ref, x_ref, o_ref):
+        del tbl_ref                    # consumed by the index maps
+        o_ref[...] = x_ref[...]
+
+    spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1, grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i, tbl: (tbl[i], 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, tbl: (i, 0)))
+    fn = compat.pallas_call(
+        pick, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32))
+    x = jnp.concatenate([jnp.zeros((8, 128), jnp.float32),
+                         jnp.ones((8, 128), jnp.float32)])
+    out = fn(jnp.asarray([1, 0], jnp.int32), x)   # swap the two blocks
+    np.testing.assert_array_equal(np.asarray(out[:8]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out[8:]), 0.0)
+
+
 def test_kernel_wrappers_resolve_backend_per_call(monkeypatch):
     """The backend decision must be consulted on every call (outside
     jit), not baked into a stale trace keyed on interpret=None."""
@@ -421,6 +446,7 @@ FORBIDDEN = (
     "check_" + "rep=",
     "pltpu." + NEW_CP_NAME,
     "pltpu." + OLD_CP_NAME,
+    "pltpu." + "PrefetchScalarGridSpec",
     "jax.sharding." + "AxisType",
     "--xla_cpu_" + "collective_call",  # raw watchdog flags: probe only
 )

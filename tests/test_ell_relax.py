@@ -12,10 +12,14 @@ Three layers of parity, all bit-exact (integral float weights make
 3. driver level — frontier gating + strided convergence checks
    (``check_every > 1``) against per-sweep checking and against a
    dense ungated loop built from the retained `relax._sweep`
-   reference.
+   reference;
+4. window level — the source-windowed kernel (bucketed layout +
+   scalar-prefetched window table) against the dense kernel and both
+   references, at boundary sizes, under forced VMEM budgets, through
+   the gated fixpoint driver, and up into `build()`'s report notes.
 """
 
-import os
+import warnings
 
 import numpy as np
 import pytest
@@ -24,10 +28,16 @@ import jax.numpy as jnp
 
 from repro.graphs import grid_road, random_connected, scale_free
 from repro.graphs.ranking import degree_ranking, random_ranking
-from repro.kernels.ell_relax import (ELL_RELAX_ENV_VAR, ell_sweep,
-                                     ell_sweep_ref, resolve_use_kernel)
+from repro.kernels.ell_relax import (ELL_RELAX_ENV_VAR,
+                                     VMEM_BUDGET_ENV_VAR, ell_sweep,
+                                     ell_sweep_bucketed_ref,
+                                     ell_sweep_ref, kernel_fits,
+                                     clear_layout_cache, reset_warnings,
+                                     resolve_sweep_backend,
+                                     resolve_use_kernel, sweep_layout,
+                                     vmem_budget, window_plan)
 from repro.sssp import relax
-from repro.sssp.relax import batched_sssp_maxrank
+from repro.sssp.relax import batched_sssp_maxrank, ell_layout
 
 
 def _rand_sweep_state(rng, B, n, deg, reach=0.5, density=0.3):
@@ -261,42 +271,246 @@ def test_explicit_env_kernel_end_to_end(monkeypatch):
     assert lbl.to_numpy_sets(t_k) == lbl.to_numpy_sets(t_ref)
 
 
-def test_vmem_fallback_warns_once_and_lands_in_report(monkeypatch):
-    """Past the kernel's VMEM cap the sweep silently ran the jnp
-    reference; now the first fallback warns (once) and `build` records
-    the limit in BuildReport.notes."""
-    import warnings
+# ------------------------------------------------- source windowing
 
-    from repro.kernels.ell_relax import ops
 
-    rng = np.random.default_rng(0)
-    B, n, deg = 4, 32, 4
-    dist, mrank, prop, alive, ell_src, ell_w, rank = _rand_sweep_state(
+def test_vmem_budget_env_parsing(monkeypatch):
+    monkeypatch.delenv(VMEM_BUDGET_ENV_VAR, raising=False)
+    assert vmem_budget() == 8 * 1024 * 1024
+    for raw, want in [("4096", 4096), ("16k", 16 * 1024),
+                      ("2m", 2 * 1024 ** 2), ("1g", 1024 ** 3),
+                      ("8M", 8 * 1024 ** 2)]:
+        monkeypatch.setenv(VMEM_BUDGET_ENV_VAR, raw)
+        assert vmem_budget() == want, raw
+    for raw in ("bogus", "12q", "", "0", "-8k"):
+        monkeypatch.setenv(VMEM_BUDGET_ENV_VAR, raw)
+        if raw == "":
+            assert vmem_budget() == 8 * 1024 * 1024
+        else:
+            with pytest.raises(ValueError):
+                vmem_budget()
+
+
+def test_window_plan_geometry_and_kernel_fits(monkeypatch):
+    monkeypatch.delenv(VMEM_BUDGET_ENV_VAR, raising=False)
+    # the default budget reproduces the historical n = 131072 wall as
+    # the single-window boundary
+    assert kernel_fits(131072)
+    assert not kernel_fits(131073)
+    p = window_plan(131072)
+    assert p == (131072, 1, 131072)
+    p = window_plan(131073)
+    assert p.num_windows == 2 and p.window * 2 == p.n_pad
+    assert p.n_pad >= 131073 and p.window % 128 == 0
+    # balanced non-divisible split under a forced cap
+    p = window_plan(1000, max_window=384)
+    assert p == (384, 3, 1152)
+    # forced cap rounds down to the vertex tile
+    assert window_plan(1000, max_window=300).window <= 256
+    # small n: one tile-rounded window
+    assert window_plan(100) == (128, 1, 128)
+
+
+def test_bucketed_layout_conserves_edges():
+    rng = np.random.default_rng(7)
+    n, deg = 700, 9
+    _, _, _, _, es, ew, _ = _rand_sweep_state(rng, 1, n, deg)
+    layout = sweep_layout(es, ew, max_window=256)
+    assert layout is not None and layout.num_windows == 3
+    src_b = np.asarray(layout.src)
+    w_b = np.asarray(layout.w)
+    cw = np.asarray(layout.chunk_win)
+    assert cw.shape == (layout.n_pad // layout.bn, layout.num_chunks)
+    assert ((cw >= 0) & (cw < layout.num_windows)).all()
+    # window-local sources stay inside their window
+    fin = np.isfinite(w_b)
+    assert ((src_b >= 0) & (src_b < layout.window))[fin].all()
+    # per-row multiset of finite (global source, weight) edges survives
+    wincol = np.repeat(np.repeat(cw, layout.bn, 0), layout.dk, 1)
+    gsrc = src_b + wincol * layout.window
+    for v in range(0, n, 97):
+        orig = sorted((int(s), float(x)) for s, x in
+                      zip(es[v], ew[v]) if np.isfinite(x))
+        got = sorted((int(s), float(x)) for s, x in
+                     zip(gsrc[v][fin[v]], w_b[v][fin[v]]))
+        assert got == orig, v
+    # padding rows carry no edges
+    assert not fin[n:].any()
+
+
+@pytest.mark.parametrize("n", [255, 256, 257, 300, 513])
+def test_windowed_sweep_matches_dense_and_ref(n):
+    rng = np.random.default_rng(n)
+    B, deg = 8, 7
+    dist, mrank, prop, alive, es, ew, rank = _rand_sweep_state(
         rng, B, n, deg)
+    layout = sweep_layout(es, ew, max_window=128)
+    assert layout is not None and layout.num_windows > 1
+    args = [jnp.asarray(x) for x in
+            (dist, mrank, prop, alive, es, ew, rank)]
+    dw, mw = ell_sweep(*args, use_kernel=True, layout=layout)
+    dd, md = ell_sweep(*args, use_kernel=True)
+    dr, mr = ell_sweep(*args, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dd))
+    np.testing.assert_array_equal(np.asarray(mw), np.asarray(md))
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(mw), np.asarray(mr))
 
-    monkeypatch.setattr(ops, "_KERNEL_MAX_N", 16)   # n=32 exceeds it
-    monkeypatch.setattr(ops, "_vmem_fallback_warned", False)
-    with pytest.warns(UserWarning, match="VMEM"):
-        got = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank,
-                        use_kernel=True)
-    # one-time: a second oversized sweep stays quiet
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        again = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w,
-                          rank, use_kernel=True)
-    # and the fallback really ran the reference
-    want = ell_sweep(dist, mrank, prop, alive, ell_src, ell_w, rank,
-                     use_kernel=False)
-    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
-    np.testing.assert_array_equal(np.asarray(again[1]),
+
+def test_bucketed_ref_matches_dense_ref():
+    rng = np.random.default_rng(12)
+    B, n, deg = 5, 413, 11
+    dist, mrank, prop, _, es, ew, rank = _rand_sweep_state(
+        rng, B, n, deg)
+    layout = sweep_layout(es, ew, max_window=256)
+    assert layout is not None
+    j = jnp.asarray
+    want = ell_sweep_ref(j(dist), j(mrank), j(prop), j(mrank),
+                         j(es), j(ew), j(rank))
+    got = ell_sweep_bucketed_ref(j(dist), j(mrank), j(prop), j(mrank),
+                                 layout, j(rank))
+    np.testing.assert_array_equal(np.asarray(got[0]),
+                                  np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]),
                                   np.asarray(want[1]))
 
-    # build(): the limit is visible in the report, not only at runtime
+
+def test_env_budget_forces_windowed_auto_layout(monkeypatch):
+    """REPRO_ELL_VMEM_BUDGET shrinks the window cap so small graphs
+    exercise multi-window streaming — the CI smoke knob."""
+    monkeypatch.setenv(VMEM_BUDGET_ENV_VAR, "16k")   # window cap = 256
+    clear_layout_cache()
+    assert not kernel_fits(600)
+    rng = np.random.default_rng(2)
+    B, n, deg = 8, 600, 6
+    dist, mrank, prop, alive, es, ew, rank = _rand_sweep_state(
+        rng, B, n, deg)
+    kern, layout = resolve_sweep_backend(es, ew, use_kernel=True)
+    assert kern and layout is not None and layout.num_windows > 1
+    args = [jnp.asarray(x) for x in
+            (dist, mrank, prop, alive, es, ew, rank)]
+    dw, mw = ell_sweep(*args, use_kernel=True)       # auto-built layout
+    dr, mr = ell_sweep(*args, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(mw), np.asarray(mr))
+    clear_layout_cache()
+
+
+def test_fixpoint_with_windowed_layout_and_gating():
+    """The gated driver (frontier masks, retirement, strided checks)
+    reaches the identical fixpoint on the windowed kernel path."""
+    g = scale_free(300, attach=2, seed=4)
+    rank = degree_ranking(g)
+    roots = np.arange(0, g.n, 23, dtype=np.int32)
+    j = jnp.asarray
+    es, ew = j(g.ell_src), j(g.ell_w)
+    layout = sweep_layout(es, ew, max_window=128)
+    assert layout is not None and layout.num_windows > 1
+    ref = batched_sssp_maxrank(es, ew, j(rank), j(roots),
+                               use_kernel=False)
+    for gated in (False, True):
+        st = batched_sssp_maxrank(es, ew, j(rank), j(roots),
+                                  use_kernel=True, layout=layout,
+                                  frontier_gating=gated)
+        np.testing.assert_array_equal(np.asarray(st.dist),
+                                      np.asarray(ref.dist))
+        np.testing.assert_array_equal(np.asarray(st.mrank),
+                                      np.asarray(ref.mrank))
+
+
+def test_traced_fallback_warns_per_size_with_reset(monkeypatch):
+    from repro.kernels.ell_relax import ops
+    monkeypatch.setenv(VMEM_BUDGET_ENV_VAR, "16k")
+    reset_warnings()
+    assert not ops.warn_vmem_fallback(100)           # fits: no warning
+    with pytest.warns(UserWarning, match="VMEM"):
+        assert ops.warn_vmem_fallback(600)
+    with warnings.catch_warnings():                  # same n: quiet
+        warnings.simplefilter("error")
+        assert ops.warn_vmem_fallback(600)
+    with pytest.warns(UserWarning, match="VMEM"):    # new n: warns
+        assert ops.warn_vmem_fallback(601)
+    reset_warnings()
+    with pytest.warns(UserWarning, match="VMEM"):    # reset re-arms
+        assert ops.warn_vmem_fallback(600)
+    reset_warnings()
+
+
+def test_traced_adjacency_falls_back_to_ref(monkeypatch):
+    """Inside an outer jit with no threaded layout the adjacency is a
+    tracer — the sweep must fall back to the reference (not crash) and
+    still produce the reference fixpoint."""
+    import jax
+    monkeypatch.setenv(VMEM_BUDGET_ENV_VAR, "16k")
+    clear_layout_cache()
+    reset_warnings()
+    g = scale_free(300, attach=2, seed=9)
+    rank = degree_ranking(g).astype(np.int32)
+    roots = np.arange(6, dtype=np.int32)
+    j = jnp.asarray
+
+    @jax.jit
+    def traced(es, ew, rk, rt):
+        st = batched_sssp_maxrank(es, ew, rk, rt, use_kernel=True)
+        return st.dist, st.mrank
+
+    with pytest.warns(UserWarning, match="traced"):
+        dist, mrank = traced(j(g.ell_src), j(g.ell_w), j(rank),
+                             j(roots))
+    ref = batched_sssp_maxrank(j(g.ell_src), j(g.ell_w), j(rank),
+                               j(roots), use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(dist), np.asarray(ref.dist))
+    np.testing.assert_array_equal(np.asarray(mrank),
+                                  np.asarray(ref.mrank))
+    reset_warnings()
+    clear_layout_cache()
+
+
+def test_engine_layout_threading_survives_jit(monkeypatch):
+    """The engine policies build the layout eagerly and thread it as a
+    pytree through the jitted batch kernels — the windowed kernel runs
+    *inside* plant_batch's jit with identical labels."""
+    import jax
+
+    from repro.core import labels as lbl
+    from repro.core.plant import plant_chl
+    g = scale_free(300, attach=2, seed=2)
+    rank = degree_ranking(g)
+    order = np.argsort(-rank.astype(np.int64))[:32].astype(np.int64)
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "ref")
+    jax.clear_caches()
+    t_ref, _ = plant_chl(g, rank, batch=32, roots_order=order)
+    monkeypatch.setenv(ELL_RELAX_ENV_VAR, "kernel")
+    monkeypatch.setenv(VMEM_BUDGET_ENV_VAR, "16k")
+    clear_layout_cache()
+    assert ell_layout(g.ell_src, g.ell_w) is not None
+    jax.clear_caches()
+    t_win, _ = plant_chl(g, rank, batch=32, roots_order=order)
+    jax.clear_caches()
+    clear_layout_cache()
+    assert lbl.to_numpy_sets(t_win) == lbl.to_numpy_sets(t_ref)
+
+
+def test_build_report_records_windowed_note(monkeypatch):
+    """`build()` past the (forced) VMEM budget records the windowing
+    advisory — window geometry included — and it survives the manifest
+    roundtrip."""
+    import jax
+
     from repro.index import BuildPlan, build
     monkeypatch.setenv(ELL_RELAX_ENV_VAR, "kernel")
-    monkeypatch.setattr(ops, "_vmem_fallback_warned", True)  # quiet
-    g = grid_road(5, 5, seed=1)
-    idx = build(g, degree_ranking(g), BuildPlan(algo="plant", batch=8))
-    assert any("VMEM" in note for note in idx.report.notes)
-    assert any("VMEM" in n2 for n2 in
+    monkeypatch.setenv(VMEM_BUDGET_ENV_VAR, "16k")
+    clear_layout_cache()
+    jax.clear_caches()
+    g = scale_free(300, attach=2, seed=0)
+    assert not kernel_fits(g.n)
+    idx = build(g, degree_ranking(g), BuildPlan(algo="plant", batch=64))
+    assert any("source-windowed" in note for note in idx.report.notes)
+    plan = window_plan(g.n)
+    assert any(f"window={plan.window}" in note
+               for note in idx.report.notes)
+    assert any("source-windowed" in n2 for n2 in
                type(idx.report).from_dict(idx.report.to_dict()).notes)
+    assert idx.report.total_labels > 0
+    jax.clear_caches()
+    clear_layout_cache()
